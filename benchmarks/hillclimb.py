@@ -1,0 +1,113 @@
+"""§Perf hillclimb driver: the three chosen cells, candidate sets per the
+hypothesis -> change -> measure -> validate loop (EXPERIMENTS.md §Perf).
+
+Cells (selection rationale recorded in EXPERIMENTS.md):
+  1. qwen1.5-110b x decode_32k  — worst roofline fraction (serving, memory-bound)
+  2. deepseek-v2-236b x train_4k — most collective-bound
+  3. gemma2-2b x train_4k        — most representative of the paper's
+     technique: the blueprint planner's *suggested configuration* is the
+     baseline; the candidates are the planner's configuration-optimization
+     search (paper §2.2 advanced CPS requirement).
+
+Run:  PYTHONPATH=src python -m benchmarks.hillclimb [cell ...]
+Writes benchmarks/results/perf/<cell>__<candidate>.json via dryrun.autotune.
+"""
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import sys
+
+from repro.models.schema import DEFAULT_RULES
+from repro.parallel.context import ACT_RULES
+
+
+def _serve_tp_both_rules():
+    """decode candidate: no FSDP at serve time — params sharded over BOTH
+    mesh axes (256-way TP, bf16), so no per-step param all-gather and the
+    per-chip footprint stays ~1 GB. Hypothesis: the decode memory term is
+    dominated by the FSDP gather's output traffic, not by the cache."""
+    param_rules = {**DEFAULT_RULES,
+                   "embed": (),                       # FSDP off
+                   "ff": ("model", "data"),
+                   "heads": ("model", "data"),
+                   "kv_heads": ("model", "data"),
+                   "lora": ("model", "data"),
+                   "experts": ("model",),
+                   "expert_ff": ("model", "data")}
+    return {"param_rules": param_rules,
+            "serve_param_dtype": "bfloat16"}
+
+
+def _dp_heavy_rules():
+    """gemma2 candidate: tensor-parallelism off everywhere except the
+    (giant) embedding; model axis left to vocab sharding only."""
+    param_rules = {**DEFAULT_RULES,
+                   "ff": (), "heads": (), "kv_heads": (), "lora": (),
+                   "ssm_inner": (), "ssm_heads": (),
+                   "experts": (), "expert_ff": ()}
+    # the freed "model" axis joins the batch: 256-way DP on a single pod
+    act_rules = {**ACT_RULES, "batch": ("pod", "data", "model"),
+                 "heads_act": (), "ff_act": (), "experts_act": ()}
+    return {"param_rules": param_rules, "act_rules": act_rules}
+
+
+CELLS = {
+    # 1 — worst roofline fraction (large-model decode)
+    "qwen1.5-110b__decode_32k": dict(
+        arch="qwen1.5-110b", shape="decode_32k", multi_pod=False,
+        candidates={
+            "baseline": {},
+            "bf16_params": {"plan": {"serve_param_dtype": "bfloat16"}},
+            "int8_cache": {"cfg": {"cache_quant": True}},
+            "bf16_params+int8_cache": {
+                "plan": {"serve_param_dtype": "bfloat16"},
+                "cfg": {"cache_quant": True}},
+            "serve_tp_both": {"plan": _serve_tp_both_rules()},
+            "serve_tp_both+int8_cache": {
+                "plan": _serve_tp_both_rules(),
+                "cfg": {"cache_quant": True}},
+        }),
+    # 2 — most collective-bound (MoE train)
+    "deepseek-v2-236b__train_4k": dict(
+        arch="deepseek-v2-236b", shape="train_4k", multi_pod=False,
+        candidates={
+            "baseline": {},
+            "moe_scatter": {"cfg": {"moe_combine": "scatter"}},
+            "moe_scatter+mask_opt": {
+                "cfg": {"moe_combine": "scatter", "attn_mask_opt": True}},
+            "moe_scatter+dots_remat": {
+                "cfg": {"moe_combine": "scatter"},
+                "plan": {"remat": "dots"}},
+            "moe_scatter+dots_remat+mla_heads": {
+                "cfg": {"moe_combine": "scatter", "mla_shard": "heads"},
+                "plan": {"remat": "dots"}},
+        }),
+    # 3 — the paper's technique: blueprint suggested-config vs planner search
+    "gemma2-2b__train_4k": dict(
+        arch="gemma2-2b", shape="train_4k", multi_pod=False,
+        candidates={
+            "baseline_suggested": {},
+            "mask_opt": {"cfg": {"attn_mask_opt": True}},
+            "dp_heavy": {"plan": _dp_heavy_rules()},
+            "dp_heavy+mask_opt": {
+                "plan": _dp_heavy_rules(),
+                "cfg": {"attn_mask_opt": True}},
+        }),
+}
+
+
+def main() -> None:
+    from repro.launch.dryrun import autotune
+    wanted = sys.argv[1:] or list(CELLS)
+    for cell in wanted:
+        spec = CELLS[cell]
+        autotune(spec["arch"], spec["shape"], spec["multi_pod"],
+                 spec["candidates"],
+                 out_path=f"benchmarks/results/perf/{cell}.json")
+
+
+if __name__ == "__main__":
+    main()

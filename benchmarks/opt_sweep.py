@@ -1,0 +1,72 @@
+"""Optimized-planner sweep: re-run dry-run cells with the blueprint's
+``optimize=True`` configuration (the §Perf hillclimb winners generalized)
+and record them next to the paper-faithful baselines.
+
+Run:  PYTHONPATH=src python -m benchmarks.opt_sweep [shape ...]
+Writes benchmarks/results/dryrun_opt/<arch>__<shape>__<mesh>.json.
+"""
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import dataclasses
+import json
+import pathlib
+import sys
+
+from repro.configs.base import SHAPES, cell_is_runnable
+from repro.configs.registry import ARCHS, get_arch, get_shape
+from repro.core.blueprint import optimized_cfg_overrides, suggest_plan
+from repro.launch.mesh import make_production_mesh
+
+OUT = pathlib.Path("benchmarks/results/dryrun_opt")
+
+
+def main() -> None:
+    from repro.launch import dryrun
+    shapes = sys.argv[1:] or ["train_4k", "decode_32k"]
+    OUT.mkdir(parents=True, exist_ok=True)
+    for shape_name in shapes:
+        for arch in ARCHS:
+            if not cell_is_runnable(arch, shape_name):
+                continue
+            path = OUT / f"{arch}__{shape_name}__pod16x16.json"
+            if path.exists():
+                print(f"[skip-cached] {path.name}")
+                continue
+            cfg = get_arch(arch)
+            shape = get_shape(shape_name)
+            mesh = make_production_mesh(multi_pod=False)
+            plan = suggest_plan(cfg, shape, mesh, optimize=True)
+            plan_over = {"param_rules": plan.param_rules,
+                         "act_rules": plan.act_rules,
+                         "remat": plan.remat,
+                         "serve_param_dtype": plan.serve_param_dtype}
+            cfg_over = optimized_cfg_overrides(cfg, shape)
+            print(f"[opt] {arch} x {shape_name} cfg={cfg_over} "
+                  f"notes={list(plan.notes)}", flush=True)
+            try:
+                rec = dryrun.run_cell(arch, shape_name, False,
+                                      overrides=plan_over,
+                                      cfg_overrides=cfg_over)
+                rec["optimized"] = True
+                rec["cfg_overrides"] = cfg_over
+            except Exception as e:  # noqa: BLE001
+                rec = {"arch": arch, "shape": shape_name,
+                       "mesh": "pod16x16", "status": "error",
+                       "error": f"{type(e).__name__}: {e}"}
+            path.write_text(json.dumps(rec, indent=1))
+            if rec.get("status") == "ok":
+                r = rec["roofline"]
+                print(f"  -> bound={rec['bound_s']:.3f}s "
+                      f"(comp={r['compute_s']:.3f} mem={r['memory_s']:.3f} "
+                      f"coll={r['collective_s']:.3f})", flush=True)
+            else:
+                print(f"  -> {rec['status']}: {rec.get('error','')[:120]}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Roofline report: aggregates the dry-run JSONs into the §Roofline table.
+
+Reads benchmarks/results/dryrun/*.json (written by repro.launch.dryrun) and
+emits a markdown table + CSV rows. No jax import — safe to run anywhere.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+DEFAULT_DIR = pathlib.Path(__file__).parent / "results" / "dryrun"
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(directory=DEFAULT_DIR) -> List[Dict]:
+    recs = []
+    for p in sorted(pathlib.Path(directory).glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def _key(r):
+    return (r["arch"], SHAPE_ORDER.index(r["shape"])
+            if r["shape"] in SHAPE_ORDER else 9, r["mesh"])
+
+
+def markdown_table(recs: List[Dict], mesh: str = "pod16x16") -> str:
+    rows = ["| arch | shape | comp s | mem s | coll s | dominant | "
+            "useful FLOP ratio | roofline frac | peak GiB | lever |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=_key):
+        if r["mesh"] != mesh:
+            continue
+        if r.get("status") == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"skipped | — | — | — | {r['reason'][:40]}… |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | ERROR "
+                        f"| — | — | — | {r.get('error','')[:40]} |")
+            continue
+        t = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3f} | "
+            f"{t['memory_s']:.3f} | {t['collective_s']:.3f} | "
+            f"{r['dominant'][:-2]} | {r['useful_flop_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.3f} | "
+            f"{r['memory']['peak_bytes']/2**30:.2f} | {lever(r)} |")
+    return "\n".join(rows)
+
+
+def lever(r: Dict) -> str:
+    """One-sentence 'what would move the dominant term down'."""
+    dom = r["dominant"]
+    per_op = r["collectives"]["per_op"]
+    biggest_coll = max(per_op, key=lambda k: per_op[k]["operand_bytes"]) \
+        if per_op else "none"
+    if dom == "collective_s":
+        return (f"cut {biggest_coll} bytes (SP-shard residuals / "
+                f"reduce-scatter instead of all-reduce)")
+    if dom == "memory_s":
+        return ("reduce materialised intermediates (fuse masks/softmax, "
+                "fewer fp32 upcasts, larger fusion regions)")
+    return "increase arithmetic intensity (bigger blocks, fewer recomputes)"
+
+
+def csv_rows(recs: List[Dict]) -> List[str]:
+    out = []
+    for r in sorted(recs, key=_key):
+        tag = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        if r.get("status") != "ok":
+            out.append(f"{tag},,{r.get('status')}")
+            continue
+        t = r["roofline"]
+        bound = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        out.append(f"{tag},{bound*1e6:.0f},"
+                   f"dom={r['dominant'][:-2]};frac={r['roofline_fraction']:.3f};"
+                   f"useful={r['useful_flop_ratio']:.3f}")
+    return out
+
+
+def summary(recs: List[Dict]) -> Dict[str, float]:
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    err = [r for r in recs if r.get("status") not in ("ok", "skipped")]
+    return {"ok": len(ok), "skipped": len(skipped), "error": len(err)}

@@ -1,0 +1,90 @@
+"""Benchmark harness — one section per paper table/claim.
+
+Prints ``name,us_per_call,derived`` CSV:
+  * Table "25 minutes vs hours": bring-up time, InstaCluster vs manual,
+    plus real control-plane wall-clock at fleet sizes (benchmarks/bringup).
+  * Table 1: service-matrix coverage counts.
+  * Table 2: port registry check.
+  * Use cases 1-8: end-to-end wall-clock of each demo operation.
+  * Roofline: per (arch x shape x mesh) dry-run terms (benchmarks/roofline;
+    requires the dry-run sweep to have populated results/dryrun).
+"""
+from __future__ import annotations
+
+import time
+
+
+def _use_case_rows():
+    from repro.core.cluster import ClusterManager
+    rows = []
+    mgr = ClusterManager()
+    t0 = time.perf_counter()
+    ic = mgr.build_cluster(n_slaves=6)
+    rows.append(f"uc1_provision_6node,{(time.perf_counter()-t0)*1e6:.0f},"
+                f"sim_min={ic.bringup_seconds/60:.1f}")
+    t0 = time.perf_counter()
+    ic.lifecycle.stop(ic.cluster)
+    rows.append(f"uc2_stop,{(time.perf_counter()-t0)*1e6:.0f},")
+    t0 = time.perf_counter()
+    ic.lifecycle.start(ic.cluster)
+    rows.append(f"uc3_start_slaves_first,{(time.perf_counter()-t0)*1e6:.0f},")
+    t0 = time.perf_counter()
+    ic.lifecycle.extend(ic.cluster, 3)
+    rows.append(f"uc4_extend_plus3,{(time.perf_counter()-t0)*1e6:.0f},"
+                f"slaves={len(ic.cluster.directory.slaves())}")
+    data = b"the quick brown fox jumps over the lazy dog " * 200
+    t0 = time.perf_counter()
+    ic.hue.upload_file("/bench/corpus.txt", data)
+    rows.append(f"uc7_upload,{(time.perf_counter()-t0)*1e6:.0f},"
+                f"bytes={len(data)}")
+    t0 = time.perf_counter()
+    ic.hue.browse_storage("/bench")
+    rows.append(f"uc5_browse,{(time.perf_counter()-t0)*1e6:.0f},")
+    t0 = time.perf_counter()
+    job = ic.hue.submit_job("spark", lambda: 42)
+    rows.append(f"uc6_submit_job,{(time.perf_counter()-t0)*1e6:.0f},"
+                f"status={job.status}")
+    t0 = time.perf_counter()
+    counts = ic.hue.run_wordcount("/bench/corpus.txt")
+    rows.append(f"uc8_wordcount,{(time.perf_counter()-t0)*1e6:.0f},"
+                f"distinct={len(counts)}")
+    return rows
+
+
+def _table_rows():
+    from repro.core.services import PORTS, SERVICE_MATRIX
+    rows = []
+    provisionable = sum(1 for p, _, _ in SERVICE_MATRIX.values()
+                        if p is not None)
+    interactable = sum(1 for _, i, _ in SERVICE_MATRIX.values()
+                       if i is not None)
+    rows.append(f"table1_services_provisionable,,{provisionable}/"
+                f"{len(SERVICE_MATRIX)}")
+    rows.append(f"table1_services_interactable,,{interactable}/"
+                f"{len(SERVICE_MATRIX)}")
+    ok = (PORTS['spark-driver'] == 7077 and PORTS['spark-webui'] == 8888
+          and PORTS['spark-jobserver'] == 8090 and PORTS['hue'] == 8808)
+    rows.append(f"table2_ports_match_paper,,{'yes' if ok else 'NO'}")
+    return rows
+
+
+def main() -> None:
+    rows = ["name,us_per_call,derived"]
+    from benchmarks import bringup
+    rows += bringup.rows()
+    rows += _table_rows()
+    rows += _use_case_rows()
+    try:
+        from benchmarks import roofline
+        recs = roofline.load()
+        s = roofline.summary(recs)
+        rows.append(f"dryrun_cells,,ok={s['ok']};skipped={s['skipped']};"
+                    f"error={s['error']}")
+        rows += roofline.csv_rows(recs)
+    except Exception as e:  # noqa: BLE001
+        rows.append(f"roofline,,unavailable({type(e).__name__})")
+    print("\n".join(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,206 @@
+"""Config dataclasses shared by every architecture.
+
+A single ``ModelConfig`` covers all 10 assigned families (dense / moe / ssm /
+hybrid / encdec / vlm); per-arch files in ``repro/configs/`` fill it in with
+the exact published hyper-parameters. ``ShapeConfig`` describes the assigned
+input-shape grid.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+
+    # --- norms / embeddings ------------------------------------------------
+    rms_eps: float = 1e-6
+    use_post_norm: bool = False      # gemma2: extra norm after attn/mlp
+    tie_embeddings: bool = True
+    scale_embed: bool = False        # gemma2: embed * sqrt(d_model)
+    mlp_act: str = "silu"            # silu | gelu
+    mlp_gated: bool = True           # whisper: plain 2-matrix MLP
+
+    # --- attention ----------------------------------------------------------
+    attn_impl: str = "gqa"           # gqa | mla | none
+    rope_variant: str = "full"       # full | half2d | mrope | none | abs
+    rope_theta: float = 10000.0
+    qk_norm: bool = False            # qwen3: per-head RMS on q and k
+    qkv_bias: bool = False           # qwen1.5 / chatglm3
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    sliding_window: Optional[int] = None
+    # period pattern of block kinds, tiled over depth.
+    #   "attn" | "attn_local" | "ssm"
+    layer_pattern: Tuple[str, ...] = ("attn",)
+
+    # --- MLA (deepseek-v2) ---------------------------------------------------
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- MoE -----------------------------------------------------------------
+    n_routed_experts: int = 0
+    n_shared_experts: int = 0
+    moe_top_k: int = 0
+    expert_d_ff: int = 0
+    shared_expert_d_ff: int = 0
+    moe_period: int = 1              # layer i is MoE iff i % period == period-1
+    first_k_dense: int = 0
+    moe_capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001
+    norm_topk_prob: bool = False
+    shared_expert_gate: bool = False  # qwen2-moe sigmoid gate on shared expert
+
+    # --- SSM (mamba2 / jamba) --------------------------------------------------
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_ngroups: int = 1
+    ssm_chunk: int = 256
+
+    # --- encoder-decoder (whisper) ---------------------------------------------
+    n_enc_layers: int = 0            # >0 => enc-dec; n_layers are decoder layers
+    enc_positions: int = 1500        # frames after the (stubbed) conv frontend
+
+    # --- numerics ----------------------------------------------------------------
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    max_position: int = 1 << 20
+
+    # --- perf levers (§Perf; defaults = paper-faithful baseline) ----------------
+    moe_combine: str = "gather"      # gather | scatter (partial-sum + psum)
+    cache_quant: bool = False        # int8 KV cache (serving)
+    attn_mask_opt: bool = False      # skip masking on interior causal blocks
+    mla_shard: str = "lora"          # lora | heads (Megatron column-parallel
+                                     # up-projections: no per-layer AR)
+
+    # ---------------------------------------------------------------- derived ---
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.attn_impl == "mla":
+            return self.qk_nope_head_dim + self.qk_rope_head_dim
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        # pad so the vocab dim shards cleanly on a 16/32-wide model axis
+        return _round_up(self.vocab_size, 256)
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.ssm_d_inner // self.ssm_headdim
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.n_enc_layers > 0
+
+    def block_kind(self, layer_idx: int) -> str:
+        return self.layer_pattern[layer_idx % len(self.layer_pattern)]
+
+    def is_moe_layer(self, layer_idx: int) -> bool:
+        if self.n_routed_experts <= 0 or layer_idx < self.first_k_dense:
+            return False
+        return layer_idx % self.moe_period == self.moe_period - 1
+
+    # parameter-count estimate (embedding + blocks), for config sanity tests
+    def param_count(self) -> int:
+        d, hd = self.d_model, self.resolved_head_dim
+        total = self.padded_vocab * d  # embed (tied head adds nothing)
+        if not self.tie_embeddings:
+            total += self.padded_vocab * d
+        def attn_params() -> int:
+            if self.attn_impl == "mla":
+                qin = self.q_lora_rank or d
+                p = 0
+                if self.q_lora_rank:
+                    p += d * self.q_lora_rank
+                p += qin * self.n_heads * (self.qk_nope_head_dim + self.qk_rope_head_dim)
+                p += d * (self.kv_lora_rank + self.qk_rope_head_dim)
+                p += self.kv_lora_rank * self.n_heads * (self.qk_nope_head_dim + self.v_head_dim)
+                p += self.n_heads * self.v_head_dim * d
+                return p
+            q = d * self.n_heads * hd
+            kv = 2 * d * self.n_kv_heads * hd
+            o = self.n_heads * hd * d
+            return q + kv + o
+        def dense_mlp(ff: int) -> int:
+            return (3 if self.mlp_gated else 2) * d * ff
+        def ssm_params() -> int:
+            di, n, g = self.ssm_d_inner, self.ssm_state, self.ssm_ngroups
+            proj_in = d * (2 * di + 2 * g * n + self.ssm_nheads)
+            conv = (di + 2 * g * n) * self.ssm_conv
+            return proj_in + conv + di * d + 2 * self.ssm_nheads + di
+        n_total_layers = self.n_layers + self.n_enc_layers
+        for i in range(self.n_layers):
+            kind = self.block_kind(i)
+            total += ssm_params() if kind == "ssm" else attn_params()
+            if self.is_moe_layer(i):
+                total += self.n_routed_experts * dense_mlp(self.expert_d_ff)
+                total += d * self.n_routed_experts  # router
+                if self.n_shared_experts:
+                    total += dense_mlp(self.shared_expert_d_ff
+                                       or self.n_shared_experts * self.expert_d_ff)
+            else:
+                total += dense_mlp(self.d_ff)
+        for _ in range(self.n_enc_layers):
+            total += attn_params() + dense_mlp(self.d_ff)
+            total += attn_params()  # decoder cross-attn (paired per enc layer here)
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: routed top-k only)."""
+        if self.n_routed_experts <= 0:
+            return self.param_count()
+        d = self.d_model
+        dense_moe = 3 * d * self.expert_d_ff
+        inactive = (self.n_routed_experts - self.moe_top_k) * dense_moe
+        n_moe = sum(1 for i in range(self.n_layers) if self.is_moe_layer(i))
+        return self.param_count() - n_moe * inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+# archs whose attention is sub-quadratic enough for 500k decode
+LONG_CONTEXT_OK = ("mamba2-1.3b", "jamba-v0.1-52b", "gemma2-2b")
+
+
+def cell_is_runnable(arch_name: str, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return arch_name in LONG_CONTEXT_OK
+    return True

@@ -1,0 +1,34 @@
+"""chatglm3-6b [dense] — 2d RoPE (rotary on half the head dims), GQA kv=2.
+
+28L d_model=4096 32H (GQA kv=2) d_ff=13696 vocab=65024 [arXiv:2406.12793; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chatglm3-6b",
+    family="dense",
+    n_layers=28,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=2,
+    d_ff=13696,
+    vocab_size=65024,
+    rope_variant="half2d",
+    qkv_bias=True,
+    tie_embeddings=False,
+    rms_eps=1e-5,
+)
+
+REDUCED = ModelConfig(
+    name="chatglm3-6b-reduced",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=160,
+    vocab_size=512,
+    rope_variant="half2d",
+    qkv_bias=True,
+    tie_embeddings=False,
+)

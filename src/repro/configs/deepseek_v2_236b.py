@@ -1,0 +1,54 @@
+"""deepseek-v2-236b [moe] — MLA (kv_lora=512), 2 shared + 160 routed top-6.
+
+60L d_model=5120 128H d_ff(dense)=12288 expert_ff=1536 vocab=102400
+[arXiv:2405.04434; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=12288,
+    vocab_size=102400,
+    attn_impl="mla",
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_nope_head_dim=128,
+    qk_rope_head_dim=64,
+    v_head_dim=128,
+    n_routed_experts=160,
+    n_shared_experts=2,
+    moe_top_k=6,
+    expert_d_ff=1536,
+    shared_expert_d_ff=3072,
+    first_k_dense=1,
+    tie_embeddings=False,
+)
+
+REDUCED = ModelConfig(
+    name="deepseek-v2-236b-reduced",
+    family="moe",
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=160,
+    vocab_size=512,
+    attn_impl="mla",
+    q_lora_rank=32,
+    kv_lora_rank=32,
+    qk_nope_head_dim=16,
+    qk_rope_head_dim=8,
+    v_head_dim=16,
+    n_routed_experts=8,
+    n_shared_experts=2,
+    moe_top_k=2,
+    expert_d_ff=32,
+    shared_expert_d_ff=64,
+    first_k_dense=1,
+    tie_embeddings=False,
+)

@@ -1,0 +1,46 @@
+"""gemma2-2b [dense] — local+global alternating attention, logit softcaps.
+
+26L d_model=2304 8H (GQA kv=4, head_dim 256) d_ff=9216 vocab=256000
+[arXiv:2408.00118; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-2b",
+    family="dense",
+    n_layers=26,
+    d_model=2304,
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=256,
+    d_ff=9216,
+    vocab_size=256000,
+    mlp_act="gelu",
+    rope_theta=10000.0,
+    sliding_window=4096,
+    layer_pattern=("attn_local", "attn"),   # even layers sliding-window
+    attn_softcap=50.0,
+    final_softcap=30.0,
+    use_post_norm=True,
+    scale_embed=True,
+    tie_embeddings=True,
+)
+
+REDUCED = ModelConfig(
+    name="gemma2-2b-reduced",
+    family="dense",
+    n_layers=4,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=32,
+    d_ff=128,
+    vocab_size=512,
+    mlp_act="gelu",
+    sliding_window=16,
+    layer_pattern=("attn_local", "attn"),
+    attn_softcap=50.0,
+    final_softcap=30.0,
+    use_post_norm=True,
+    scale_embed=True,
+)

@@ -1,0 +1,52 @@
+"""jamba-v0.1-52b [hybrid] — Mamba+attention 1:7 interleave, MoE every other
+layer (16 experts, top-2).
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=65536 [arXiv:2403.19887; hf]
+
+The SSM layers use the Mamba-2 SSD formulation (TPU adaptation; see
+DESIGN.md) with Jamba's published state size (d_state=16, d_conv=4,
+expand=2).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=65536,
+    # attention at index 4 of each 8-layer period (1:7 attn:mamba)
+    layer_pattern=("ssm", "ssm", "ssm", "ssm", "attn", "ssm", "ssm", "ssm"),
+    n_routed_experts=16,
+    moe_top_k=2,
+    expert_d_ff=14336,
+    moe_period=2,
+    ssm_state=16,
+    ssm_headdim=64,
+    ssm_expand=2,
+    ssm_conv=4,
+    tie_embeddings=False,
+)
+
+REDUCED = ModelConfig(
+    name="jamba-v0.1-52b-reduced",
+    family="hybrid",
+    n_layers=8,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab_size=512,
+    layer_pattern=("ssm", "ssm", "ssm", "ssm", "attn", "ssm", "ssm", "ssm"),
+    n_routed_experts=4,
+    moe_top_k=2,
+    expert_d_ff=128,
+    moe_period=2,
+    ssm_state=8,
+    ssm_headdim=16,
+    ssm_expand=2,
+    tie_embeddings=False,
+)

@@ -1,0 +1,42 @@
+"""mamba2-1.3b [ssm] — SSD (state-space duality), attention-free.
+
+48L d_model=2048 vocab=50280 ssm_state=128 [arXiv:2405.21060]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,            # unused (attention-free)
+    n_kv_heads=16,
+    d_ff=0,                # mixer-only blocks
+    vocab_size=50280,
+    attn_impl="none",
+    rope_variant="none",
+    layer_pattern=("ssm",),
+    ssm_state=128,
+    ssm_headdim=64,
+    ssm_expand=2,
+    ssm_conv=4,
+    tie_embeddings=True,
+    rms_eps=1e-5,
+)
+
+REDUCED = ModelConfig(
+    name="mamba2-1.3b-reduced",
+    family="ssm",
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=512,
+    attn_impl="none",
+    rope_variant="none",
+    layer_pattern=("ssm",),
+    ssm_state=16,
+    ssm_headdim=16,
+    ssm_expand=2,
+)

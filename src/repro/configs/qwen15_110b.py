@@ -1,0 +1,34 @@
+"""qwen1.5-110b [dense] — QKV bias, GQA kv=8.
+
+80L d_model=8192 64H (GQA kv=8) d_ff=49152 vocab=152064
+[hf:Qwen/Qwen1.5-0.5B scaled per assignment; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-110b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=49152,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=False,
+    rms_eps=1e-6,
+)
+
+REDUCED = ModelConfig(
+    name="qwen1.5-110b-reduced",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=192,
+    vocab_size=512,
+    qkv_bias=True,
+    tie_embeddings=False,
+)

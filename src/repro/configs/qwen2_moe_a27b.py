@@ -1,0 +1,47 @@
+"""qwen2-moe-a2.7b [moe] — 4 shared (fused 5632) + 60 routed top-4.
+
+24L d_model=2048 16H (kv=16) expert_ff=1408 vocab=151936
+[hf:Qwen/Qwen1.5-MoE-A2.7B; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=5632,
+    vocab_size=151936,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    n_routed_experts=60,
+    n_shared_experts=4,
+    moe_top_k=4,
+    expert_d_ff=1408,
+    shared_expert_d_ff=5632,
+    shared_expert_gate=True,
+    norm_topk_prob=True,
+    tie_embeddings=False,
+)
+
+REDUCED = ModelConfig(
+    name="qwen2-moe-a2.7b-reduced",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab_size=512,
+    qkv_bias=True,
+    n_routed_experts=6,
+    n_shared_experts=2,
+    moe_top_k=2,
+    expert_d_ff=32,
+    shared_expert_d_ff=64,
+    shared_expert_gate=True,
+    norm_topk_prob=True,
+    tie_embeddings=False,
+)

@@ -1,0 +1,36 @@
+"""qwen2-vl-72b [vlm] — M-RoPE, dynamic resolution; vision frontend is a STUB
+(input_specs supplies M-RoPE position ids; patch embeddings are precomputed).
+
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064 [arXiv:2409.12191; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_variant="mrope",
+    rope_theta=1_000_000.0,
+    tie_embeddings=False,
+    rms_eps=1e-6,
+)
+
+REDUCED = ModelConfig(
+    name="qwen2-vl-72b-reduced",
+    family="vlm",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=192,
+    vocab_size=512,
+    qkv_bias=True,
+    rope_variant="mrope",
+    tie_embeddings=False,
+)

@@ -1,0 +1,36 @@
+"""qwen3-32b [dense] — per-head q/k RMS norm, GQA kv=8.
+
+64L d_model=5120 64H (GQA kv=8, head_dim 128) d_ff=25600 vocab=151936
+[hf:Qwen/Qwen3-8B scaled per assignment; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=25600,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=False,
+    rms_eps=1e-6,
+)
+
+REDUCED = ModelConfig(
+    name="qwen3-32b-reduced",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=32,
+    d_ff=192,
+    vocab_size=512,
+    qk_norm=True,
+    tie_embeddings=False,
+)

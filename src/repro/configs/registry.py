@@ -1,0 +1,64 @@
+"""Architecture registry: ``--arch <id>`` resolution for launchers/tests."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.configs import (chatglm3_6b, deepseek_v2_236b, gemma2_2b,
+                           jamba_v01_52b, mamba2_13b, qwen2_moe_a27b,
+                           qwen2_vl_72b, qwen3_32b, qwen15_110b, whisper_tiny)
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, cell_is_runnable
+
+_MODULES = {
+    "gemma2-2b": gemma2_2b,
+    "chatglm3-6b": chatglm3_6b,
+    "qwen1.5-110b": qwen15_110b,
+    "qwen3-32b": qwen3_32b,
+    "jamba-v0.1-52b": jamba_v01_52b,
+    "deepseek-v2-236b": deepseek_v2_236b,
+    "qwen2-moe-a2.7b": qwen2_moe_a27b,
+    "mamba2-1.3b": mamba2_13b,
+    "whisper-tiny": whisper_tiny,
+    "qwen2-vl-72b": qwen2_vl_72b,
+}
+
+ARCHS: Dict[str, ModelConfig] = {k: m.CONFIG for k, m in _MODULES.items()}
+REDUCED: Dict[str, ModelConfig] = {k: m.REDUCED for k, m in _MODULES.items()}
+
+# rough expected parameter counts (sanity band for config tests), in billions
+EXPECTED_PARAMS_B = {
+    "gemma2-2b": (2.0, 3.5),
+    "chatglm3-6b": (5.5, 7.5),
+    "qwen1.5-110b": (95.0, 120.0),
+    "qwen3-32b": (28.0, 36.0),
+    "jamba-v0.1-52b": (45.0, 58.0),
+    "deepseek-v2-236b": (210.0, 250.0),
+    "qwen2-moe-a2.7b": (12.0, 16.5),
+    "mamba2-1.3b": (1.1, 1.6),
+    "whisper-tiny": (0.02, 0.08),
+    "qwen2-vl-72b": (65.0, 80.0),
+}
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_reduced(name: str) -> ModelConfig:
+    return REDUCED[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; known: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def all_cells(include_skipped: bool = True):
+    """Yield (arch_name, shape_name, runnable) for the 40-cell grid."""
+    for a in ARCHS:
+        for s in SHAPES:
+            ok = cell_is_runnable(a, s)
+            if ok or include_skipped:
+                yield a, s, ok

@@ -1,0 +1,39 @@
+"""whisper-tiny [audio] — enc-dec transformer backbone; conv frontend is a
+STUB (input_specs supplies precomputed frame embeddings).
+
+4+4L d_model=384 6H d_ff=1536 vocab=51865 [arXiv:2212.04356]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,            # decoder layers
+    n_enc_layers=4,
+    enc_positions=1500,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    mlp_act="gelu",
+    mlp_gated=False,
+    rope_variant="none",
+    tie_embeddings=True,
+)
+
+REDUCED = ModelConfig(
+    name="whisper-tiny-reduced",
+    family="audio",
+    n_layers=2,
+    n_enc_layers=2,
+    enc_positions=32,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab_size=512,
+    mlp_act="gelu",
+    mlp_gated=False,
+    rope_variant="none",
+)

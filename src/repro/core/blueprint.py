@@ -1,0 +1,190 @@
+"""Blueprint planner — the Ambari-"suggested configuration" analogue.
+
+Given (architecture, input shape, mesh) the planner *suggests* a deployment
+plan: parameter/activation sharding rules, remat policy, and memory
+estimates that justify the choices. Exactly like Ambari, the suggestion is
+a starting point the user can override (`overrides=`), and the provisioning
+layer validates it by lowering (the dry-run) before any "service" starts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.schema import DEFAULT_RULES
+from repro.parallel.context import ACT_RULES
+
+GiB = 1024 ** 3
+HBM_PER_CHIP = 16 * GiB          # v5e-class
+HBM_BUDGET = 0.85 * HBM_PER_CHIP
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    param_rules: Dict[str, Tuple[str, ...]]
+    act_rules: Dict[str, Tuple[str, ...]]
+    remat: str                       # none | dots | full
+    loss_chunk: int
+    est: Dict[str, float]            # memory estimates (bytes/chip)
+    notes: Tuple[str, ...]
+    serve_param_dtype: str = "float32"   # §Perf: bf16 params for serving
+
+
+def _mesh_sizes(mesh) -> Dict[str, int]:
+    """Accepts a Mesh, an AbstractMesh, or a plain {axis: size} dict — the
+    planner reasons about topology shape only, never devices."""
+    if isinstance(mesh, dict):
+        return dict(mesh)
+    if hasattr(mesh, "devices"):
+        return dict(zip(mesh.axis_names, mesh.devices.shape))
+    return dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+
+def suggest_plan(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                 overrides: Optional[Dict[str, Any]] = None,
+                 optimize: bool = False) -> Plan:
+    """Suggest a deployment plan (Ambari's "suggested configuration").
+
+    ``optimize=False`` (default) gives the paper-faithful v1 suggestions —
+    the baseline every dry-run cell was measured with. ``optimize=True``
+    additionally applies the configuration-optimization rules learned from
+    the §Perf hillclimb (paper §2.2 "advanced CPS requirements"):
+
+      * small-dense-model training on a wide mesh -> DP-heavy layout (TP off,
+        model axis joins the batch): gemma2-2b train_4k bound 7.57s -> 1.51s;
+      * serving -> no-FSDP 2-axis tensor parallelism + bf16 params + int8
+        KV cache: qwen1.5-110b decode_32k bound 250ms -> 77ms;
+      * MoE -> scatter combine; MLA -> head-sharded up-projections; large
+        models -> dots remat: deepseek-v2 train_4k bound 105.6s -> (§Perf).
+    """
+    sizes = _mesh_sizes(mesh)
+    model_par = sizes.get("model", 1)
+    data_par = sizes.get("data", 1)
+    pod_par = sizes.get("pod", 1)
+    n_dev = model_par * data_par * pod_par
+    notes = []
+
+    param_rules = {k: tuple(v) for k, v in DEFAULT_RULES.items()}
+    act_rules = {k: tuple(v) for k, v in ACT_RULES.items()}
+
+    # ---- parameter/optimizer memory: decide FSDP span ---------------------
+    n_params = cfg.param_count()
+    state_bytes = n_params * 4 * 3            # fp32 params + adam m + v
+    per_chip = state_bytes / (model_par * data_par)
+    if shape.kind == "train" and per_chip > 0.55 * HBM_BUDGET and pod_par > 1:
+        param_rules["embed"] = ("data", "pod")   # span FSDP across pods
+        per_chip /= pod_par
+        notes.append("FSDP spans pod axis (state would not fit in-pod)")
+    est = {"opt_state_bytes": per_chip}
+
+    # ---- activation memory -> remat policy --------------------------------
+    if shape.kind == "train":
+        dp = data_par * pod_par
+        b_local = max(shape.global_batch // dp, 1)
+        act_per_layer = b_local * shape.seq_len * cfg.d_model * 2  # bf16 resid
+        total_layers = cfg.n_layers + cfg.n_enc_layers
+        full_acts = act_per_layer * total_layers / model_par if model_par else 0
+        # checkpointed residuals only under "full" remat
+        if cfg.name.endswith("reduced") or n_params < 4e9:
+            remat = "none"
+        elif full_acts * 12 > 0.35 * HBM_BUDGET:
+            remat = "full"
+            notes.append("full remat: unsaved activations would exceed HBM")
+        else:
+            remat = "dots"
+        est["ckpt_act_bytes"] = full_acts
+    else:
+        remat = "none"
+
+    # ---- serving cache placement ------------------------------------------
+    if shape.kind == "decode":
+        if shape.global_batch < data_par:
+            # long-context single stream: shard cache sequence on data axes
+            act_rules["cache_seq"] = ("data", "pod")
+            notes.append("cache sequence sharded on data axes (SP decode)")
+        else:
+            act_rules["cache_seq"] = ("model",)
+        est["cache_bytes"] = _cache_bytes(cfg, shape) / (
+            model_par * data_par * pod_par)
+
+    serve_dtype = "float32"
+    if optimize:
+        if shape.kind == "train":
+            # DP-heavy: profitable when the whole optimizer state fits under
+            # data-axis FSDP alone and the batch covers every device.
+            fits_dp = (n_params * 12 / (data_par * pod_par)) < 0.25 * HBM_BUDGET
+            if cfg.n_routed_experts == 0 and fits_dp \
+                    and shape.global_batch % n_dev == 0:
+                for k in ("ff", "heads", "kv_heads", "lora", "ssm_inner",
+                          "ssm_heads"):
+                    param_rules[k] = ()
+                for k in ("heads_act", "ff_act", "experts_act"):
+                    act_rules[k] = ()
+                act_rules["batch"] = ("pod", "data", "model")
+                notes.append("optimize: DP-heavy layout (TP off, model axis "
+                             "joined batch) — per-layer TP all-reduces removed")
+            if remat == "full":
+                # measured headroom: every full-remat cell peaks <= 13.2 GiB
+                # of 16 GiB; saving dot outputs removes recompute re-gathers
+                remat = "dots"
+                notes.append("optimize: dots remat (recompute re-gathers cost "
+                             "more than saved activations at this scale)")
+        elif cfg.attn_impl != "mla":
+            # serving: params need no FSDP if 2-axis TP keeps them resident
+            serve_dtype = "bfloat16"
+            param_rules["embed"] = ()
+            for k in ("ff", "heads", "kv_heads", "lora", "expert_ff"):
+                param_rules[k] = ("model", "data")
+            notes.append("optimize: serve-TP over both axes, bf16 params "
+                         "(no per-step FSDP gather)")
+        else:
+            # measured: 2-axis TP *regresses* MLA decode (the absorbed path
+            # contracts over the compressed dim; input-sharded up-projections
+            # force per-layer ARs) — keep the v1 serving plan
+            notes.append("optimize: v1 plan retained (2-axis serve-TP "
+                         "regresses absorbed MLA decode, measured 0.82x)")
+
+    plan = Plan(param_rules=param_rules, act_rules=act_rules, remat=remat,
+                loss_chunk=1024, est=est, notes=tuple(notes),
+                serve_param_dtype=serve_dtype)
+    if overrides:
+        plan = dataclasses.replace(plan, **overrides)
+    return plan
+
+
+def optimized_cfg_overrides(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ModelConfig-level levers the optimizing planner recommends."""
+    out: Dict[str, Any] = {}
+    if cfg.n_routed_experts:
+        out["moe_combine"] = "scatter"
+    if cfg.attn_impl == "mla" and shape.kind == "train":
+        # decode uses the weight-absorbed path, which contracts over the
+        # compressed kv dim — lora sharding is the right layout there
+        out["mla_shard"] = "heads"
+    if shape.kind == "train" and shape.seq_len >= 8192:
+        out["attn_mask_opt"] = True
+    if shape.kind == "decode" and cfg.attn_impl == "gqa":
+        out["cache_quant"] = True
+    return out
+
+
+def _cache_bytes(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    B, S = shape.global_batch, shape.seq_len
+    total = 0
+    for i in range(cfg.n_layers):
+        kind = cfg.block_kind(i)
+        if kind == "ssm":
+            total += B * cfg.ssm_nheads * cfg.ssm_state * cfg.ssm_headdim * 4
+        else:
+            cap = S
+            if kind == "attn_local" and cfg.sliding_window:
+                cap = min(S, cfg.sliding_window)
+            if cfg.attn_impl == "mla":
+                total += B * cap * (cfg.kv_lora_rank + cfg.qk_rope_head_dim) * 2
+            else:
+                total += 2 * B * cap * cfg.n_kv_heads * cfg.resolved_head_dim * 2
+    return total

@@ -1,0 +1,116 @@
+"""InstaCluster façade: a Big-Data-style analytic platform in one call.
+
+``build_cluster()`` performs the full paper pipeline — cluster provisioning
+(Fig. 1), service provisioning (Ambari analogue), service interaction (Hue
+analogue) — and returns a handle exposing all three plus lifecycle ops.
+
+Paper limitation reproduced *and* lifted: InstaCluster supports one cluster
+per region (paper §4). ``ClusterManager`` enforces that by default and lifts
+it with ``allow_multiple_per_region=True`` (beyond-paper; the discovery
+filter uses cluster-scoped tags instead of region-wide enumeration).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional
+
+from repro.core.events import EventLog
+from repro.core.heartbeat import HeartbeatMonitor
+from repro.core.interaction import InteractionHub
+from repro.core.lifecycle import ClusterLifecycle
+from repro.core.provisioner import Cluster, ClusterProvisioner
+from repro.core.services import AmbariServer
+from repro.core.simcloud import SimCloud
+
+DEFAULT_SERVICES = ("hdfs", "yarn", "zookeeper", "spark", "hue")
+
+
+class RegionOccupiedError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class InstaCluster:
+    cluster: Cluster
+    ambari: AmbariServer
+    hue: InteractionHub
+    lifecycle: ClusterLifecycle
+    provisioner: ClusterProvisioner
+    bringup_seconds: float
+
+    @property
+    def log(self) -> EventLog:
+        return self.cluster.log
+
+    def spec(self) -> Dict[str, Any]:
+        s = self.cluster.spec()
+        s["services"] = sorted(self.ambari.services)
+        s["configs"] = {n: {k: v for k, v in svc.config.items()
+                            if k != "placement"}
+                        for n, svc in self.ambari.services.items()}
+        return s
+
+    def spec_json(self) -> str:
+        return json.dumps(self.spec(), indent=1, sort_keys=True)
+
+
+class ClusterManager:
+    """Top-level entry point binding a SimCloud account."""
+
+    def __init__(self, cloud: Optional[SimCloud] = None, *,
+                 access_key_id: str = "AKIA-DEMO",
+                 secret_key: str = "s3cr3t",
+                 allow_multiple_per_region: bool = False):
+        self.cloud = cloud or SimCloud()
+        self.access_key_id = access_key_id
+        self.secret_key = secret_key
+        self.cloud.register_key(access_key_id, secret_key)
+        self.allow_multiple = allow_multiple_per_region
+        self._by_region: Dict[str, List[InstaCluster]] = {}
+
+    def build_cluster(self, *, n_slaves: int, region: str = "us-east-1",
+                      instance_type: str = "tpu-host-v5e-8",
+                      services: tuple = DEFAULT_SERVICES,
+                      spot: bool = False,
+                      deactivate_key: bool = False,
+                      config_overrides: Optional[Dict[str, Dict]] = None
+                      ) -> InstaCluster:
+        if self._by_region.get(region) and not self.allow_multiple:
+            raise RegionOccupiedError(
+                f"region {region} already hosts a cluster; the paper "
+                f"supports one cluster per region (pass "
+                f"allow_multiple_per_region=True to lift this)")
+        t0 = self.cloud.clock
+        prov = ClusterProvisioner(
+            self.cloud, region=region, access_key_id=self.access_key_id,
+            secret_key=self.secret_key,
+            deactivate_key_after_discovery=deactivate_key)
+        cluster = prov.provision(n_slaves=n_slaves,
+                                 instance_type=instance_type, spot=spot)
+        ambari = AmbariServer(self.cloud, cluster)
+        ambari.install(list(services), config_overrides)
+        for name in services:
+            ambari.start(name)
+        hue = InteractionHub(ambari)
+        lifecycle = ClusterLifecycle(self.cloud, prov)
+        handle = InstaCluster(cluster=cluster, ambari=ambari, hue=hue,
+                              lifecycle=lifecycle, provisioner=prov,
+                              bringup_seconds=self.cloud.clock - t0)
+        self._by_region.setdefault(region, []).append(handle)
+        return handle
+
+    def build_from_spec(self, spec: Dict[str, Any], *,
+                        region: Optional[str] = None) -> InstaCluster:
+        """Reproducibility entry point (paper §4): rebuild a collaborator's
+        experimental environment from an exported spec."""
+        return self.build_cluster(
+            n_slaves=spec["n_slaves"],
+            region=region or spec["region"],
+            instance_type=spec["instance_type"],
+            services=tuple(spec.get("services", DEFAULT_SERVICES)),
+            spot=spec.get("spot", False),
+            config_overrides=spec.get("configs"))
+
+    def clusters(self, region: str) -> List[InstaCluster]:
+        return list(self._by_region.get(region, []))

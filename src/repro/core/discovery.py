@@ -1,0 +1,91 @@
+"""Node directory: stable logical naming over unstable infrastructure.
+
+The paper's master enumerates slaves once, assigns hostnames, and re-binds
+hostname -> private IP after every cluster restart (EC2 changes private IPs).
+We keep the same invariant for a TPU fleet: *logical ranks are stable*,
+physical instance ids/IPs are not — checkpoints, mesh coordinates and service
+placement all reference logical ranks only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core.simcloud import Instance
+
+
+@dataclasses.dataclass
+class Node:
+    hostname: str            # stable: "master", "slave-0", ...
+    logical_rank: int        # master = -1, slaves = 0..N-1
+    instance_id: str
+    private_ip: str
+    chips: int
+
+
+class NodeDirectory:
+    def __init__(self) -> None:
+        self.nodes: Dict[str, Node] = {}
+
+    # ------------------------------------------------------------ assembly --
+    def enumerate(self, master: Instance, slaves: List[Instance]) -> None:
+        """Initial hostname assignment (paper: master names slaves by its
+        discovery enumeration order)."""
+        self.nodes = {"master": Node("master", -1, master.instance_id,
+                                     master.private_ip, master.chips)}
+        for rank, inst in enumerate(sorted(slaves,
+                                           key=lambda i: i.instance_id)):
+            hn = f"slave-{rank}"
+            self.nodes[hn] = Node(hn, rank, inst.instance_id,
+                                  inst.private_ip, inst.chips)
+
+    def add_slaves(self, new: List[Instance]) -> List[Node]:
+        """Cluster extension (use case 4): new slaves get the next ranks."""
+        base = 1 + max((n.logical_rank for n in self.nodes.values()),
+                       default=-1)
+        out = []
+        for off, inst in enumerate(sorted(new, key=lambda i: i.instance_id)):
+            hn = f"slave-{base + off}"
+            node = Node(hn, base + off, inst.instance_id, inst.private_ip,
+                        inst.chips)
+            self.nodes[hn] = node
+            out.append(node)
+        return out
+
+    def remove(self, hostname: str) -> Node:
+        return self.nodes.pop(hostname)
+
+    def replace_instance(self, hostname: str, inst: Instance) -> None:
+        """Spare substitution: same logical rank, new hardware."""
+        n = self.nodes[hostname]
+        n.instance_id = inst.instance_id
+        n.private_ip = inst.private_ip
+        n.chips = inst.chips
+
+    # ----------------------------------------------------------- rediscovery --
+    def remap_ips(self, instances: List[Instance]) -> List[str]:
+        """After restart: rebind hostnames to fresh private IPs by instance
+        id (the paper uses EC2 tags for exactly this). Returns hostnames whose
+        IP changed."""
+        by_id = {i.instance_id: i for i in instances}
+        changed = []
+        for node in self.nodes.values():
+            inst = by_id.get(node.instance_id)
+            if inst is not None and inst.private_ip != node.private_ip:
+                node.private_ip = inst.private_ip
+                changed.append(node.hostname)
+        return changed
+
+    # -------------------------------------------------------------- exports --
+    def hosts_file(self) -> str:
+        lines = [f"{n.private_ip}\t{n.hostname}"
+                 for n in sorted(self.nodes.values(),
+                                 key=lambda n: n.logical_rank)]
+        return "\n".join(lines) + "\n"
+
+    def slaves(self) -> List[Node]:
+        return sorted((n for n in self.nodes.values() if n.logical_rank >= 0),
+                      key=lambda n: n.logical_rank)
+
+    def total_chips(self) -> int:
+        return sum(n.chips for n in self.slaves())

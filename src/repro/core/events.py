@@ -1,0 +1,54 @@
+"""Provisioning event log — lets tests assert the paper's Fig. 1 sequence."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    t: float
+    actor: str        # "slave-3", "master", "cloud"
+    action: str       # e.g. "create_temp_user"
+    detail: Dict[str, Any]
+
+
+class EventLog:
+    def __init__(self) -> None:
+        self.events: List[Event] = []
+
+    def emit(self, t: float, actor: str, action: str, **detail: Any) -> None:
+        self.events.append(Event(t, actor, action, dict(detail)))
+
+    def actions(self, actor: Optional[str] = None) -> List[str]:
+        return [e.action for e in self.events
+                if actor is None or e.actor == actor
+                or (actor.endswith("*") and e.actor.startswith(actor[:-1]))]
+
+    def first_index(self, action: str) -> int:
+        for i, e in enumerate(self.events):
+            if e.action == action:
+                return i
+        raise KeyError(action)
+
+    def last_index(self, action: str) -> int:
+        idx = -1
+        for i, e in enumerate(self.events):
+            if e.action == action:
+                idx = i
+        if idx < 0:
+            raise KeyError(action)
+        return idx
+
+    def assert_order(self, *actions: str) -> None:
+        """Every listed action occurs, in the given order (first occurrences,
+        except consecutive duplicates which use last-of-previous)."""
+        prev = -1
+        for a in actions:
+            idx = next((i for i, e in enumerate(self.events)
+                        if e.action == a and i > prev), None)
+            if idx is None:
+                raise AssertionError(
+                    f"action {a!r} not found after index {prev} "
+                    f"(log: {[e.action for e in self.events]})")
+            prev = idx

@@ -1,0 +1,98 @@
+"""Heartbeat monitoring — the Ambari server<->agent loop, hardened.
+
+Ambari's server detects dead agents by missed heartbeats; at pod scale the
+same loop must also catch *stragglers* (hosts that are alive but slow — the
+tail that stalls a synchronous train step). The monitor keeps per-host
+heartbeat times and step-duration EWMAs and classifies hosts as
+ALIVE / SUSPECT / DEAD / STRAGGLER.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import statistics
+from typing import Callable, Dict, List, Optional
+
+
+class HostState(enum.Enum):
+    ALIVE = "alive"
+    SUSPECT = "suspect"
+    DEAD = "dead"
+    STRAGGLER = "straggler"
+
+
+@dataclasses.dataclass
+class HostHealth:
+    hostname: str
+    last_beat: float
+    step_ewma: Optional[float] = None
+    state: HostState = HostState.ALIVE
+    missed: int = 0
+
+
+class HeartbeatMonitor:
+    def __init__(self, *, interval: float = 10.0, suspect_after: float = 2.5,
+                 dead_after: float = 6.0, straggler_factor: float = 1.8,
+                 ewma_alpha: float = 0.3):
+        self.interval = interval
+        self.suspect_after = suspect_after       # x interval
+        self.dead_after = dead_after             # x interval
+        self.straggler_factor = straggler_factor
+        self.alpha = ewma_alpha
+        self.hosts: Dict[str, HostHealth] = {}
+        self._on_dead: List[Callable[[str], None]] = []
+        self._on_straggler: List[Callable[[str], None]] = []
+
+    def register(self, hostname: str, now: float = 0.0) -> None:
+        self.hosts[hostname] = HostHealth(hostname, last_beat=now)
+
+    def deregister(self, hostname: str) -> None:
+        self.hosts.pop(hostname, None)
+
+    def on_dead(self, fn: Callable[[str], None]) -> None:
+        self._on_dead.append(fn)
+
+    def on_straggler(self, fn: Callable[[str], None]) -> None:
+        self._on_straggler.append(fn)
+
+    # ----------------------------------------------------------- ingestion --
+    def beat(self, hostname: str, now: float,
+             step_time: Optional[float] = None) -> None:
+        h = self.hosts[hostname]
+        h.last_beat = now
+        h.missed = 0
+        if step_time is not None:
+            h.step_ewma = (step_time if h.step_ewma is None
+                           else self.alpha * step_time
+                           + (1 - self.alpha) * h.step_ewma)
+        if h.state in (HostState.SUSPECT, HostState.STRAGGLER):
+            h.state = HostState.ALIVE
+
+    # ---------------------------------------------------------- evaluation --
+    def check(self, now: float) -> Dict[str, HostState]:
+        ewmas = [h.step_ewma for h in self.hosts.values()
+                 if h.step_ewma is not None]
+        med = statistics.median(ewmas) if ewmas else None
+        for h in self.hosts.values():
+            if h.state == HostState.DEAD:
+                continue
+            silence = now - h.last_beat
+            if silence > self.dead_after * self.interval:
+                h.state = HostState.DEAD
+                for fn in self._on_dead:
+                    fn(h.hostname)
+            elif silence > self.suspect_after * self.interval:
+                h.state = HostState.SUSPECT
+            elif (med is not None and h.step_ewma is not None and med > 0
+                  and h.step_ewma > self.straggler_factor * med):
+                if h.state != HostState.STRAGGLER:
+                    h.state = HostState.STRAGGLER
+                    for fn in self._on_straggler:
+                        fn(h.hostname)
+            else:
+                h.state = HostState.ALIVE
+        return {h.hostname: h.state for h in self.hosts.values()}
+
+    def alive(self) -> List[str]:
+        return [h.hostname for h in self.hosts.values()
+                if h.state in (HostState.ALIVE, HostState.STRAGGLER)]

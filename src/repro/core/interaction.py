@@ -1,0 +1,131 @@
+"""Service interaction — the Hue analogue (paper use cases 5-8).
+
+One client object that fronts every installed service: browse the cluster
+store (5), submit compute jobs (6), upload files (7), and run the classic
+MapReduce WordCount (8) — implemented here as an actual scatter/map/reduce
+over the cluster's logical workers using jnp segment sums, because this
+framework's "MapReduce" substrate is JAX.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.provisioner import Cluster
+from repro.core.services import PORTS, AmbariServer, ServiceState
+
+
+class InteractionError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class Job:
+    job_id: int
+    kind: str
+    status: str
+    result: Any = None
+
+
+class InteractionHub:
+    """The "Hue" of the system: requires its backing services to be up."""
+
+    def __init__(self, ambari: AmbariServer):
+        self.ambari = ambari
+        self.cluster: Cluster = ambari.cluster
+        self.port = PORTS["hue"]
+        self.storage: Dict[str, bytes] = {}
+        self.jobs: List[Job] = []
+
+    # ------------------------------------------------------------ plumbing --
+    def _require(self, service: str) -> None:
+        svc = self.ambari.services.get(service)
+        if svc is None or svc.state != ServiceState.STARTED:
+            raise InteractionError(
+                f"service {service!r} is not running; install+start it "
+                f"through the provisioning server first")
+
+    # ------------------------------------------------- use case 5: browse --
+    def browse_storage(self, prefix: str = "") -> List[Dict[str, Any]]:
+        self._require("hdfs")
+        return [{"path": k, "bytes": len(v)}
+                for k, v in sorted(self.storage.items())
+                if k.startswith(prefix)]
+
+    # ------------------------------------------------- use case 7: upload --
+    def upload_file(self, path: str, data: bytes) -> Dict[str, Any]:
+        self._require("hdfs")
+        self.storage[path] = data
+        # block placement across slaves (HDFS-analogue)
+        slaves = self.cluster.directory.slaves()
+        replicas = self.ambari.services["hdfs"].config.get(
+            "replicas", len(slaves))
+        placement = [s.hostname for s in slaves[:max(1, replicas)]]
+        self.cluster.log.emit(self.ambari.cloud.clock, "hue", "upload_file",
+                              path=path, bytes=len(data),
+                              placement=placement)
+        return {"path": path, "bytes": len(data), "placement": placement}
+
+    # ------------------------------------------------- use case 6: submit --
+    def submit_job(self, kind: str, fn: Callable[[], Any]) -> Job:
+        self._require("spark")
+        job = Job(job_id=len(self.jobs), kind=kind, status="running")
+        self.jobs.append(job)
+        self.cluster.log.emit(self.ambari.cloud.clock, "hue", "submit_job",
+                              kind=kind, job_id=job.job_id,
+                              driver_port=PORTS["spark-driver"])
+        try:
+            job.result = fn()
+            job.status = "succeeded"
+        except Exception as e:  # noqa: BLE001 - surfaced via job status
+            job.status = f"failed: {e}"
+        return job
+
+    # ---------------------------------------------- use case 8: wordcount --
+    def run_wordcount(self, path: str) -> Dict[str, int]:
+        """MapReduce WordCount over an uploaded file, executed as an actual
+        scatter -> map -> segment-reduce across the cluster's logical
+        workers (in JAX, the substrate this framework provisions)."""
+        self._require("spark")
+        self._require("hdfs")
+        if path not in self.storage:
+            raise InteractionError(f"no such file {path}")
+        words = re.findall(r"[a-z']+", self.storage[path].decode().lower())
+        if not words:
+            return {}
+        vocab = sorted(set(words))
+        w2i = {w: i for i, w in enumerate(vocab)}
+        ids = np.array([w2i[w] for w in words], np.int32)
+        n_workers = max(1, len(self.cluster.directory.slaves()))
+        # scatter: pad + split word stream across workers (map phase)
+        pad = (-len(ids)) % n_workers
+        ids_p = np.concatenate([ids, np.full((pad,), -1, np.int32)])
+        shards = ids_p.reshape(n_workers, -1)
+
+        def mapper(shard):  # per-worker partial counts
+            ok = shard >= 0
+            return jnp.zeros((len(vocab),), jnp.int32).at[
+                jnp.where(ok, shard, 0)].add(ok.astype(jnp.int32))
+
+        partials = jax.vmap(mapper)(jnp.asarray(shards))
+        counts = jnp.sum(partials, axis=0)        # reduce phase
+        result = {w: int(counts[i]) for w, i in w2i.items()}
+        self.cluster.log.emit(self.ambari.cloud.clock, "hue", "wordcount",
+                              path=path, words=len(words),
+                              distinct=len(vocab), workers=n_workers)
+        return result
+
+    # ------------------------------------------------------------ metrics --
+    def service_pages(self) -> Dict[str, int]:
+        """Every started service reachable through one interface (Hue's
+        pitch) — name -> port."""
+        out = {"hue": self.port, "ambari": self.ambari.port}
+        for name, svc in self.ambari.services.items():
+            if svc.state == ServiceState.STARTED and svc.port:
+                out[name] = svc.port
+        return out

@@ -1,0 +1,117 @@
+"""Cluster lifecycle: stop / start / extend / shrink / replace (use cases 2-4).
+
+Paper semantics preserved:
+  * stop halts billing (use case 2);
+  * start brings *slaves up first, then the master* (use case 3) and triggers
+    master re-discovery because private IPs changed;
+  * extend adds instances which the master enumerates with fresh ranks
+    (use case 4);
+plus the pieces a 1000-node fleet needs: a warm-spare pool and single-node
+replacement that keeps logical ranks stable (checkpoints stay valid).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.core.discovery import Node
+from repro.core.provisioner import Cluster, ClusterProvisioner, IMAGE_ID
+from repro.core.simcloud import Instance, InstanceState, SimCloud
+
+
+class LifecycleError(RuntimeError):
+    pass
+
+
+class ClusterLifecycle:
+    def __init__(self, cloud: SimCloud, provisioner: ClusterProvisioner):
+        self.cloud = cloud
+        self.prov = provisioner
+        self.spares: List[Instance] = []
+
+    # ------------------------------------------------------------ stopping --
+    def stop(self, cluster: Cluster) -> None:
+        """Use case 2: stop every instance to halt billing."""
+        self.cloud.stop_instances(cluster.instance_ids,
+                                  cluster.access_key_id)
+        cluster.log.emit(self.cloud.clock, "user", "stop_cluster",
+                         count=len(cluster.instance_ids))
+
+    # ------------------------------------------------------------ starting --
+    def start(self, cluster: Cluster) -> List[str]:
+        """Use case 3: slaves first, then master; master re-discovers IPs."""
+        slave_ids = [s.instance_id for s in cluster.slaves]
+        self.cloud.start_instances(slave_ids, cluster.access_key_id)
+        cluster.log.emit(self.cloud.clock, "user", "start_slaves",
+                         count=len(slave_ids))
+        self.cloud.start_instances([cluster.master.instance_id],
+                                   cluster.access_key_id)
+        cluster.log.emit(self.cloud.clock, "user", "start_master")
+        return self.prov.rediscover(cluster)
+
+    # ----------------------------------------------------------- extension --
+    def extend(self, cluster: Cluster, n_new: int,
+               instance_type: Optional[str] = None) -> List[Node]:
+        """Use case 4: add instances; the master assigns the next ranks."""
+        itype = instance_type or (cluster.slaves[0].instance_type
+                                  if cluster.slaves else "tpu-host-v5e-8")
+        new = self.cloud.run_instances(
+            count=n_new, instance_type=itype, region=cluster.region,
+            image_id=IMAGE_ID, access_key_id=cluster.access_key_id,
+            user_data={"role": "slave",
+                       "access_key_id": cluster.access_key_id},
+            spot=cluster.spot)
+        cluster.slaves.extend(new)
+        nodes = cluster.directory.add_slaves(new)
+        for n in nodes:
+            self.cloud.create_tags([n.instance_id],
+                                   {"instacluster:role": n.hostname},
+                                   cluster.access_key_id)
+            cluster.security.temp_user_active[n.instance_id] = False
+        cluster.log.emit(self.cloud.clock, "master", "extend_cluster",
+                         added=[n.hostname for n in nodes])
+        self.prov.rediscover(cluster)
+        return nodes
+
+    def shrink(self, cluster: Cluster, hostnames: List[str]) -> None:
+        ids = []
+        for hn in hostnames:
+            node = cluster.directory.remove(hn)
+            ids.append(node.instance_id)
+        cluster.slaves = [s for s in cluster.slaves
+                          if s.instance_id not in ids]
+        self.cloud.terminate_instances(ids, cluster.access_key_id)
+        cluster.log.emit(self.cloud.clock, "master", "shrink_cluster",
+                         removed=hostnames)
+
+    # -------------------------------------------------------------- spares --
+    def provision_spares(self, cluster: Cluster, n: int) -> None:
+        itype = (cluster.slaves[0].instance_type if cluster.slaves
+                 else "tpu-host-v5e-8")
+        self.spares.extend(self.cloud.run_instances(
+            count=n, instance_type=itype, region=cluster.region,
+            image_id=IMAGE_ID, access_key_id=cluster.access_key_id,
+            user_data={"role": "spare",
+                       "access_key_id": cluster.access_key_id}))
+        cluster.log.emit(self.cloud.clock, "master", "provision_spares", n=n)
+
+    def replace_failed(self, cluster: Cluster, hostname: str) -> Node:
+        """Swap a dead host for a warm spare; the logical rank (and thus the
+        sharding layout and checkpoint addressing) is unchanged."""
+        node = cluster.directory.nodes.get(hostname)
+        if node is None:
+            raise LifecycleError(f"unknown host {hostname}")
+        if not self.spares:
+            raise LifecycleError("no warm spares available")
+        spare = self.spares.pop(0)
+        old_id = node.instance_id
+        cluster.directory.replace_instance(hostname, spare)
+        cluster.slaves = [s for s in cluster.slaves
+                          if s.instance_id != old_id] + [spare]
+        self.cloud.create_tags([spare.instance_id],
+                               {"instacluster:role": hostname},
+                               cluster.access_key_id)
+        cluster.log.emit(self.cloud.clock, "master", "replace_host",
+                         hostname=hostname, old=old_id,
+                         new=spare.instance_id)
+        self.prov.rediscover(cluster)
+        return cluster.directory.nodes[hostname]

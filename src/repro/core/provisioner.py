@@ -1,0 +1,195 @@
+"""Cluster provisioning — the paper's Fig. 1 sequence, step for step.
+
+Slave boot:  create temp user (password = AWS Access Key ID) -> install agent.
+Master boot: query EC2 for slaves -> assign hostnames + hosts file ->
+generate cluster key-pair -> distribute key-pair + hosts over the temp user
+-> delete temp user everywhere -> tag instances -> (optional) deactivate the
+AWS key -> install + start the Ambari-analogue server.
+
+Every step lands in the EventLog; tests assert the exact Fig. 1 order and
+the security invariants (temp user gone once keys are in place, key-pair
+regenerated on every full restart).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+from typing import Any, Dict, List, Optional
+
+from repro.core.discovery import NodeDirectory
+from repro.core.events import EventLog
+from repro.core.simcloud import LATENCY, Instance, InstanceState, SimCloud
+
+IMAGE_ID = "ami-instacluster-tpu-001"   # the paper ships an AMI; ours is sim
+
+
+@dataclasses.dataclass
+class SecurityState:
+    temp_user_active: Dict[str, bool]
+    cluster_keypair: Optional[str]
+    keypair_generation: int = 0
+
+
+@dataclasses.dataclass
+class Cluster:
+    region: str
+    master: Instance
+    slaves: List[Instance]
+    directory: NodeDirectory
+    security: SecurityState
+    access_key_id: str
+    secret_key: str
+    log: EventLog
+    spot: bool = False
+
+    @property
+    def instance_ids(self) -> List[str]:
+        return [self.master.instance_id] + [s.instance_id for s in self.slaves]
+
+    def spec(self) -> Dict[str, Any]:
+        """Reproducibility export (paper §4: share type+count+config)."""
+        return {
+            "image_id": IMAGE_ID,
+            "region": self.region,
+            "instance_type": self.slaves[0].instance_type if self.slaves
+            else self.master.instance_type,
+            "n_slaves": len(self.slaves),
+            "spot": self.spot,
+            "chips_per_host": self.slaves[0].chips if self.slaves else 0,
+        }
+
+
+class ClusterProvisioner:
+    _kp_counter = itertools.count(1)
+
+    def __init__(self, cloud: SimCloud, *, region: str, access_key_id: str,
+                 secret_key: str, deactivate_key_after_discovery: bool = False):
+        self.cloud = cloud
+        self.region = region
+        self.access_key_id = access_key_id
+        self.secret_key = secret_key
+        self.deactivate = deactivate_key_after_discovery
+
+    # ------------------------------------------------------------ helpers --
+    def _gen_keypair(self, sec: SecurityState) -> None:
+        sec.keypair_generation += 1
+        seed = f"{self.region}:{sec.keypair_generation}:{next(self._kp_counter)}"
+        sec.cluster_keypair = hashlib.sha256(seed.encode()).hexdigest()[:32]
+
+    def _boot_slaves(self, n: int, instance_type: str, spot: bool,
+                     log: EventLog) -> List[Instance]:
+        slaves = self.cloud.run_instances(
+            count=n, instance_type=instance_type, region=self.region,
+            image_id=IMAGE_ID, access_key_id=self.access_key_id,
+            user_data={"role": "slave", "access_key_id": self.access_key_id},
+            spot=spot)
+        for i, inst in enumerate(slaves):
+            log.emit(self.cloud.clock, f"slave-boot-{i}", "spawn_slave",
+                     instance_id=inst.instance_id)
+            log.emit(self.cloud.clock, f"slave-boot-{i}", "create_temp_user",
+                     password="<AWS_ACCESS_KEY_ID>")
+        self.cloud._advance(LATENCY["pkg_install_agent"])
+        for i, inst in enumerate(slaves):
+            log.emit(self.cloud.clock, f"slave-boot-{i}", "install_agent",
+                     instance_id=inst.instance_id)
+        return slaves
+
+    # ---------------------------------------------------------- provision --
+    def provision(self, *, n_slaves: int, instance_type: str = "tpu-host-v5e-8",
+                  spot: bool = False, log: Optional[EventLog] = None) -> Cluster:
+        log = log or EventLog()
+        c = self.cloud
+
+        slaves = self._boot_slaves(n_slaves, instance_type, spot, log)
+
+        master = c.run_instances(
+            count=1, instance_type=instance_type, region=self.region,
+            image_id=IMAGE_ID, access_key_id=self.access_key_id,
+            user_data={"role": "master", "access_key_id": self.access_key_id,
+                       "secret_key": self.secret_key, "region": self.region,
+                       "deactivate_key": self.deactivate})[0]
+        log.emit(c.clock, "master", "spawn_master",
+                 instance_id=master.instance_id)
+
+        # 1. master queries EC2 for slaves in the region
+        found = [i for i in c.describe_instances(region=self.region,
+                                                 access_key_id=self.access_key_id)
+                 if i.user_data.get("role") == "slave"
+                 and i.state == InstanceState.RUNNING]
+        log.emit(c.clock, "master", "query_ec2_slaves", found=len(found))
+
+        # 2. hostname assignment + hosts file
+        directory = NodeDirectory()
+        directory.enumerate(master, found)
+        log.emit(c.clock, "master", "assign_hostnames",
+                 hostnames=[n.hostname for n in directory.slaves()])
+        log.emit(c.clock, "master", "update_hosts_file",
+                 sha=hashlib.sha256(directory.hosts_file().encode())
+                 .hexdigest()[:8])
+
+        # 3. cluster key-pair generation + distribution over temp user
+        sec = SecurityState(temp_user_active={s.instance_id: True
+                                              for s in found},
+                            cluster_keypair=None)
+        self._gen_keypair(sec)
+        log.emit(c.clock, "master", "generate_keypair",
+                 generation=sec.keypair_generation)
+        c._advance(LATENCY["ssh_roundtrip"])  # parallel fan-out
+        for n in directory.slaves():
+            log.emit(c.clock, "master", "distribute_keypair_hosts",
+                     to=n.hostname)
+
+        # 4. temp user deletion (password auth window closes)
+        for s in found:
+            sec.temp_user_active[s.instance_id] = False
+        log.emit(c.clock, "master", "delete_temp_user", count=len(found))
+
+        # 5. tag instances with their roles
+        c.create_tags([master.instance_id], {"instacluster:role": "master"},
+                      self.access_key_id)
+        for n in directory.slaves():
+            c.create_tags([n.instance_id],
+                          {"instacluster:role": n.hostname},
+                          self.access_key_id)
+        log.emit(c.clock, "master", "tag_instances",
+                 count=1 + len(found))
+
+        # 6. optional AWS key deactivation (paper: advisable unless spot)
+        if self.deactivate:
+            if spot:
+                log.emit(c.clock, "master", "skip_key_deactivation",
+                         reason="spot instances need live keys for restarts")
+            else:
+                c.deactivate_key(self.access_key_id)
+                log.emit(c.clock, "master", "deactivate_aws_key")
+
+        # 7. service-provisioning server (Ambari analogue)
+        c._advance(LATENCY["pkg_install_server"])
+        log.emit(c.clock, "master", "install_ambari_server", port=8080)
+        log.emit(c.clock, "master", "start_ambari_server")
+
+        return Cluster(region=self.region, master=master, slaves=found,
+                       directory=directory, security=sec,
+                       access_key_id=self.access_key_id,
+                       secret_key=self.secret_key, log=log, spot=spot)
+
+    # --------------------------------------------------------- rediscovery --
+    def rediscover(self, cluster: Cluster) -> List[str]:
+        """After restart: re-query EC2, remap hostname->IP, redistribute the
+        hosts file, regenerate + redistribute the cluster key-pair (paper:
+        key-pair is revoked and regenerated after each full restart)."""
+        c = self.cloud
+        log = cluster.log
+        insts = c.describe_instances(region=self.region,
+                                     access_key_id=self.access_key_id)
+        log.emit(c.clock, "master", "requery_ec2", found=len(insts))
+        changed = cluster.directory.remap_ips(insts)
+        log.emit(c.clock, "master", "remap_private_ips", changed=changed)
+        self._gen_keypair(cluster.security)
+        log.emit(c.clock, "master", "regenerate_keypair",
+                 generation=cluster.security.keypair_generation)
+        c._advance(LATENCY["ssh_roundtrip"])
+        log.emit(c.clock, "master", "redistribute_hosts_file",
+                 to=[n.hostname for n in cluster.directory.slaves()])
+        return changed

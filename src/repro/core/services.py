@@ -1,0 +1,162 @@
+"""Service provisioning — the Ambari-analogue server, agents and catalog.
+
+The paper delegates service provisioning to Ambari: a server on the master
+installs/configures/starts services on agent nodes and watches heartbeats.
+Here the "services" are the framework's subsystems (data pipeline, trainer,
+serving engine, checkpoint store, monitor, interaction hub) plus the paper's
+Table-1 Big-Data catalog mapped onto them, and Table-2's ports preserved.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.events import EventLog
+from repro.core.heartbeat import HeartbeatMonitor
+from repro.core.provisioner import Cluster
+from repro.core.simcloud import LATENCY, SimCloud
+
+# ---------------------------------------------------------------------------
+# Table 2 (paper) + Ambari port, extended with framework endpoints
+# ---------------------------------------------------------------------------
+PORTS = {
+    "ambari": 8080,
+    "spark-driver": 7077,
+    "spark-webui": 8888,
+    "spark-jobserver": 8090,
+    "hue": 8808,
+    # framework endpoints
+    "train": 7077,          # the Spark-analogue compute service
+    "serve": 8090,
+    "datastore": 9000,      # HDFS namenode-analogue
+    "monitor": 8661,
+}
+
+# ---------------------------------------------------------------------------
+# Table 1 (paper): service -> (provisioning support, interaction support)
+# Mapped onto framework analogues; n/s entries reproduced faithfully.
+# ---------------------------------------------------------------------------
+SERVICE_MATRIX = {
+    #  name              provisioned_by   interaction    framework analogue
+    "hdfs":            ("ambari",        "hue",          "datastore"),
+    "yarn":            ("ambari",        "hue",          "scheduler"),
+    "tez":             ("ambari",        None,           "compiler-cache"),
+    "hive":            ("ambari",        "hue",          "metrics-sql"),
+    "hbase":           ("ambari",        "hue",          "kvstore"),
+    "pig":             ("ambari",        "hue",          "batch-script"),
+    "sqoop":           ("ambari",        "hue",          "data-import"),
+    "oozie":           ("ambari",        "hue",          "workflow"),
+    "zookeeper":       ("ambari",        "hue",          "coordination"),
+    "falcon":          ("ambari",        None,           "lineage"),
+    "storm":           ("ambari",        "native",       "stream"),
+    "flume":           ("ambari",        None,           "log-ingest"),
+    "slider":          ("ambari",        None,           "long-running"),
+    "knox":            ("ambari",        None,           "gateway"),
+    "kafka":           ("ambari",        None,           "queue"),
+    "spark":           ("ambari",        "hue",          "train"),        # *
+    "impala":          (None,            "hue",          "serve"),
+    "hue":             ("ambari*",       "native",       "interaction"),  # * = this paper's contribution
+    "nagios":          ("ambari",        "ambari",       "monitor"),
+    "ganglia":         ("ambari",        "ambari",       "monitor"),
+}
+
+
+class ServiceState(enum.Enum):
+    INSTALLED = "installed"
+    STARTED = "started"
+    STOPPED = "stopped"
+    FAILED = "failed"
+
+
+@dataclasses.dataclass
+class ServiceInstance:
+    name: str
+    port: Optional[int]
+    placement: List[str]                 # hostnames
+    state: ServiceState
+    config: Dict[str, Any]
+
+
+class AmbariServer:
+    """Service-provisioning server running on the cluster master."""
+
+    def __init__(self, cloud: SimCloud, cluster: Cluster,
+                 monitor: Optional[HeartbeatMonitor] = None):
+        self.cloud = cloud
+        self.cluster = cluster
+        self.monitor = monitor or HeartbeatMonitor()
+        self.services: Dict[str, ServiceInstance] = {}
+        self.port = PORTS["ambari"]
+        for node in cluster.directory.slaves():
+            self.monitor.register(node.hostname, now=cloud.clock)
+
+    # ------------------------------------------------------------ catalog --
+    @staticmethod
+    def available_services() -> List[str]:
+        return sorted(SERVICE_MATRIX)
+
+    def suggest_config(self, name: str) -> Dict[str, Any]:
+        """Ambari-style suggested configuration; user may override."""
+        slaves = self.cluster.directory.slaves()
+        return {
+            "placement": [n.hostname for n in slaves],
+            "port": PORTS.get(SERVICE_MATRIX.get(name, (0, 0, name))[2],
+                              PORTS.get(name)),
+            "replicas": max(1, len(slaves) // 2) if name == "hdfs"
+            else len(slaves),
+        }
+
+    # ------------------------------------------------------------- install --
+    def install(self, names: List[str],
+                config_overrides: Optional[Dict[str, Dict[str, Any]]] = None
+                ) -> List[ServiceInstance]:
+        """Install a service selection (one install latency per wave — the
+        agents work in parallel, which is where the paper's speedup lives)."""
+        out = []
+        self.cloud._advance(LATENCY["service_install"])
+        for name in names:
+            if name not in SERVICE_MATRIX:
+                raise KeyError(f"unknown service {name!r} (Table 1)")
+            prov = SERVICE_MATRIX[name][0]
+            if prov is None:
+                raise ValueError(
+                    f"service {name!r} has no provisioning support (n/s in "
+                    f"Table 1); install its backing analogue instead")
+            cfg = self.suggest_config(name)
+            cfg.update((config_overrides or {}).get(name, {}))
+            svc = ServiceInstance(name=name, port=cfg.get("port"),
+                                  placement=cfg["placement"],
+                                  state=ServiceState.INSTALLED, config=cfg)
+            self.services[name] = svc
+            self.cluster.log.emit(self.cloud.clock, "ambari",
+                                  "install_service", service=name,
+                                  placement=len(cfg["placement"]))
+            out.append(svc)
+        return out
+
+    def start(self, name: str) -> ServiceInstance:
+        svc = self.services[name]
+        self.cloud._advance(LATENCY["service_start"])
+        svc.state = ServiceState.STARTED
+        self.cluster.log.emit(self.cloud.clock, "ambari", "start_service",
+                              service=name, port=svc.port)
+        return svc
+
+    def stop(self, name: str) -> None:
+        svc = self.services[name]
+        svc.state = ServiceState.STOPPED
+        self.cluster.log.emit(self.cloud.clock, "ambari", "stop_service",
+                              service=name)
+
+    def status(self) -> Dict[str, str]:
+        return {n: s.state.value for n, s in self.services.items()}
+
+    # ---------------------------------------------------------- heartbeats --
+    def agent_heartbeat(self, hostname: str,
+                        step_time: Optional[float] = None) -> None:
+        self.monitor.beat(hostname, self.cloud.clock, step_time=step_time)
+
+    def check_agents(self) -> Dict[str, str]:
+        return {h: s.value
+                for h, s in self.monitor.check(self.cloud.clock).items()}

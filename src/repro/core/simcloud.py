@@ -1,0 +1,200 @@
+"""SimCloud — a simulated IaaS with the EC2 surface InstaCluster uses.
+
+The paper provisions on Amazon EC2; this container has no cloud, so the
+control plane runs against a faithful simulation: instances with states
+(pending/running/stopped/terminated), *private IPs that change across
+stop/start* (the paper's central re-discovery problem), tags, user-data,
+spot instances with preemption, and a simulated clock with per-operation
+latencies so bring-up *time* (the paper's headline metric) is measurable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+import random
+from typing import Any, Callable, Dict, List, Optional
+
+# simulated operation latencies (seconds) — calibrated to the paper's
+# narrative (total 4-VM bring-up ~25 min incl. service install)
+LATENCY = {
+    "boot_instance": 55.0,          # EC2 boot + cloud-init
+    "describe": 2.0,
+    "stop_instance": 20.0,
+    "start_instance": 45.0,
+    "tag": 1.0,
+    "ssh_roundtrip": 1.5,           # key/hosts distribution per node
+    "pkg_install_agent": 95.0,      # ambari-agent download+install
+    "pkg_install_server": 160.0,    # ambari-server install+start
+    "service_install": 120.0,       # per service, parallel across nodes
+    "service_start": 30.0,
+}
+
+
+class InstanceState(enum.Enum):
+    PENDING = "pending"
+    RUNNING = "running"
+    STOPPED = "stopped"
+    TERMINATED = "terminated"
+
+
+@dataclasses.dataclass
+class Instance:
+    instance_id: str
+    instance_type: str
+    region: str
+    image_id: str
+    private_ip: str
+    user_data: Dict[str, Any]
+    state: InstanceState = InstanceState.PENDING
+    tags: Dict[str, str] = dataclasses.field(default_factory=dict)
+    spot: bool = False
+    launched_at: float = 0.0
+    # host-level resources (TPU-host flavour): chips per host
+    chips: int = 0
+
+
+class AccessKeyError(RuntimeError):
+    pass
+
+
+class SimCloud:
+    """Deterministic EC2-like API over a simulated clock."""
+
+    INSTANCE_TYPES = {
+        # type -> (chips per host, hourly $)
+        "c4.xlarge": (0, 0.199),
+        "tpu-host-v5e-8": (8, 9.60),
+        "tpu-host-v5e-4": (4, 4.80),
+    }
+
+    def __init__(self, seed: int = 0):
+        self.clock = 0.0
+        self._rng = random.Random(seed)
+        self._ids = itertools.count(1)
+        self.instances: Dict[str, Instance] = {}
+        self.active_keys: Dict[str, str] = {}   # access_key_id -> secret
+        self.api_log: List[str] = []
+        self._preempt_hooks: List[Callable[[Instance], None]] = []
+
+    # ----------------------------------------------------------- helpers --
+    def _advance(self, seconds: float) -> None:
+        self.clock += seconds
+
+    def _new_ip(self) -> str:
+        return ("10.%d.%d.%d" % (self._rng.randrange(256),
+                                 self._rng.randrange(256),
+                                 self._rng.randrange(2, 255)))
+
+    def _check_key(self, access_key_id: str) -> None:
+        if access_key_id not in self.active_keys:
+            raise AccessKeyError(f"inactive or unknown AWS key {access_key_id}")
+
+    # --------------------------------------------------------------- auth --
+    def register_key(self, access_key_id: str, secret: str) -> None:
+        self.active_keys[access_key_id] = secret
+
+    def deactivate_key(self, access_key_id: str) -> None:
+        """Paper §3: optional auto-deactivation after slave discovery."""
+        self.active_keys.pop(access_key_id, None)
+        self.api_log.append(f"deactivate_key {access_key_id}")
+
+    # ---------------------------------------------------------------- api --
+    def run_instances(self, *, count: int, instance_type: str, region: str,
+                      image_id: str, user_data: Dict[str, Any],
+                      access_key_id: str, spot: bool = False) -> List[Instance]:
+        self._check_key(access_key_id)
+        chips = self.INSTANCE_TYPES.get(instance_type, (0, 0.0))[0]
+        out = []
+        for _ in range(count):
+            iid = f"i-{next(self._ids):08x}"
+            inst = Instance(instance_id=iid, instance_type=instance_type,
+                            region=region, image_id=image_id,
+                            private_ip=self._new_ip(), user_data=dict(user_data),
+                            spot=spot, launched_at=self.clock, chips=chips)
+            self.instances[iid] = inst
+            out.append(inst)
+        # instances boot in parallel: one boot latency for the batch
+        self._advance(LATENCY["boot_instance"])
+        for inst in out:
+            inst.state = InstanceState.RUNNING
+        self.api_log.append(f"run_instances x{count} {instance_type} {region}")
+        return out
+
+    def describe_instances(self, *, region: str, access_key_id: str,
+                           filters: Optional[Dict[str, str]] = None
+                           ) -> List[Instance]:
+        self._check_key(access_key_id)
+        self._advance(LATENCY["describe"])
+        out = []
+        for inst in self.instances.values():
+            if inst.region != region or inst.state == InstanceState.TERMINATED:
+                continue
+            if filters and any(inst.tags.get(k) != v
+                               for k, v in filters.items()):
+                continue
+            out.append(inst)
+        return sorted(out, key=lambda i: i.instance_id)
+
+    def create_tags(self, ids: List[str], tags: Dict[str, str],
+                    access_key_id: str) -> None:
+        self._check_key(access_key_id)
+        self._advance(LATENCY["tag"])
+        for iid in ids:
+            self.instances[iid].tags.update(tags)
+        self.api_log.append(f"create_tags {ids} {tags}")
+
+    def stop_instances(self, ids: List[str], access_key_id: str) -> None:
+        self._check_key(access_key_id)
+        self._advance(LATENCY["stop_instance"])
+        for iid in ids:
+            self.instances[iid].state = InstanceState.STOPPED
+        self.api_log.append(f"stop_instances {ids}")
+
+    def start_instances(self, ids: List[str], access_key_id: str) -> None:
+        """Restart: private IPs change — the paper's re-discovery trigger."""
+        self._check_key(access_key_id)
+        self._advance(LATENCY["start_instance"])
+        for iid in ids:
+            inst = self.instances[iid]
+            if inst.state != InstanceState.STOPPED:
+                continue
+            inst.private_ip = self._new_ip()
+            inst.state = InstanceState.RUNNING
+        self.api_log.append(f"start_instances {ids}")
+
+    def terminate_instances(self, ids: List[str], access_key_id: str) -> None:
+        self._check_key(access_key_id)
+        for iid in ids:
+            self.instances[iid].state = InstanceState.TERMINATED
+        self.api_log.append(f"terminate_instances {ids}")
+
+    # --------------------------------------------------- failure injection --
+    def on_preempt(self, fn: Callable[[Instance], None]) -> None:
+        self._preempt_hooks.append(fn)
+
+    def preempt_spot(self, instance_id: str) -> None:
+        """Spot preemption (the paper's cost-saving mode has this risk)."""
+        inst = self.instances[instance_id]
+        assert inst.spot, "only spot instances are preemptible"
+        inst.state = InstanceState.TERMINATED
+        self.api_log.append(f"preempt {instance_id}")
+        for fn in self._preempt_hooks:
+            fn(inst)
+
+    def fail_instance(self, instance_id: str) -> None:
+        inst = self.instances[instance_id]
+        inst.state = InstanceState.TERMINATED
+        self.api_log.append(f"hw_failure {instance_id}")
+        for fn in self._preempt_hooks:
+            fn(inst)
+
+    # ------------------------------------------------------------- billing --
+    def hourly_cost(self, ids: List[str]) -> float:
+        total = 0.0
+        for iid in ids:
+            inst = self.instances[iid]
+            if inst.state == InstanceState.RUNNING:
+                rate = self.INSTANCE_TYPES.get(inst.instance_type, (0, 0.0))[1]
+                total += rate * (0.3 if inst.spot else 1.0)
+        return total

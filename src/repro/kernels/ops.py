@@ -1,0 +1,91 @@
+"""jit'd wrappers over the Pallas kernels (+ pure-jnp combines).
+
+``interpret=True`` runs kernel bodies on CPU (how this container validates
+them); on real TPU deployments pass ``interpret=False``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _fd
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd as _ssd
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "scale", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    scale=None, block_q=128, block_k=128, interpret=False):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "scale", "block_k",
+                                             "interpret"))
+def decode_attention(q, k_cache, v_cache, *, softcap=None, scale=None,
+                     block_k=512, interpret=False):
+    """Flash-decode: partials from the kernel, LSE combine in jnp.
+
+    q: (B,H,d); caches (B,S,KVH,d) -> (B,H,d).
+    """
+    B, H, d = q.shape
+    KVH = k_cache.shape[2]
+    G = H // KVH
+    m, l, o = _fd.decode_attention_partials(
+        q, k_cache, v_cache, softcap=softcap, scale=scale, block_k=block_k,
+        interpret=interpret)
+    m_glob = m.max(axis=1, keepdims=True)                   # (BK,1,G)
+    w = jnp.exp(m - m_glob)
+    l_glob = (l * w).sum(axis=1)                            # (BK,G)
+    o_glob = (o * w[..., None]).sum(axis=1)                 # (BK,G,d)
+    out = o_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+    return out.reshape(B, KVH, G, d).reshape(B, H, d).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, Bm, Cm, *, chunk=128, h0=None, interpret=False):
+    """Full SSD forward via the intra-chunk kernel + jnp inter-chunk scan.
+
+    Same contract as ``repro.models.ssm.ssd_chunked``:
+    x: (B,S,H,P), dt: (B,S,H) fp32, A: (H,), Bm/Cm: (B,S,G,N).
+    Returns (y, h_final).
+    """
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    nc = S // chunk
+    assert nc * chunk == S, (S, chunk)
+
+    xc = x.reshape(B, nc, chunk, H, P)
+    dtc = dt.reshape(B, nc, chunk, H).astype(jnp.float32)
+    bc = jnp.repeat(Bm.reshape(B, nc, chunk, G, N), rep, axis=3)
+    cc = jnp.repeat(Cm.reshape(B, nc, chunk, G, N), rep, axis=3)
+    a = dtc * A.astype(jnp.float32)
+    cum = jnp.cumsum(a, axis=2)                             # (B,nc,Q,H)
+    total = cum[:, :, -1]                                   # (B,nc,H)
+
+    y_diag, states = _ssd.ssd_intra_chunk(xc, bc, cc, cum, dtc,
+                                          interpret=interpret)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P), jnp.float32)
+
+    def body(h_prev, xs):
+        s_c, tot_c = xs
+        return h_prev * jnp.exp(tot_c)[..., None, None] + s_c, h_prev
+
+    h_final, h_prevs = jax.lax.scan(
+        body, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                   # (B,nc,H,N,P)
+
+    y_off = jnp.einsum("bcihn,bchnp->bcihp",
+                       cc.astype(jnp.float32) * jnp.exp(cum)[..., None],
+                       h_prevs, preferred_element_type=jnp.float32)
+    y = (y_diag.astype(jnp.float32) + y_off).reshape(B, S, H, P)
+    return y.astype(x.dtype), h_final

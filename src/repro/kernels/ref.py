@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every kernel (ground truth for allclose tests)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                  scale=None):
+    """Naive full-matrix attention. q: (B,Sq,H,d), k/v: (B,Skv,KVH,d)."""
+    B, Sq, H, d = q.shape
+    Skv, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qf = q.astype(jnp.float32).reshape(B, Sq, KVH, G, d)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, d).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, *, softcap=None, scale=None,
+                         valid_len=None):
+    """q: (B,H,d); caches: (B,S,KVH,d) -> (B,H,d)."""
+    B, H, d = q.shape
+    S, KVH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qf = q.astype(jnp.float32).reshape(B, KVH, G, d)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    if valid_len is not None:
+        ok = jnp.arange(S)[None] < valid_len[:, None]
+        s = jnp.where(ok[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, d).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, Bm, Cm, h0=None):
+    """Sequential SSD recurrence (exact oracle).
+
+    x: (B,S,H,P)  dt: (B,S,H) fp32  A: (H,)  Bm/Cm: (B,S,G,N) with H%G==0.
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T ;  y_t = C_t h_t.
+    Returns y (B,S,H,P), h_final (B,H,N,P) fp32.
+    """
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    xf = x.astype(jnp.float32)
+    bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2)   # (B,S,H,N)
+    cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=2)
+    a = dt.astype(jnp.float32) * A.astype(jnp.float32)     # (B,S,H)
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P), jnp.float32)
+
+    def step(h, t):
+        decay = jnp.exp(a[:, t])[..., None, None]          # (B,H,1,1)
+        upd = jnp.einsum("bhn,bh,bhp->bhnp", bf[:, t], dt[:, t].astype(
+            jnp.float32), xf[:, t])
+        h = h * decay + upd
+        y = jnp.einsum("bhn,bhnp->bhp", cf[:, t], h)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)             # (B,S,H,P)
+    return y, h

@@ -1,0 +1,106 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run, no allocation).
+
+Weak-type-correct, shardable specs for train / prefill / decode steps, plus
+abstract train state (params + Adam m/v + step) with NamedShardings derived
+from the same param schema used for real initialisation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.blueprint import Plan
+from repro.models import model as M
+from repro.models.schema import abstract_params, resolve_pspec
+
+
+def _sds(shape, dtype, mesh, axes, rules):
+    pspec = resolve_pspec(tuple(axes), tuple(shape), rules, mesh)
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype),
+                                sharding=NamedSharding(mesh, pspec))
+
+
+def _merged_rules(plan: Plan) -> Dict[str, Tuple[str, ...]]:
+    return {**plan.param_rules, **plan.act_rules}
+
+
+def abstract_train_state(cfg: ModelConfig, mesh, plan: Plan) -> Dict[str, Any]:
+    params = abstract_params(M.schema(cfg), mesh, plan.param_rules)
+    return {
+        "params": params,
+        "m": abstract_params(M.schema(cfg), mesh, plan.param_rules),
+        "v": abstract_params(M.schema(cfg), mesh, plan.param_rules),
+        "step": jax.ShapeDtypeStruct((), jnp.int32,
+                                     sharding=NamedSharding(mesh,
+                                                            PartitionSpec())),
+    }
+
+
+def abstract_params_only(cfg: ModelConfig, mesh, plan: Plan):
+    p = abstract_params(M.schema(cfg), mesh, plan.param_rules)
+    if getattr(plan, "serve_param_dtype", "float32") == "bfloat16":
+        p = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16,
+                                           sharding=s.sharding)
+            if s.dtype == jnp.dtype(jnp.float32) else s, p)
+    return p
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, plan: Plan,
+                *, with_labels: bool) -> Dict[str, Any]:
+    rules = _merged_rules(plan)
+    B, S = shape.global_batch, shape.seq_len
+    out = {"tokens": _sds((B, S), jnp.int32, mesh, ("batch", None), rules)}
+    if with_labels:
+        out["labels"] = _sds((B, S), jnp.int32, mesh, ("batch", None), rules)
+    if cfg.rope_variant == "mrope":
+        out["positions"] = _sds((3, B, S), jnp.int32, mesh,
+                                (None, "batch", None), rules)
+    if cfg.is_encdec:
+        out["enc_embeds"] = _sds((B, cfg.enc_positions, cfg.d_model),
+                                 jnp.float32, mesh, ("batch", None, None),
+                                 rules)
+    return out
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                   plan: Plan) -> Any:
+    rules = _merged_rules(plan)
+    sch = M.cache_schema(cfg, shape.global_batch, shape.seq_len)
+    return abstract_params(sch, mesh, rules)
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, plan: Plan):
+    """-> (params, cache, tokens, cur_len) SDS tuple for serve_step."""
+    rules = _merged_rules(plan)
+    B = shape.global_batch
+    params = abstract_params_only(cfg, mesh, plan)
+    cache = abstract_cache(cfg, shape, mesh, plan)
+    tokens = _sds((B, 1), jnp.int32, mesh, ("batch", None), rules)
+    cur_len = jax.ShapeDtypeStruct((), jnp.int32,
+                                   sharding=NamedSharding(mesh,
+                                                          PartitionSpec()))
+    return params, cache, tokens, cur_len
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, plan: Plan):
+    """All inputs for the step the shape's kind lowers.
+
+    train   -> {"state": ..., "batch": ...}
+    prefill -> {"params": ..., "batch": ...}
+    decode  -> {"params": ..., "cache": ..., "tokens": ..., "cur_len": ...}
+    """
+    if shape.kind == "train":
+        return {"state": abstract_train_state(cfg, mesh, plan),
+                "batch": batch_specs(cfg, shape, mesh, plan, with_labels=True)}
+    if shape.kind == "prefill":
+        return {"params": abstract_params_only(cfg, mesh, plan),
+                "batch": batch_specs(cfg, shape, mesh, plan,
+                                     with_labels=False)}
+    params, cache, tokens, cur_len = decode_specs(cfg, shape, mesh, plan)
+    return {"params": params, "cache": cache, "tokens": tokens,
+            "cur_len": cur_len}

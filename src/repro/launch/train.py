@@ -1,0 +1,62 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it trains the arch's reduced config end-to-end (the
+full configs are exercised by the dry-run); on a real fleet the same driver
+runs the full config with the blueprint-planned mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs.base import SHAPES, ShapeConfig
+from repro.configs.registry import ARCHS, REDUCED, get_arch, get_reduced
+from repro.core.blueprint import suggest_plan
+from repro.launch.mesh import make_mesh_for
+from repro.optim.adamw import OptimConfig
+from repro.train.trainer import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full published config (needs a real fleet)")
+    ap.add_argument("--data-par", type=int, default=1)
+    ap.add_argument("--model-par", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch) if args.full_config else get_reduced(args.arch)
+    n_dev = args.data_par * args.model_par
+    mesh = make_mesh_for(args.data_par, args.model_par) if n_dev > 1 else None
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    plan = suggest_plan(cfg, shape,
+                        mesh if mesh is not None
+                        else {"data": 1, "model": 1})
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"remat={plan.remat} notes={list(plan.notes)}")
+
+    ocfg = OptimConfig(peak_lr=args.lr,
+                       warmup_steps=max(1, args.steps // 10),
+                       total_steps=args.steps)
+    trainer = Trainer(cfg, ocfg, batch=args.batch, seq=args.seq,
+                      ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                      mesh=mesh, act_rules=plan.act_rules, remat=plan.remat)
+    report = trainer.run(args.steps)
+    print(json.dumps({"final_step": report.final_step,
+                      "loss_first": round(report.losses[0], 4),
+                      "loss_last": round(report.losses[-1], 4),
+                      "restores": report.restores,
+                      "wall_s": round(report.wall_seconds, 1)}))
+
+
+if __name__ == "__main__":
+    main()

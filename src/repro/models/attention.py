@@ -1,0 +1,495 @@
+"""Attention: GQA (+bias/qk-norm/softcap/sliding-window) and MLA (deepseek-v2).
+
+The sequence-level math lives in ``attend`` — a chunked, online-softmax
+(flash-structured) implementation in pure XLA ops. It is the reference path
+used for CPU smoke tests and the multi-pod dry-run; ``repro.kernels``
+contains the Pallas TPU kernels that compute the same function (allclose
+tested) for real deployments.
+
+Causality is exploited *structurally*: the python-level loop over query
+blocks only visits the key/value chunks a block can see, so compiled HLO
+FLOPs match optimal causal attention (this matters for the roofline's
+useful-FLOP ratio).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import soft_cap
+from repro.models.rope import apply_rope, rotary_dim
+from repro.models.schema import ParamSpec
+
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# core chunked attention
+# ---------------------------------------------------------------------------
+
+def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+           causal: bool = True,
+           window: Optional[int] = None,
+           softcap: Optional[float] = None,
+           scale: Optional[float] = None,
+           q_offset: int = 0,
+           q_block: int = 512,
+           kv_block: int = 1024,
+           mask_opt: bool = False) -> jnp.ndarray:
+    """q: (B,Sq,H,hd) k/v: (B,Skv,KVH,hd_v) -> (B,Sq,H,hd_v)."""
+    B, Sq, H, hd = q.shape
+    _, Skv, KVH, hdv = v.shape
+    G = H // KVH
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qr = q.reshape(B, Sq, KVH, G, hd)
+
+    small = Sq * Skv <= 4096 * 4096 and (Sq <= q_block or Skv <= kv_block
+                                         or not causal)
+    if small or (not causal and Skv <= 4096):
+        # short-kv non-causal (e.g. cross-attention to a 1500-frame encoder)
+        return _direct(qr, k, v, causal, window, softcap, scale, q_offset
+                       ).reshape(B, Sq, H, hdv)
+
+    # scale blocks with sequence length to bound HLO op count
+    q_block = min(2048, max(q_block, Sq // 32))
+    kv_block = min(4096, max(kv_block, Skv // 16))
+    n_q = -(-Sq // q_block)
+    outs = []
+    for i in range(n_q):
+        q0, q1 = i * q_block, min((i + 1) * q_block, Sq)
+        qi = qr[:, q0:q1]
+        if causal:
+            kend = min(Skv, -(-(q_offset + q1) // kv_block) * kv_block)
+        else:
+            kend = Skv
+        kstart = 0
+        if window is not None:
+            kstart = max(0, (q_offset + q0 - (window - 1)) // kv_block * kv_block)
+        if not mask_opt:
+            outs.append(_scan_chunk(qi, k[:, kstart:kend], v[:, kstart:kend],
+                                    causal, window, softcap, scale,
+                                    q_offset + q0, kstart, kv_block))
+            continue
+        # §Perf lever: interior kv chunks are fully visible to every query in
+        # the block — no mask tensors needed there. Only the diagonal chunk
+        # (causal) and the window's trailing edge get the masked path.
+        qlo, qhi = q_offset + q0, q_offset + q1 - 1
+        interior_end = kstart
+        for j in range(kstart, kend, kv_block):
+            k_hi = j + kv_block - 1
+            ok = (not causal or k_hi <= qlo) and \
+                (window is None or (qhi - j) < window)
+            if ok and j == interior_end:
+                interior_end = j + kv_block
+            else:
+                break
+        carry = None
+        if interior_end > kstart:
+            carry = _scan_chunk(qi, k[:, kstart:interior_end],
+                                v[:, kstart:interior_end],
+                                False, None, softcap, scale,
+                                q_offset + q0, kstart, kv_block,
+                                return_carry=True)
+        if interior_end < kend:
+            carry = _scan_chunk(qi, k[:, interior_end:kend],
+                                v[:, interior_end:kend],
+                                causal, window, softcap, scale,
+                                q_offset + q0, interior_end, kv_block,
+                                carry=carry, return_carry=True)
+        m, l, acc = carry
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        outs.append(jnp.moveaxis(o, 3, 1).astype(v.dtype))
+    return jnp.concatenate(outs, axis=1).reshape(B, Sq, H, hdv)
+
+
+def _mask(q_pos, k_pos, causal, window):
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+    return m
+
+
+def _direct(qr, k, v, causal, window, softcap, scale, q_offset):
+    B, Sq, KVH, G, hd = qr.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = soft_cap(s, softcap)
+    if causal or window is not None:
+        q_pos = q_offset + jnp.arange(Sq)
+        m = _mask(q_pos, jnp.arange(Skv), causal, window)
+        s = jnp.where(m[None, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(v.dtype)
+
+
+def _scan_chunk(qi, ks, vs, causal, window, softcap, scale,
+                q_pos0, k_pos0, kv_block, carry=None, return_carry=False):
+    """Online-softmax over kv chunks for one query block.
+
+    ``causal=False, window=None`` is the unmasked interior path — no mask
+    tensors are materialised (§Perf lever ``attn_mask_opt``).
+    """
+    B, qb, KVH, G, hd = qi.shape
+    Sk = ks.shape[1]
+    hdv = vs.shape[-1]
+    nkc = Sk // kv_block
+    assert nkc * kv_block == Sk, (Sk, kv_block)
+    kc = jnp.moveaxis(ks.reshape(B, nkc, kv_block, KVH, -1), 1, 0)
+    vc = jnp.moveaxis(vs.reshape(B, nkc, kv_block, KVH, -1), 1, 0)
+    kpos = (k_pos0 + jnp.arange(Sk)).reshape(nkc, kv_block)
+    q_pos = q_pos0 + jnp.arange(qb)
+
+    if carry is None:
+        carry = (jnp.full((B, KVH, G, qb), _NEG, jnp.float32),
+                 jnp.zeros((B, KVH, G, qb), jnp.float32),
+                 jnp.zeros((B, KVH, G, qb, hdv), jnp.float32))
+
+    masked = causal or window is not None
+
+    def body(c, xs):
+        m, l, acc = c
+        kcb, vcb, kp = xs
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qi, kcb,
+                       preferred_element_type=jnp.float32) * scale
+        s = soft_cap(s, softcap)
+        if masked:
+            msk = _mask(q_pos, kp, causal, window)
+            s = jnp.where(msk[None, None, None], s, _NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vcb.dtype), vcb,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    from repro.models.flags import unroll_scans
+    if unroll_scans():
+        for j in range(nkc):
+            carry, _ = body(carry, (kc[j], vc[j], kpos[j]))
+    else:
+        carry, _ = jax.lax.scan(body, carry, (kc, vc, kpos))
+    if return_carry:
+        return carry
+    m, l, acc = carry
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 3, 1).astype(vs.dtype)  # (B,qb,KVH,G,hdv)
+
+
+def decode_attend(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                  *, valid_len: Optional[jnp.ndarray] = None,
+                  softcap: Optional[float] = None,
+                  scale: Optional[float] = None) -> jnp.ndarray:
+    """Single-position attention over a full cache.
+
+    q: (B,1,H,hd); caches: (B,S,KVH,hd). valid_len masks slots >= valid_len.
+    """
+    B, _, H, hd = q.shape
+    S, KVH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qr = q.reshape(B, KVH, G, hd)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qr, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = soft_cap(s, softcap)
+    if valid_len is not None:
+        ok = jnp.arange(S)[None] < valid_len[:, None]          # (B,S)
+        s = jnp.where(ok[:, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, -1).astype(v_cache.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA module
+# ---------------------------------------------------------------------------
+
+def gqa_schema(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KVH = cfg.n_heads, cfg.n_kv_heads
+    p = {
+        "wq": ParamSpec((d, H * hd), ("embed", "heads")),
+        "wk": ParamSpec((d, KVH * hd), ("embed", "kv_heads")),
+        "wv": ParamSpec((d, KVH * hd), ("embed", "kv_heads")),
+        "wo": ParamSpec((H * hd, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ParamSpec((H * hd,), ("heads",), init="zeros")
+        p["bk"] = ParamSpec((KVH * hd,), ("kv_heads",), init="zeros")
+        p["bv"] = ParamSpec((KVH * hd,), ("kv_heads",), init="zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = ParamSpec((hd,), (None,), init="ones")
+        p["k_norm"] = ParamSpec((hd,), (None,), init="ones")
+    return p
+
+
+def _qkv(cfg: ModelConfig, p, x, cos, sin, positions_offset_rope=True):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    H, KVH = cfg.n_heads, cfg.n_kv_heads
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KVH, hd)
+    v = v.reshape(B, S, KVH, hd)
+    if cfg.qk_norm:
+        from repro.models.layers import rmsnorm
+        q = rmsnorm(q, p["q_norm"], cfg.rms_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.rms_eps)
+    rd = rotary_dim(cfg)
+    q = apply_rope(q, cos, sin, rd)
+    k = apply_rope(k, cos, sin, rd)
+    return q, k, v
+
+
+def gqa_train(cfg: ModelConfig, p, x, cos, sin, *, local: bool,
+              causal: bool = True, q_offset: int = 0):
+    q, k, v = _qkv(cfg, p, x, cos, sin)
+    window = cfg.sliding_window if local else None
+    o = attend(q, k, v, causal=causal, window=window, softcap=cfg.attn_softcap,
+               q_offset=q_offset, mask_opt=cfg.attn_mask_opt)
+    B, S = x.shape[:2]
+    return o.reshape(B, S, -1) @ p["wo"].astype(x.dtype)
+
+
+def gqa_prefill(cfg: ModelConfig, p, x, cos, sin, *, local: bool):
+    """Returns (y, kv_to_cache)."""
+    q, k, v = _qkv(cfg, p, x, cos, sin)
+    window = cfg.sliding_window if local else None
+    o = attend(q, k, v, causal=True, window=window, softcap=cfg.attn_softcap,
+               mask_opt=cfg.attn_mask_opt)
+    B, S = x.shape[:2]
+    y = o.reshape(B, S, -1) @ p["wo"].astype(x.dtype)
+    return y, {"k": k, "v": v}
+
+
+def quantize_kv(x: jnp.ndarray):
+    """Per-(position, kv-head) symmetric int8. x: (..., hd)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def gqa_decode(cfg: ModelConfig, p, x, cos, sin, cache: Dict[str, jnp.ndarray],
+               cur_len: jnp.ndarray, *, local: bool):
+    """x: (B,1,D). Writes new kv at slot cur_len % capacity, attends cache.
+
+    Returns (y, new_cache). The cache for a local (sliding-window) layer has
+    capacity == window, so the ring-write implements the window eviction.
+    With ``cfg.cache_quant`` the cache holds int8 values + per-(pos, head)
+    scales (§Perf lever: halves cache HBM footprint and read bytes).
+    """
+    B = x.shape[0]
+    dt = x.dtype
+    q, k_new, v_new = _qkv(cfg, p, x, cos, sin)
+    cap = cache["k"].shape[1]
+    slot = (cur_len % cap).astype(jnp.int32)
+    if cfg.cache_quant:
+        k8, ks = quantize_kv(k_new)
+        v8, vs_ = quantize_kv(v_new)
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k8, (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v8, (0, slot, 0, 0))
+        k_scale = jax.lax.dynamic_update_slice(cache["k_scale"], ks,
+                                               (0, slot, 0))
+        v_scale = jax.lax.dynamic_update_slice(cache["v_scale"], vs_,
+                                               (0, slot, 0))
+        k_deq = (k_cache.astype(dt) * k_scale[..., None].astype(dt))
+        v_deq = (v_cache.astype(dt) * v_scale[..., None].astype(dt))
+        new_cache = {"k": k_cache, "v": v_cache,
+                     "k_scale": k_scale, "v_scale": v_scale}
+    else:
+        k_deq = k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new,
+                                                       (0, slot, 0, 0))
+        v_deq = v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new,
+                                                       (0, slot, 0, 0))
+        new_cache = {"k": k_cache, "v": v_cache}
+    valid = jnp.minimum(cur_len + 1, cap) * jnp.ones((B,), jnp.int32)
+    o = decode_attend(q, k_deq, v_deq, valid_len=valid,
+                      softcap=cfg.attn_softcap)
+    y = o.reshape(B, 1, -1) @ p["wo"].astype(x.dtype)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2): low-rank kv compression + decoupled rope
+# ---------------------------------------------------------------------------
+
+def mla_schema(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ql, kl = cfg.q_lora_rank, cfg.kv_lora_rank
+    # "lora": up-projections sharded on their *input* dim (baseline) — every
+    # layer all-reduces the (B,S,H*dh) outputs. "heads": Megatron
+    # column-parallel — lora activations replicated (tiny), outputs
+    # head-sharded, single AR after wo (§Perf lever, deepseek train cell).
+    heads_mode = cfg.mla_shard == "heads"
+    lora_axes = ("embed", None) if heads_mode else ("embed", "lora")
+    up_axes = (None, "heads") if heads_mode else ("lora", "heads")
+    p: Dict[str, ParamSpec] = {
+        "wkv_a": ParamSpec((d, kl), lora_axes),
+        "wk_pe": ParamSpec((d, dr), ("embed", None)),
+        "kv_norm": ParamSpec((kl,), (None,), init="ones"),
+        "wkv_b": ParamSpec((kl, H * (dn + dv)), up_axes),
+        "wo": ParamSpec((H * dv, d), ("heads", "embed")),
+    }
+    if ql:
+        p["wq_a"] = ParamSpec((d, ql), lora_axes)
+        p["q_norm"] = ParamSpec((ql,), (None,), init="ones")
+        p["wq_b"] = ParamSpec((ql, H * (dn + dr)), up_axes)
+    else:
+        p["wq"] = ParamSpec((d, H * (dn + dr)), ("embed", "heads"))
+    return p
+
+
+def _mla_q(cfg, p, x, cos, sin):
+    from repro.models.layers import rmsnorm
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    dt = x.dtype
+    if cfg.q_lora_rank:
+        qc = rmsnorm(x @ p["wq_a"].astype(dt), p["q_norm"], cfg.rms_eps)
+        q = qc @ p["wq_b"].astype(dt)
+    else:
+        q = x @ p["wq"].astype(dt)
+    q = q.reshape(B, S, H, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe = apply_rope(q_pe, cos, sin, dr)
+    return q_nope, q_pe
+
+
+def _mla_ckv(cfg, p, x, cos, sin):
+    from repro.models.layers import rmsnorm
+    dt = x.dtype
+    c_kv = rmsnorm(x @ p["wkv_a"].astype(dt), p["kv_norm"], cfg.rms_eps)
+    k_pe = (x @ p["wk_pe"].astype(dt))[:, :, None, :]       # (B,S,1,dr)
+    k_pe = apply_rope(k_pe, cos, sin, cfg.qk_rope_head_dim)
+    return c_kv, k_pe[:, :, 0, :]
+
+
+def mla_train(cfg: ModelConfig, p, x, cos, sin, **_):
+    """Direct (non-absorbed) MLA for train/prefill."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    dt = x.dtype
+    q_nope, q_pe = _mla_q(cfg, p, x, cos, sin)
+    c_kv, k_pe = _mla_ckv(cfg, p, x, cos, sin)
+    kv = (c_kv @ p["wkv_b"].astype(dt)).reshape(B, S, H, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (B, S, H, dr))], axis=-1)
+    o = attend(q, k, v, causal=True, scale=1.0 / math.sqrt(dn + dr),
+               mask_opt=cfg.attn_mask_opt)
+    return o.reshape(B, S, -1) @ p["wo"].astype(dt)
+
+
+def mla_prefill(cfg: ModelConfig, p, x, cos, sin, **_):
+    y = mla_train(cfg, p, x, cos, sin)
+    c_kv, k_pe = _mla_ckv(cfg, p, x, cos, sin)
+    return y, {"c_kv": c_kv, "k_pe": k_pe}
+
+
+def mla_decode(cfg: ModelConfig, p, x, cos, sin, cache, cur_len, **_):
+    """Weight-absorbed MLA decode: attends the *compressed* cache directly."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kl = cfg.kv_lora_rank
+    dt = x.dtype
+    q_nope, q_pe = _mla_q(cfg, p, x, cos, sin)        # (B,1,H,dn),(B,1,H,dr)
+    c_new, pe_new = _mla_ckv(cfg, p, x, cos, sin)     # (B,1,kl),(B,1,dr)
+    cap = cache["c_kv"].shape[1]
+    slot = (cur_len % cap).astype(jnp.int32)
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_new, (0, slot, 0))
+    k_pe = jax.lax.dynamic_update_slice(cache["k_pe"], pe_new, (0, slot, 0))
+    wkv_b = p["wkv_b"].astype(dt).reshape(kl, H, dn + dv)
+    w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]
+    # absorb W_UK into q: (B,H,kl)
+    q_abs = jnp.einsum("bohd,chd->bhc", q_nope, w_uk)
+    s = (jnp.einsum("bhc,bkc->bhk", q_abs, c_kv,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bohd,bkd->bhk", q_pe, k_pe,
+                      preferred_element_type=jnp.float32))
+    s = s / math.sqrt(dn + dr)
+    valid = jnp.minimum(cur_len + 1, cap) * jnp.ones((B,), jnp.int32)
+    ok = jnp.arange(cap)[None] < valid[:, None]
+    s = jnp.where(ok[:, None], s, _NEG)
+    attn = jax.nn.softmax(s, axis=-1).astype(dt)
+    ctx = jnp.einsum("bhk,bkc->bhc", attn, c_kv)      # (B,H,kl)
+    o = jnp.einsum("bhc,chd->bhd", ctx, w_uv)         # (B,H,dv)
+    y = o.reshape(B, 1, H * dv) @ p["wo"].astype(dt)
+    return y, {"c_kv": c_kv, "k_pe": k_pe}
+
+
+# dispatch tables -----------------------------------------------------------
+
+def attn_schema(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    return mla_schema(cfg) if cfg.attn_impl == "mla" else gqa_schema(cfg)
+
+
+def attn_train(cfg, p, x, cos, sin, *, local=False):
+    if cfg.attn_impl == "mla":
+        return mla_train(cfg, p, x, cos, sin)
+    return gqa_train(cfg, p, x, cos, sin, local=local)
+
+
+def attn_prefill(cfg, p, x, cos, sin, *, local=False):
+    if cfg.attn_impl == "mla":
+        return mla_prefill(cfg, p, x, cos, sin)
+    return gqa_prefill(cfg, p, x, cos, sin, local=local)
+
+
+def attn_decode(cfg, p, x, cos, sin, cache, cur_len, *, local=False):
+    if cfg.attn_impl == "mla":
+        return mla_decode(cfg, p, x, cos, sin, cache, cur_len)
+    return gqa_decode(cfg, p, x, cos, sin, cache, cur_len, local=local)
+
+
+def kv_cache_spec(cfg: ModelConfig, batch: int, capacity: int,
+                  local: bool = False) -> Dict[str, Any]:
+    """(shape, dtype, logical axes) for one layer's cache entries."""
+    dt = cfg.dtype
+    if cfg.attn_impl == "mla":
+        return {
+            "c_kv": ((batch, capacity, cfg.kv_lora_rank),
+                     ("batch", "cache_seq", None), dt),
+            "k_pe": ((batch, capacity, cfg.qk_rope_head_dim),
+                     ("batch", "cache_seq", None), dt),
+        }
+    hd = cfg.resolved_head_dim
+    cap = min(capacity, cfg.sliding_window) if (local and cfg.sliding_window) \
+        else capacity
+    kv_dt = "int8" if cfg.cache_quant else dt
+    out = {
+        "k": ((batch, cap, cfg.n_kv_heads, hd),
+              ("batch", "cache_seq", "kv_heads", None), kv_dt),
+        "v": ((batch, cap, cfg.n_kv_heads, hd),
+              ("batch", "cache_seq", "kv_heads", None), kv_dt),
+    }
+    if cfg.cache_quant:
+        out["k_scale"] = ((batch, cap, cfg.n_kv_heads),
+                          ("batch", "cache_seq", "kv_heads"), "float32")
+        out["v_scale"] = ((batch, cap, cfg.n_kv_heads),
+                          ("batch", "cache_seq", "kv_heads"), "float32")
+    return out

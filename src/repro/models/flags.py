@@ -1,0 +1,29 @@
+"""Global model-tracing flags.
+
+``unroll_scans`` — when True, model code unrolls its internal lax.scans
+(layer stack, attention kv loop, loss chunks) into python loops. Used by the
+dry-run's roofline measurement: XLA's cost_analysis counts a while-loop body
+once, so accurate FLOP/byte/collective accounting needs unrolled HLO. The
+dry-run compiles unrolled 1-period and 2-period depth variants and
+extrapolates linearly (exact for homogeneous periods).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+_STATE = threading.local()
+
+
+def unroll_scans() -> bool:
+    return getattr(_STATE, "unroll", False)
+
+
+@contextlib.contextmanager
+def use_unrolled_scans(on: bool = True):
+    prev = unroll_scans()
+    _STATE.unroll = on
+    try:
+        yield
+    finally:
+        _STATE.unroll = prev

@@ -1,0 +1,94 @@
+"""Common layers: RMSNorm, gated MLP, embeddings, logits head."""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.schema import ParamSpec
+
+
+def soft_cap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------- RMSNorm ---
+
+def rmsnorm_schema(dim: int) -> ParamSpec:
+    return ParamSpec((dim,), (None,), init="ones")
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float,
+            plus_one: bool = False) -> jnp.ndarray:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    w = scale.astype(jnp.float32)
+    if plus_one:  # gemma-style (1 + w)
+        w = 1.0 + w
+    return (y * w).astype(dtype)
+
+
+# ------------------------------------------------------------------- MLP ---
+
+def mlp_schema(cfg: ModelConfig, d_ff: int,
+               ff_axis: str = "ff") -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    out = {
+        "w_up": ParamSpec((d, d_ff), ("embed", ff_axis)),
+        "w_down": ParamSpec((d_ff, d), (ff_axis, "embed")),
+    }
+    if cfg.mlp_gated:
+        out["w_gate"] = ParamSpec((d, d_ff), ("embed", ff_axis))
+    return out
+
+
+def _act(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    return jax.nn.silu(x)
+
+
+def mlp(cfg: ModelConfig, p: Dict[str, Any], x: jnp.ndarray) -> jnp.ndarray:
+    dt = x.dtype
+    u = x @ p["w_up"].astype(dt)
+    if cfg.mlp_gated:
+        u = _act(x @ p["w_gate"].astype(dt), cfg.mlp_act) * u
+    else:
+        u = _act(u, cfg.mlp_act)
+    return u @ p["w_down"].astype(dt)
+
+
+# ----------------------------------------------------------- Embeddings ---
+
+def embed_schema(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    # vocab-only sharding: FSDP-sharding the d_model dim of a gathered table
+    # triggers SPMD "involuntary full rematerialization" (replicates the
+    # gather output); vocab-sharded gathers partition cleanly (mask+psum).
+    out = {"tok": ParamSpec((cfg.padded_vocab, cfg.d_model),
+                            ("vocab", None), init="embed")}
+    if not cfg.tie_embeddings:
+        out["unembed"] = ParamSpec((cfg.d_model, cfg.padded_vocab),
+                                   (None, "vocab"), init="embed")
+    return out
+
+
+def embed(cfg: ModelConfig, p: Dict[str, Any], tokens: jnp.ndarray) -> jnp.ndarray:
+    x = jnp.take(p["tok"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.scale_embed:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def logits(cfg: ModelConfig, p: Dict[str, Any], x: jnp.ndarray) -> jnp.ndarray:
+    """(B, S, D) -> (B, S, padded_vocab) float32 with final softcap."""
+    w = p["unembed"] if not cfg.tie_embeddings else p["tok"].T
+    out = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype),
+                     preferred_element_type=jnp.float32)
+    return soft_cap(out, cfg.final_softcap)

@@ -1,0 +1,164 @@
+"""LM façade: schema, init, loss (chunked CE), prefill, decode, cache specs."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import soft_cap
+from repro.models.schema import ParamSpec, init_params
+from repro.models.transformer import (depth_plan, encdec_forward, lm_forward,
+                                      lm_schema)
+from repro.parallel.context import constrain
+
+_NEG = -1e30
+
+
+def schema(cfg: ModelConfig) -> Dict[str, Any]:
+    return lm_schema(cfg)
+
+
+def init(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    return init_params(schema(cfg), key)
+
+
+# ---------------------------------------------------------------------------
+# loss: chunked cross-entropy (never materialises (B,S,V))
+# ---------------------------------------------------------------------------
+
+def chunked_ce(cfg: ModelConfig, embed_params, hidden: jnp.ndarray,
+               labels: jnp.ndarray, chunk: int = 1024) -> jnp.ndarray:
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    nc = S // chunk
+    assert nc * chunk == S, (S, chunk)
+    w = (embed_params["unembed"] if not cfg.tie_embeddings
+         else embed_params["tok"].T)
+    hs = jnp.moveaxis(hidden.reshape(B, nc, chunk, D), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+    vocab_ok = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+
+    @jax.checkpoint
+    def body(carry, xs):
+        h, l = xs
+        lg = jnp.einsum("bcd,dv->bcv", h, w.astype(h.dtype),
+                        preferred_element_type=jnp.float32)
+        lg = soft_cap(lg, cfg.final_softcap)
+        lg = jnp.where(vocab_ok[None, None], lg, _NEG)
+        lg = constrain(lg, ("batch", None, "vocab_act"))
+        lse = jax.scipy.special.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, l[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    from repro.models.flags import unroll_scans
+    if unroll_scans():
+        total = jnp.zeros((), jnp.float32)
+        for j in range(nc):
+            total, _ = body(total, (hs[j], ls[j]))
+    else:
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ls))
+    return total / (B * S)
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray], *,
+            remat: str = "none") -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    if cfg.is_encdec:
+        hidden, aux = encdec_forward(cfg, params, batch["tokens"],
+                                     batch["enc_embeds"], mode="train",
+                                     remat=remat)
+    else:
+        hidden, aux = lm_forward(cfg, params, batch["tokens"],
+                                 positions=batch.get("positions"),
+                                 mode="train", remat=remat)
+    ce = chunked_ce(cfg, params["embed"], hidden, batch["labels"])
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving entry points
+# ---------------------------------------------------------------------------
+
+def final_logits(cfg: ModelConfig, params, hidden: jnp.ndarray) -> jnp.ndarray:
+    w = (params["embed"]["unembed"] if not cfg.tie_embeddings
+         else params["embed"]["tok"].T)
+    lg = jnp.einsum("bsd,dv->bsv", hidden, w.astype(hidden.dtype),
+                    preferred_element_type=jnp.float32)
+    return soft_cap(lg, cfg.final_softcap)
+
+
+def prefill(cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray]):
+    """-> (last-token logits, cache)."""
+    if cfg.is_encdec:
+        hidden, _, cache = encdec_forward(cfg, params, batch["tokens"],
+                                          batch["enc_embeds"], mode="prefill")
+    else:
+        hidden, _, cache = lm_forward(cfg, params, batch["tokens"],
+                                      positions=batch.get("positions"),
+                                      mode="prefill")
+    lg = final_logits(cfg, params, hidden[:, -1:])
+    return lg, cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens: jnp.ndarray,
+                cur_len: jnp.ndarray):
+    """tokens: (B,1). -> (logits (B,1,V), new_cache)."""
+    if cfg.is_encdec:
+        hidden, _, new_cache = encdec_forward(cfg, params, tokens,
+                                              mode="decode", cache=cache,
+                                              cur_len=cur_len)
+    else:
+        hidden, _, new_cache = lm_forward(cfg, params, tokens, mode="decode",
+                                          cache=cache, cur_len=cur_len)
+    lg = final_logits(cfg, params, hidden)
+    return lg, new_cache
+
+
+# ---------------------------------------------------------------------------
+# cache schema (ParamSpec tree -> reuse init/abstract machinery)
+# ---------------------------------------------------------------------------
+
+def _to_spec(entry) -> ParamSpec:
+    shape, axes, dtype = entry
+    return ParamSpec(tuple(shape), tuple(axes), init="zeros", dtype=str(dtype))
+
+
+def _layer_cache_schema(cfg: ModelConfig, idx: int, batch: int,
+                        capacity: int) -> Dict[str, ParamSpec]:
+    kind = cfg.block_kind(idx)
+    if kind == "ssm":
+        raw = ssm_mod.ssm_cache_spec(cfg, batch)
+    else:
+        raw = attn_mod.kv_cache_spec(cfg, batch, capacity,
+                                     local=(kind == "attn_local"))
+    return {k: _to_spec(v) for k, v in raw.items()}
+
+
+def cache_schema(cfg: ModelConfig, batch: int, capacity: int) -> Dict[str, Any]:
+    if cfg.is_encdec:
+        hd = cfg.resolved_head_dim
+        self_c = {str(i): _layer_cache_schema(cfg, i, batch, capacity)
+                  for i in range(cfg.n_layers)}
+        cross = {str(i): {
+            "k": ParamSpec((batch, cfg.enc_positions, cfg.n_heads, hd),
+                           ("batch", None, "heads_act", None),
+                           init="zeros", dtype=cfg.dtype),
+            "v": ParamSpec((batch, cfg.enc_positions, cfg.n_heads, hd),
+                           ("batch", None, "heads_act", None),
+                           init="zeros", dtype=cfg.dtype),
+        } for i in range(cfg.n_layers)}
+        return {"self": self_c, "cross": cross}
+    from repro.models.transformer import stack_schema
+    prefix, period, n_periods = depth_plan(cfg)
+    out: Dict[str, Any] = {}
+    if prefix:
+        out["prefix"] = {str(i): _layer_cache_schema(cfg, i, batch, capacity)
+                         for i in range(prefix)}
+    out["stack"] = {
+        str(p): stack_schema(_layer_cache_schema(cfg, prefix + p, batch,
+                                                 capacity), n_periods)
+        for p in range(period)}
+    return out

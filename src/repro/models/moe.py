@@ -1,0 +1,150 @@
+"""Mixture-of-Experts: shared + routed top-k with capacity (GShard semantics).
+
+Dispatch uses a sort-based position-in-expert computation (stable argsort by
+expert id) and scatter-add into a dense (groups, E, capacity, d) buffer — the
+layout expert parallelism wants: with experts sharded on the "model" axis the
+buffer reshard *is* the all-to-all. Token priority is by position (earlier
+tokens win capacity), matching GShard/Switch.
+
+Grouping: train/prefill route within each batch row (G=B, Sg=S); decode uses
+a single global group so capacity padding stays ~capacity_factor even at one
+token per device.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _act, mlp, mlp_schema
+from repro.models.schema import ParamSpec
+
+
+def moe_schema(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    E, d, f = cfg.n_routed_experts, cfg.d_model, cfg.expert_d_ff
+    p: Dict[str, Any] = {
+        "router": ParamSpec((d, E), ("embed", None)),
+        "w_gate": ParamSpec((E, d, f), ("experts", "embed", "expert_ff")),
+        "w_up": ParamSpec((E, d, f), ("experts", "embed", "expert_ff")),
+        "w_down": ParamSpec((E, f, d), ("experts", "expert_ff", "embed")),
+    }
+    if cfg.n_shared_experts:
+        shared_ff = cfg.shared_expert_d_ff or cfg.n_shared_experts * cfg.expert_d_ff
+        p["shared"] = mlp_schema(cfg, shared_ff)
+        if cfg.shared_expert_gate:
+            p["shared_gate"] = ParamSpec((d, 1), ("embed", None), init="zeros")
+    return p
+
+
+def capacity(cfg: ModelConfig, group_tokens: int) -> int:
+    c = math.ceil(group_tokens * cfg.moe_top_k / cfg.n_routed_experts
+                  * cfg.moe_capacity_factor)
+    return max(c, 1)
+
+
+def _positions_in_expert(flat_e: jnp.ndarray, n_expert: int) -> jnp.ndarray:
+    """flat_e: (N,) expert id per slot (token-major). Returns slot rank within
+    its expert, respecting token-order priority."""
+    n = flat_e.shape[0]
+    perm = jnp.argsort(flat_e)                       # stable in jax
+    sorted_e = perm_e = flat_e[perm]
+    first = jnp.searchsorted(sorted_e, jnp.arange(n_expert))
+    pos_sorted = jnp.arange(n) - first[perm_e]
+    return jnp.zeros((n,), jnp.int32).at[perm].set(pos_sorted.astype(jnp.int32))
+
+
+def _dispatch_one(x: jnp.ndarray, idx: jnp.ndarray, cap: int,
+                  n_expert: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (S, D), idx: (S, k) -> buffer (E*cap, D), dest (S*k,), keep (S*k,)."""
+    S, k = idx.shape
+    flat_e = idx.reshape(-1)
+    pos = _positions_in_expert(flat_e, n_expert)
+    keep = pos < cap
+    dest = jnp.where(keep, flat_e * cap + pos, n_expert * cap)  # pad slot
+    x_rep = jnp.repeat(x, k, axis=0)                            # (S*k, D)
+    buf = jnp.zeros((n_expert * cap + 1, x.shape[-1]), x.dtype)
+    buf = buf.at[dest].add(x_rep)
+    return buf[:-1], dest, keep
+
+
+def moe_apply(cfg: ModelConfig, p: Dict[str, Any], x: jnp.ndarray,
+              *, decode: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y, aux_loss)."""
+    B, S, D = x.shape
+    E, k = cfg.n_routed_experts, cfg.moe_top_k
+    dt = x.dtype
+    if decode:
+        xg = x.reshape(1, B * S, D)          # one global group
+    else:
+        xg = x.reshape(B, S, D)
+    G, Sg, _ = xg.shape
+    cap = capacity(cfg, Sg)
+
+    logits = jnp.einsum("gsd,de->gse", xg, p["router"].astype(dt),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                       # (G,Sg,k)
+    if cfg.norm_topk_prob:
+        gates = gates / (gates.sum(-1, keepdims=True) + 1e-20)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=(0, 1))                           # (E,)
+    ce = jnp.mean(jax.nn.one_hot(idx, E, dtype=jnp.float32),
+                  axis=(0, 1, 2))                               # (E,)
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce) * k
+
+    buf, dest, keep = jax.vmap(
+        lambda xr, ir: _dispatch_one(xr, ir, cap, E))(xg, idx)
+    buf = buf.reshape(G, E, cap, D)
+    from repro.parallel.context import constrain
+    # groups stay on the batch (data) axes; experts shard on "model" (EP)
+    buf = constrain(buf, ("batch", "experts_act", None, None))
+
+    # expert FFN (gated)
+    h = _act(jnp.einsum("gecd,edf->gecf", buf, p["w_gate"].astype(dt)),
+             cfg.mlp_act)
+    h = h * jnp.einsum("gecd,edf->gecf", buf, p["w_up"].astype(dt))
+    out = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dt))
+    out = constrain(out, ("batch", "experts_act", None, None))
+
+    out_flat = out.reshape(G, E * cap, D)
+    w = (gates.reshape(G, Sg * k).astype(dt)
+         * keep.reshape(G, Sg * k).astype(dt))
+    if cfg.moe_combine == "scatter":
+        # §Perf lever: scatter-add expert outputs back to token slots. With
+        # experts sharded on "model" the scatter produces *partial* token
+        # sums per expert shard and SPMD reduces them — O(tokens*k*D) on the
+        # wire instead of all-gathering the O(E*cap*D) slot buffer.
+        def make_inv(d):
+            # slot -> token-slot (dropped tokens land on the sliced-off pad)
+            inv_full = jnp.full((E * cap + 1,), Sg * k, jnp.int32)
+            return inv_full.at[d].set(
+                jnp.arange(Sg * k, dtype=jnp.int32))[:-1]
+        inv = jax.vmap(make_inv)(dest)                           # (G, E*cap)
+        gate_per_slot = jnp.take_along_axis(
+            jnp.concatenate([w, jnp.zeros((G, 1), dt)], axis=1), inv, axis=1)
+        contrib = out_flat * gate_per_slot[..., None]
+        # fold the top-k sum into the scatter: slot -> token directly, so the
+        # cross-expert-shard partial sum is O(Sg*D), not O(Sg*k*D)
+        tok = inv // k                                           # sentinel->Sg
+        y = jax.vmap(lambda c, i: jnp.zeros((Sg + 1, D), dt)
+                     .at[i].add(c))(contrib, tok)[:, :-1]
+    else:
+        # baseline: gather each slot's output, weight by gate, sum over k
+        pad = jnp.zeros((G, 1, D), dt)
+        out_padded = jnp.concatenate([out_flat, pad], axis=1)
+        slot_out = jnp.take_along_axis(out_padded, dest[..., None],
+                                       axis=1)                   # (G,Sg*k,D)
+        y = (slot_out * w[..., None]).reshape(G, Sg, k, D).sum(axis=2)
+
+    if cfg.n_shared_experts:
+        sh = mlp(cfg, p["shared"], xg)
+        if cfg.shared_expert_gate:
+            g = jax.nn.sigmoid(
+                jnp.einsum("gsd,do->gso", xg, p["shared_gate"].astype(dt)))
+            sh = sh * g
+        y = y + sh
+    return y.reshape(B, S, D), aux.astype(jnp.float32)

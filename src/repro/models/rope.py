@@ -1,0 +1,77 @@
+"""Rotary position embeddings: standard, half-dim 2d (chatglm3), M-RoPE (qwen2-vl)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def rotary_dim(cfg: ModelConfig) -> int:
+    hd = cfg.resolved_head_dim
+    if cfg.attn_impl == "mla":
+        return cfg.qk_rope_head_dim
+    if cfg.rope_variant == "half2d":
+        return hd // 2
+    return hd
+
+
+def mrope_sections(rd_half: int):
+    """qwen2-vl: temporal/height/width sections over the frequency dims.
+
+    Published split for hd=128 is (16, 24, 24) over 64 freq dims, i.e.
+    (1/4, 3/8, 3/8); we keep those proportions for any head_dim.
+    """
+    t = rd_half // 4
+    h = (rd_half - t) // 2
+    w = rd_half - t - h
+    return t, h, w
+
+
+def rope_cos_sin(cfg: ModelConfig, positions: jnp.ndarray):
+    """positions: (B, S) int32, or (3, B, S) for mrope.
+
+    Returns cos, sin of shape (B, S, rd/2) float32.
+    """
+    rd = rotary_dim(cfg)
+    if rd == 0 or cfg.rope_variant in ("none", "abs"):
+        return None, None
+    half = rd // 2
+    inv_freq = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if cfg.rope_variant == "mrope":
+        assert positions.ndim == 3, "mrope needs (3, B, S) position ids"
+        angles3 = positions.astype(jnp.float32)[..., None] * inv_freq  # (3,B,S,half)
+        t, h, w = mrope_sections(half)
+        sec = jnp.concatenate([
+            jnp.zeros((t,), jnp.int32),
+            jnp.ones((h,), jnp.int32),
+            jnp.full((w,), 2, jnp.int32),
+        ])
+        angles = jnp.take_along_axis(
+            jnp.moveaxis(angles3, 0, -1),                      # (B,S,half,3)
+            sec[None, None, :, None], axis=-1)[..., 0]         # (B,S,half)
+    else:
+        angles = positions.astype(jnp.float32)[..., None] * inv_freq  # (B,S,half)
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray,
+               rd: int) -> jnp.ndarray:
+    """Rotate-half RoPE on the first ``rd`` dims of the head dim.
+
+    x: (B, S, H, hd); cos/sin: (B, S, rd/2).
+    """
+    if cos is None:
+        return x
+    dtype = x.dtype
+    rot, keep = x[..., :rd], x[..., rd:]
+    half = rd // 2
+    x1 = rot[..., :half].astype(jnp.float32)
+    x2 = rot[..., half:].astype(jnp.float32)
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    r1 = x1 * c - x2 * s
+    r2 = x2 * c + x1 * s
+    rotated = jnp.concatenate([r1, r2], axis=-1).astype(dtype)
+    if keep.shape[-1]:
+        return jnp.concatenate([rotated, keep], axis=-1)
+    return rotated

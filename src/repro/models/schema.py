@@ -1,0 +1,170 @@
+"""Parameter schema: single source of truth for shapes, init and sharding.
+
+A model declares its parameters once as a tree of ``ParamSpec`` (shape +
+logical axis names + init rule). From that one tree we derive:
+
+  * concrete initialised parameters (``init_params``) for smoke tests,
+  * abstract ``jax.ShapeDtypeStruct`` stand-ins (``abstract_params``) for the
+    multi-pod dry-run — no allocation,
+  * ``PartitionSpec`` trees (``partition_specs``) for pjit in_shardings,
+
+so init/dry-run/sharding can never drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical axis name per dim
+    init: str = "normal"                     # normal | zeros | ones | embed
+    dtype: str = "float32"
+    fan_in: Optional[int] = None             # override init scale fan-in
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis -> mesh-axis rules.
+#
+# Values are *preference lists* of mesh axes; at resolution time we keep only
+# axes present in the mesh, unused so far in this param, and evenly dividing
+# the dim. This gives automatic fallbacks (e.g. qwen2-moe's 60 experts do not
+# divide a 16-wide "model" axis, so sharding falls through to the expert-ff
+# dim) without per-arch special cases.
+# ---------------------------------------------------------------------------
+
+# FSDP rules: d_model/"embed" dims sharded over the data axis (ZeRO-3).
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "vocab": ("model",),
+    "embed": ("data",),           # FSDP axis
+    "embed_pod": ("pod", "data"),  # planner may rewrite "embed" -> this
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "experts": ("model",),
+    "expert_ff": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_heads": ("model",),
+    "lora": ("model",),
+    "layers": (),                 # scan stack dim: never sharded
+    "conv": (),
+    "pos": (),
+}
+
+
+def resolve_pspec(axes: Tuple[Optional[str], ...],
+                  shape: Tuple[int, ...],
+                  rules: Dict[str, Tuple[str, ...]],
+                  mesh: Mesh) -> PartitionSpec:
+    """Map logical axes -> PartitionSpec honouring divisibility & uniqueness."""
+    used: set = set()
+    out = []
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, name in zip(shape, axes):
+        entry: Any = None
+        if name is not None:
+            picked = []
+            prod = 1
+            for ax in rules.get(name, ()):  # preference order
+                if ax in sizes and ax not in used and dim % (prod * sizes[ax]) == 0:
+                    picked.append(ax)
+                    prod *= sizes[ax]
+                    used.add(ax)
+            if len(picked) == 1:
+                entry = picked[0]
+            elif picked:
+                entry = tuple(picked)
+        out.append(entry)
+    while out and out[-1] is None:
+        out.pop()
+    return PartitionSpec(*out)
+
+
+# ---------------------------------------------------------------------------
+# Tree traversal (params are nested dicts of ParamSpec)
+# ---------------------------------------------------------------------------
+
+def _map_with_path(tree: Any, fn, path: Tuple[str, ...] = ()) -> Any:
+    if is_spec(tree):
+        return fn(path, tree)
+    if isinstance(tree, dict):
+        return {k: _map_with_path(v, fn, path + (str(k),)) for k, v in tree.items()}
+    if tree is None:
+        return None
+    raise TypeError(f"bad schema node at {path}: {type(tree)}")
+
+
+def init_params(schema: Any, key: jax.Array, dtype: Optional[str] = None) -> Any:
+    """Materialise concrete parameters (smoke tests / examples only)."""
+
+    def init_one(path, spec: ParamSpec):
+        k = jax.random.fold_in(key, hash("/".join(path)) % (2**31))
+        dt = jnp.dtype(dtype or spec.dtype)
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dt)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dt)
+        if spec.init == "embed":
+            return (jax.random.normal(k, spec.shape, jnp.float32) * 0.02).astype(dt)
+        fan_in = spec.fan_in or (spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1])
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, spec.shape, jnp.float32) * scale).astype(dt)
+
+    return _map_with_path(schema, init_one)
+
+
+def abstract_params(schema: Any, mesh: Mesh,
+                    rules: Dict[str, Tuple[str, ...]] = DEFAULT_RULES) -> Any:
+    """ShapeDtypeStruct tree with NamedShardings attached (dry-run inputs)."""
+
+    def mk(path, spec: ParamSpec):
+        pspec = resolve_pspec(spec.axes, spec.shape, rules, mesh)
+        return jax.ShapeDtypeStruct(spec.shape, jnp.dtype(spec.dtype),
+                                    sharding=NamedSharding(mesh, pspec))
+
+    return _map_with_path(schema, mk)
+
+
+def partition_specs(schema: Any, mesh: Mesh,
+                    rules: Dict[str, Tuple[str, ...]] = DEFAULT_RULES) -> Any:
+    return _map_with_path(
+        schema, lambda p, s: resolve_pspec(s.axes, s.shape, rules, mesh))
+
+
+def param_count(schema: Any) -> int:
+    total = 0
+
+    def add(path, spec: ParamSpec):
+        nonlocal total
+        total += int(np.prod(spec.shape))
+        return spec
+
+    _map_with_path(schema, add)
+    return total
+
+
+def param_bytes(schema: Any) -> int:
+    total = 0
+
+    def add(path, spec: ParamSpec):
+        nonlocal total
+        total += int(np.prod(spec.shape)) * jnp.dtype(spec.dtype).itemsize
+        return spec
+
+    _map_with_path(schema, add)
+    return total

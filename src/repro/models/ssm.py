@@ -1,0 +1,214 @@
+"""Mamba-2 SSD block (state-space duality), chunked for the MXU.
+
+The chunked formulation replaces Mamba-1's sequential selective scan with
+per-chunk matmuls (intra-chunk quadratic term + inter-chunk state
+recurrence) — the TPU-native adaptation recorded in DESIGN.md. The pure-jnp
+chunked path here is the reference/dry-run implementation; the Pallas kernel
+in ``repro.kernels.ssd`` computes the intra-chunk term.
+
+Recurrence (per head h, state dim N, head dim P):
+    h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * B_t x_t^T      (N x P)
+    y_t = C_t^T h_t + D_h * x_t
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.schema import ParamSpec
+
+
+def ssm_schema(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, di = cfg.d_model, cfg.ssm_d_inner
+    g, n, h = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    conv_ch = di + 2 * g * n
+    return {
+        "in_proj": ParamSpec((d, 2 * di + 2 * g * n + h), ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_ch), ("conv", "ssm_inner")),
+        "conv_b": ParamSpec((conv_ch,), ("ssm_inner",), init="zeros"),
+        "A_log": ParamSpec((h,), ("ssm_heads",), init="zeros"),
+        "D": ParamSpec((h,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((h,), ("ssm_heads",), init="zeros"),
+        "norm": ParamSpec((di,), (None,), init="ones"),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    di, g, n, h = (cfg.ssm_d_inner, cfg.ssm_ngroups, cfg.ssm_state,
+                   cfg.ssm_nheads)
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:2 * di + 2 * g * n]
+    dt = zxbcdt[..., 2 * di + 2 * g * n:]
+    return z, xBC, dt
+
+
+def _causal_conv(cfg: ModelConfig, p, xBC: jnp.ndarray,
+                 init_state: jnp.ndarray = None):
+    """Depthwise causal conv1d + SiLU. xBC: (B, S, C)."""
+    K = cfg.ssm_conv
+    if init_state is None:
+        pad = jnp.zeros(xBC.shape[:1] + (K - 1,) + xBC.shape[2:], xBC.dtype)
+    else:
+        pad = init_state.astype(xBC.dtype)
+    full = jnp.concatenate([pad, xBC], axis=1)
+    w = p["conv_w"].astype(xBC.dtype)
+    out = sum(full[:, i:i + xBC.shape[1]] * w[i] for i in range(K))
+    out = jax.nn.silu(out + p["conv_b"].astype(xBC.dtype))
+    return out, full[:, -(K - 1):]    # (conv output, tail state)
+
+
+def _gated_norm(y: jnp.ndarray, z: jnp.ndarray, scale: jnp.ndarray,
+                eps: float) -> jnp.ndarray:
+    from repro.models.layers import rmsnorm
+    return rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                   scale, eps)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int,
+                h0: jnp.ndarray = None):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P)  dt: (B,S,H)  A: (H,)  Bm/Cm: (B,S,G,N) with H % G == 0.
+    Returns y: (B,S,H,P) and final state (B,H,N,P).
+    """
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    nc = S // chunk
+    assert nc * chunk == S, (S, chunk)
+    rep = H // G
+
+    xc = x.reshape(B, nc, chunk, H, P)
+    dtc = dt.reshape(B, nc, chunk, H).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, chunk, G, N)
+    Cc = Cm.reshape(B, nc, chunk, G, N)
+
+    a = dtc * A.astype(jnp.float32)                    # (B,nc,Q,H), negative
+    cum = jnp.cumsum(a, axis=2)                        # within-chunk cumsum
+    total = cum[:, :, -1]                              # (B,nc,H)
+
+    # ---- intra-chunk (quadratic in chunk) --------------------------------
+    # scores[b,c,i,j,h] = (C_i . B_j) * exp(cum_i - cum_j) * dt_j  (j <= i)
+    cb = jnp.einsum("bcign,bcjgn->bcijg", Cc, Bc,
+                    preferred_element_type=jnp.float32)
+    cb = jnp.repeat(cb, rep, axis=-1)                  # (B,nc,Q,Q,H)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    w = jnp.where(causal, cb * decay * dtc[:, :, None, :, :], 0.0)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", w.astype(x.dtype), xc,
+                        preferred_element_type=jnp.float32)
+
+    # ---- chunk states -----------------------------------------------------
+    # S_c[h,n,p] = sum_j B_j[n] * exp(total - cum_j) * dt_j * x_j[p]
+    dec_end = jnp.exp(total[:, :, None, :] - cum)      # (B,nc,Q,H)
+    b_rep = jnp.repeat(Bc, rep, axis=3)                # (B,nc,Q,H,N)
+    bx = jnp.einsum("bcjhn,bcjh,bcjhp->bchnp",
+                    b_rep.astype(jnp.float32), dec_end * dtc,
+                    xc.astype(jnp.float32), preferred_element_type=jnp.float32)
+
+    # ---- inter-chunk recurrence over nc ------------------------------------
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P), jnp.float32)
+
+    def body(h_prev, xs):
+        s_c, tot_c = xs                                # (B,H,N,P), (B,H)
+        h_new = h_prev * jnp.exp(tot_c)[..., None, None] + s_c
+        return h_new, h_prev
+
+    (h_final, h_prevs) = jax.lax.scan(
+        body, h0.astype(jnp.float32),
+        (jnp.moveaxis(bx, 1, 0), jnp.moveaxis(total, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)              # (B,nc,H,N,P)
+
+    # ---- inter-chunk contribution: C_i * exp(cum_i) * h_prev ----------------
+    c_rep = jnp.repeat(Cc, rep, axis=3)                # (B,nc,Q,H,N)
+    y_off = jnp.einsum("bcihn,bchnp->bcihp",
+                       c_rep.astype(jnp.float32)
+                       * jnp.exp(cum)[..., None],
+                       h_prevs, preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_off).reshape(B, S, H, P).astype(x.dtype)
+    return y, h_final
+
+
+def ssm_train(cfg: ModelConfig, p: Dict[str, Any], x: jnp.ndarray,
+              *_args, **_kw) -> jnp.ndarray:
+    y, _ = _ssm_forward(cfg, p, x)
+    return y
+
+
+def ssm_prefill(cfg: ModelConfig, p, x, *_args, **_kw):
+    y, cache = _ssm_forward(cfg, p, x, want_cache=True)
+    return y, cache
+
+
+def _ssm_forward(cfg: ModelConfig, p, x, want_cache: bool = False):
+    B, S, D = x.shape
+    H, P = cfg.ssm_nheads, cfg.ssm_headdim
+    g, n, di = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_d_inner
+    dt_ = x.dtype
+    zxbcdt = x @ p["in_proj"].astype(dt_)
+    z, xBC, dt_raw = _split_proj(cfg, zxbcdt)
+    xBC, conv_tail = _causal_conv(cfg, p, xBC)
+    xs = xBC[..., :di].reshape(B, S, H, P)
+    Bm = xBC[..., di:di + g * n].reshape(B, S, g, n)
+    Cm = xBC[..., di + g * n:].reshape(B, S, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h_final = ssd_chunked(xs, dt, A, Bm, Cm, min(cfg.ssm_chunk, S))
+    y = y + xs * p["D"].astype(dt_)[None, None, :, None]
+    y = _gated_norm(y.reshape(B, S, di), z, p["norm"], cfg.rms_eps)
+    out = y @ p["out_proj"].astype(dt_)
+    if want_cache:
+        return out, {"h": h_final.astype(jnp.float32), "conv": conv_tail}
+    return out, None
+
+
+def ssm_decode(cfg: ModelConfig, p, x, cache: Dict[str, jnp.ndarray],
+               *_args, **_kw):
+    """x: (B,1,D); cache: h (B,H,N,P) fp32, conv (B,K-1,conv_ch)."""
+    B = x.shape[0]
+    H, P = cfg.ssm_nheads, cfg.ssm_headdim
+    g, n, di = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_d_inner
+    K = cfg.ssm_conv
+    dt_ = x.dtype
+    zxbcdt = x @ p["in_proj"].astype(dt_)
+    z, xBC_new, dt_raw = _split_proj(cfg, zxbcdt)       # (B,1,*)
+    window = jnp.concatenate([cache["conv"].astype(dt_), xBC_new], axis=1)
+    w = p["conv_w"].astype(dt_)
+    conv_out = jax.nn.silu((window * w[None]).sum(axis=1, keepdims=True)
+                           + p["conv_b"].astype(dt_))
+    xs = conv_out[..., :di].reshape(B, H, P)
+    Bm = conv_out[..., di:di + g * n].reshape(B, g, n)
+    Cm = conv_out[..., di + g * n:].reshape(B, g, n)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)                                    # (B,H)
+    rep = H // g
+    Bh = jnp.repeat(Bm, rep, axis=1)                           # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    h = (cache["h"] * decay[..., None, None]
+         + jnp.einsum("bhn,bh,bhp->bhnp", Bh.astype(jnp.float32), dt,
+                      xs.astype(jnp.float32)))
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), h)
+    y = y.astype(dt_) + xs * p["D"].astype(dt_)[None, :, None]
+    y = _gated_norm(y.reshape(B, 1, di), z, p["norm"], cfg.rms_eps)
+    out = y @ p["out_proj"].astype(dt_)
+    return out, {"h": h, "conv": window[:, 1:]}
+
+
+def ssm_cache_spec(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    H, P, n = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    conv_ch = cfg.ssm_d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "h": ((batch, H, n, P), ("batch", "ssm_heads", None, None), "float32"),
+        "conv": ((batch, cfg.ssm_conv - 1, conv_ch),
+                 ("batch", None, "ssm_inner"), cfg.dtype),
+    }

@@ -1,0 +1,77 @@
+"""AdamW + warmup-cosine schedule + global-norm clipping (pure JAX).
+
+Optimizer state shards exactly like the parameters (same tree structure, same
+logical axes), so FSDP covers params, m and v — the piece that makes 100B+
+configs fit (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_at(ocfg: OptimConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum((step + 1.0) / max(ocfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - ocfg.warmup_steps)
+                    / max(ocfg.total_steps - ocfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    decay = ocfg.min_lr_ratio + (1 - ocfg.min_lr_ratio) * cos
+    return ocfg.peak_lr * warm * decay
+
+
+def opt_init(params: Any) -> Dict[str, Any]:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params)}
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def opt_update(ocfg: OptimConfig, params: Any, grads: Any, m: Any, v: Any,
+               step: jnp.ndarray) -> Tuple[Any, Any, Any, jnp.ndarray]:
+    """-> (new_params, new_m, new_v, grad_norm). step is 0-based."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, ocfg.clip_norm / (gnorm + 1e-12))
+    lr = lr_at(ocfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - ocfg.b1 ** t
+    bc2 = 1.0 - ocfg.b2 ** t
+
+    def upd(p, g, m_, v_):
+        g = g.astype(jnp.float32) * scale
+        m_n = ocfg.b1 * m_ + (1 - ocfg.b1) * g
+        v_n = ocfg.b2 * v_ + (1 - ocfg.b2) * jnp.square(g)
+        mhat = m_n / bc1
+        vhat = v_n / bc2
+        delta = mhat / (jnp.sqrt(vhat) + ocfg.eps) + ocfg.weight_decay * p
+        return (p - lr * delta).astype(p.dtype), m_n, v_n
+
+    flat, treedef = jax.tree.flatten(params)
+    gflat = jax.tree.leaves(grads)
+    mflat = jax.tree.leaves(m)
+    vflat = jax.tree.leaves(v)
+    out = [upd(p, g, m_, v_) for p, g, m_, v_ in zip(flat, gflat, mflat, vflat)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, new_m, new_v, gnorm

@@ -1,0 +1,61 @@
+"""Parallel context: activation-sharding constraints usable from model code.
+
+Model code names *logical* activation axes; the active ``ParallelCtx`` (set
+by the train/serve step builders) maps them to mesh axes. With no context
+(single-device smoke tests) constraints are no-ops, so model code never
+needs to know whether it is distributed.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.models.schema import resolve_pspec
+
+# default logical activation-axis rules (planner may override per blueprint)
+ACT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "act_seq": ("data",),        # sequence sharding (long-context decode)
+    "heads_act": ("model",),
+    "ff_act": ("model",),
+    "experts_act": ("model",),
+    "vocab_act": ("model",),
+    "cache_seq": ("model",),     # decode-cache sequence dim
+    "kv_heads": ("model",),
+}
+
+_STATE = threading.local()
+
+
+@dataclass
+class ParallelCtx:
+    mesh: Mesh
+    rules: Dict[str, Tuple[str, ...]] = field(default_factory=lambda: dict(ACT_RULES))
+
+
+def current() -> Optional[ParallelCtx]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_parallel(mesh: Mesh, rules: Optional[Dict[str, Tuple[str, ...]]] = None):
+    prev = current()
+    _STATE.ctx = ParallelCtx(mesh, {**ACT_RULES, **(rules or {})})
+    try:
+        yield _STATE.ctx
+    finally:
+        _STATE.ctx = prev
+
+
+def constrain(x: jax.Array, axes: Tuple[Optional[str], ...]) -> jax.Array:
+    """Apply with_sharding_constraint mapping logical axes via the context."""
+    ctx = current()
+    if ctx is None:
+        return x
+    pspec = resolve_pspec(tuple(axes), tuple(x.shape), ctx.rules, ctx.mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, pspec))

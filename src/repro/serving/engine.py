@@ -1,0 +1,100 @@
+"""Serving engine: KV/state cache management, prefill + decode loops.
+
+Cache layout mirrors the model's scan structure (see
+``repro.models.model.cache_schema``). Sliding-window layers get
+window-capacity ring buffers; SSM layers carry (state, conv-tail). The
+decode step is a single jit-able function suitable for pjit lowering in the
+dry-run (``decode_32k`` / ``long_500k`` cells).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.schema import init_params
+
+_SEQ_LEAVES = {"k", "v", "c_kv", "k_pe", "k_scale", "v_scale"}
+_SEQ_AXIS_FROM_END = {"k": 3, "v": 3, "c_kv": 2, "k_pe": 2,
+                      "k_scale": 2, "v_scale": 2}
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> Any:
+    """Zero-initialised cache pytree with ring-buffer capacities."""
+    sch = M.cache_schema(cfg, batch, capacity)
+    return init_params(sch, jax.random.PRNGKey(0))
+
+
+def _place_seq(buf: jnp.ndarray, kv: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """Place prefill kv (length S) into a capacity-``cap`` ring buffer."""
+    cap, S = buf.shape[axis], kv.shape[axis]
+    if S >= cap:
+        tail = jax.lax.slice_in_dim(kv, S - cap, S, axis=axis)
+        pos = (S - cap + np.arange(cap)) % cap
+        inv = np.argsort(pos)               # slot j <- tail[inv[j]]
+        return jnp.take(tail, inv, axis=axis)
+    return jax.lax.dynamic_update_slice_in_dim(buf, kv, 0, axis=axis)
+
+
+def load_prefill_cache(zeros: Any, pre: Any, path=()) -> Any:
+    """Merge prefill-produced cache into the capacity-sized zero cache.
+
+    When the target cache is int8-quantised (``cfg.cache_quant``) the
+    prefill's bf16 kv is quantised here and scale leaves are synthesised.
+    """
+    if isinstance(zeros, dict):
+        out = {}
+        for k in zeros:
+            if k in ("k_scale", "v_scale") and k not in pre:
+                from repro.models.attention import quantize_kv
+                _, scale = quantize_kv(pre[k[0]])
+                out[k] = load_prefill_cache(zeros[k], scale, path + (k,))
+            elif k in ("k", "v") and zeros[k].dtype == jnp.int8 \
+                    and pre[k].dtype != jnp.int8:
+                from repro.models.attention import quantize_kv
+                q8, _ = quantize_kv(pre[k])
+                out[k] = load_prefill_cache(zeros[k], q8, path + (k,))
+            else:
+                out[k] = load_prefill_cache(zeros[k], pre[k], path + (k,))
+        return out
+    key = path[-1]
+    if key in _SEQ_LEAVES:
+        axis = zeros.ndim - _SEQ_AXIS_FROM_END[key]
+        return _place_seq(zeros, pre.astype(zeros.dtype), axis)
+    return pre.astype(zeros.dtype)          # ssm h / conv states
+
+
+def prefill(cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray],
+            capacity: int):
+    """-> (last-token logits, capacity cache, cur_len)."""
+    B, S = batch["tokens"].shape
+    lg, pre_cache = M.prefill(cfg, params, batch)
+    zeros = init_cache(cfg, B, capacity)
+    cache = load_prefill_cache(zeros, pre_cache)
+    return lg, cache, jnp.asarray(S, jnp.int32)
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens: jnp.ndarray,
+                cur_len: jnp.ndarray):
+    """One serving step: tokens (B,1) at position cur_len."""
+    return M.decode_step(cfg, params, cache, tokens, cur_len)
+
+
+def greedy_decode(cfg: ModelConfig, params, cache, first_token: jnp.ndarray,
+                  cur_len: jnp.ndarray, n_steps: int):
+    """Greedy generation loop (lax.scan over steps). -> (tokens, cache)."""
+
+    def body(carry, _):
+        tok, cl, cc = carry
+        lg, cc = M.decode_step(cfg, params, cc, tok, cl)
+        nxt = jnp.argmax(lg[:, -1, :cfg.vocab_size], axis=-1
+                         ).astype(jnp.int32)[:, None]
+        return (nxt, cl + 1, cc), nxt
+
+    (_, cur_len, cache), toks = jax.lax.scan(
+        body, (first_token, cur_len, cache), None, length=n_steps)
+    return jnp.moveaxis(toks[..., 0], 0, 1), cache, cur_len

@@ -1,0 +1,79 @@
+"""pjit-able train / eval / serve step builders."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.optim.adamw import OptimConfig, opt_init, opt_update
+from repro.parallel.context import use_parallel
+
+
+def init_train_state(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    params = M.init(cfg, key)
+    opt = opt_init(params)
+    return {"params": params, "m": opt["m"], "v": opt["v"],
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(cfg: ModelConfig, ocfg: OptimConfig, *,
+                    remat: str = "none", mesh=None, act_rules=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    Gradient reduction across data/pod axes is induced by pjit sharding
+    propagation (reduce-scatter under FSDP); no explicit psum needed.
+    """
+
+    def train_step(state, batch):
+        def compute(params):
+            def lf(p):
+                return M.loss_fn(cfg, p, batch, remat=remat)
+            return jax.value_and_grad(lf, has_aux=True)(params)
+
+        if mesh is not None:
+            with use_parallel(mesh, act_rules):
+                (loss, metrics), grads = compute(state["params"])
+        else:
+            (loss, metrics), grads = compute(state["params"])
+        new_p, new_m, new_v, gnorm = opt_update(
+            ocfg, state["params"], grads, state["m"], state["v"],
+            state["step"])
+        new_state = {"params": new_p, "m": new_m, "v": new_v,
+                     "step": state["step"] + 1}
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, *, mesh=None, act_rules=None):
+    def eval_step(params, batch):
+        if mesh is not None:
+            with use_parallel(mesh, act_rules):
+                loss, metrics = M.loss_fn(cfg, params, batch)
+        else:
+            loss, metrics = M.loss_fn(cfg, params, batch)
+        return dict(metrics, loss=loss)
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, mesh=None, act_rules=None):
+    def prefill_step(params, batch):
+        if mesh is not None:
+            with use_parallel(mesh, act_rules):
+                return M.prefill(cfg, params, batch)
+        return M.prefill(cfg, params, batch)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, mesh=None, act_rules=None):
+    def serve_step(params, cache, tokens, cur_len):
+        if mesh is not None:
+            with use_parallel(mesh, act_rules):
+                return M.decode_step(cfg, params, cache, tokens, cur_len)
+        return M.decode_step(cfg, params, cache, tokens, cur_len)
+    return serve_step

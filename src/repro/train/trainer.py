@@ -1,0 +1,125 @@
+"""Fault-tolerant training loop: the "train service" the cluster provisions.
+
+Integrates the InstaCluster control plane with the JAX substrate:
+  * heartbeats per step feed the Ambari-analogue monitor (dead/straggler
+    detection);
+  * periodic async checkpoints (atomic commits);
+  * on failure (injected preemption / thrown SimFailure) the loop restores
+    the latest committed step and replays — with the deterministic data
+    pipeline this reproduces the uninterrupted run exactly;
+  * elastic resume: restoring onto a different mesh reshards the state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.optim.adamw import OptimConfig
+from repro.train.steps import init_train_state, make_train_step
+
+
+class SimFailure(RuntimeError):
+    """Injected node failure / spot preemption during a step."""
+
+
+@dataclasses.dataclass
+class TrainReport:
+    steps_run: int
+    final_step: int
+    losses: List[float]
+    restores: int
+    wall_seconds: float
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, ocfg: OptimConfig, *,
+                 batch: int, seq: int,
+                 ckpt_dir: Optional[str] = None,
+                 ckpt_every: int = 50,
+                 mesh=None, act_rules=None, remat: str = "none",
+                 data_cfg: DataConfig = DataConfig(),
+                 heartbeat_cb: Optional[Callable[[int, float], None]] = None):
+        self.cfg = cfg
+        self.ocfg = ocfg
+        self.batch = batch
+        self.seq = seq
+        self.mesh = mesh
+        self.ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+        self.ckpt_every = ckpt_every
+        self.data = SyntheticLM(cfg, batch, seq, data_cfg)
+        self.heartbeat_cb = heartbeat_cb
+        step_fn = make_train_step(cfg, ocfg, remat=remat, mesh=mesh,
+                                  act_rules=act_rules)
+        self.train_step = jax.jit(step_fn, donate_argnums=(0,))
+
+    # ------------------------------------------------------------ plumbing --
+    def init_state(self, seed: int = 0) -> Dict[str, Any]:
+        return init_train_state(self.cfg, jax.random.PRNGKey(seed))
+
+    def _batch_at(self, step: int) -> Dict[str, jnp.ndarray]:
+        b = self.data.extras(self.data.global_batch(step))
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    def restore_or_init(self, seed: int = 0) -> Dict[str, Any]:
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            template = self.init_state(seed)
+            return self.ckpt.restore(target=template)
+        return self.init_state(seed)
+
+    # ---------------------------------------------------------------- run --
+    def run(self, n_steps: int, *, state: Optional[Dict[str, Any]] = None,
+            seed: int = 0,
+            failure_at: Optional[Dict[int, Exception]] = None,
+            max_restores: int = 8) -> TrainReport:
+        """Run to global step ``n_steps`` with restore-on-failure.
+
+        ``failure_at`` maps global step -> exception to inject *once* (after
+        the forward/step completes, modelling a node loss mid-run).
+        """
+        t0 = time.time()
+        state = state if state is not None else self.restore_or_init(seed)
+        losses: List[float] = []
+        restores = 0
+        injected = set()
+        failure_at = dict(failure_at or {})
+
+        while int(state["step"]) < n_steps:
+            step = int(state["step"])
+            try:
+                batch = self._batch_at(step)
+                t_step = time.time()
+                state, metrics = self.train_step(state, batch)
+                loss = float(metrics["loss"])
+                if not np.isfinite(loss):
+                    raise FloatingPointError(f"non-finite loss at step {step}")
+                losses.append(loss)
+                if self.heartbeat_cb:
+                    self.heartbeat_cb(step, time.time() - t_step)
+                if failure_at and step in failure_at and step not in injected:
+                    injected.add(step)
+                    raise failure_at[step]
+                new_step = step + 1
+                if self.ckpt and (new_step % self.ckpt_every == 0
+                                  or new_step == n_steps):
+                    self.ckpt.save(state, new_step)
+            except SimFailure:
+                restores += 1
+                if restores > max_restores or self.ckpt is None:
+                    raise
+                self.ckpt.wait()
+                state = self.ckpt.restore(target=self.init_state(seed)) \
+                    if self.ckpt.latest_step() is not None \
+                    else self.init_state(seed)
+        if self.ckpt:
+            self.ckpt.wait()
+        return TrainReport(steps_run=len(losses), final_step=int(state["step"]),
+                           losses=losses, restores=restores,
+                           wall_seconds=time.time() - t0)

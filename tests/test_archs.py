@@ -1,0 +1,133 @@
+"""Per-architecture smoke tests (deliverable f): reduced config of each
+family, one forward/train step on CPU, output shapes + no NaNs; plus full
+configs' parameter counts vs published sizes and cell accounting."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, cell_is_runnable
+from repro.configs.registry import (ARCHS, EXPECTED_PARAMS_B, REDUCED,
+                                    all_cells, get_arch, get_shape)
+from repro.models import model as M
+from repro.optim.adamw import OptimConfig
+from repro.serving import engine as E
+from repro.train.steps import init_train_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=32):
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.rope_variant == "mrope":
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        batch["positions"] = jnp.broadcast_to(pos[None], (3, B, S))
+    if cfg.is_encdec:
+        batch["enc_embeds"] = jax.random.normal(
+            KEY, (B, cfg.enc_positions, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("name", sorted(REDUCED))
+def test_reduced_forward_and_loss(name):
+    cfg = REDUCED[name]
+    params = M.init(cfg, KEY)
+    loss, metrics = M.loss_fn(cfg, params, _batch(cfg))
+    assert np.isfinite(float(loss)), name
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("name", sorted(REDUCED))
+def test_reduced_train_step(name):
+    cfg = REDUCED[name]
+    state = init_train_state(cfg, KEY)
+    step = jax.jit(make_train_step(cfg, OptimConfig(warmup_steps=1,
+                                                    total_steps=10)))
+    new_state, metrics = step(state, _batch(cfg))
+    assert int(new_state["step"]) == 1
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually moved
+    before = jax.tree.leaves(state["params"])[0]
+    after = jax.tree.leaves(new_state["params"])[0]
+    assert not np.allclose(np.asarray(before), np.asarray(after))
+
+
+@pytest.mark.parametrize("name", sorted(REDUCED))
+def test_reduced_prefill_decode(name):
+    cfg = REDUCED[name]
+    params = M.init(cfg, KEY)
+    B, S = 2, 16
+    batch = _batch(cfg, B, S)
+    del batch["labels"]
+    if "positions" in batch:
+        batch["positions"] = batch["positions"][:, :, :S]
+    lg, cache, cur = E.prefill(cfg, params, batch, capacity=S + 4)
+    assert lg.shape == (B, 1, cfg.padded_vocab)
+    tok = jnp.argmax(lg[:, :, :cfg.vocab_size], axis=-1).astype(jnp.int32)
+    lg2, cache = E.decode_step(cfg, params, cache, tok, cur)
+    assert lg2.shape == (B, 1, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(lg2, np.float32)).all()
+
+
+def test_greedy_decode_runs():
+    cfg = REDUCED["gemma2-2b"]
+    params = M.init(cfg, KEY)
+    B, S = 2, 16
+    batch = {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)}
+    lg, cache, cur = E.prefill(cfg, params, batch, capacity=S + 8)
+    first = jnp.argmax(lg[:, -1, :cfg.vocab_size], -1).astype(jnp.int32)[:, None]
+    toks, cache, cur = E.greedy_decode(cfg, params, cache, first, cur, 5)
+    assert toks.shape == (B, 5)
+    assert (np.asarray(toks) >= 0).all()
+    assert (np.asarray(toks) < cfg.vocab_size).all()
+
+
+# --------------------------------------------------------- full configs --
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_full_config_param_counts(name):
+    cfg = ARCHS[name]
+    lo, hi = EXPECTED_PARAMS_B[name]
+    pc = cfg.param_count() / 1e9
+    assert lo <= pc <= hi, f"{name}: {pc:.2f}B outside [{lo},{hi}]"
+
+
+def test_cell_grid_is_40_with_7_long_context_skips():
+    cells = list(all_cells())
+    assert len(cells) == 40
+    skipped = [(a, s) for a, s, ok in cells if not ok]
+    assert len(skipped) == 7
+    assert all(s == "long_500k" for _, s in skipped)
+    runnable_long = {a for a, s, ok in cells if s == "long_500k" and ok}
+    assert runnable_long == {"mamba2-1.3b", "jamba-v0.1-52b", "gemma2-2b"}
+
+
+def test_full_schema_abstract_shapes():
+    """Full (non-reduced) schemas build abstract params without allocation."""
+    from repro.launch.mesh import make_mesh_for
+    from repro.models.schema import abstract_params, param_count
+    for name in ("qwen1.5-110b", "deepseek-v2-236b"):
+        cfg = ARCHS[name]
+        sch = M.schema(cfg)
+        n = param_count(sch)
+        assert abs(n - cfg.param_count()) / cfg.param_count() < 0.02, name
+
+
+@pytest.mark.parametrize("name", ["jamba-v0.1-52b", "gemma2-2b",
+                                  "deepseek-v2-236b"])
+def test_depth_plan_covers_all_layers(name):
+    from repro.models.transformer import depth_plan
+    cfg = ARCHS[name]
+    prefix, period, n_periods = depth_plan(cfg)
+    assert prefix + period * n_periods == cfg.n_layers
+    # kinds at scanned positions are period-invariant
+    for p in range(period):
+        kinds = {cfg.block_kind(prefix + c * period + p)
+                 for c in range(n_periods)}
+        moes = {cfg.is_moe_layer(prefix + c * period + p)
+                for c in range(n_periods)}
+        assert len(kinds) == 1 and len(moes) == 1

@@ -1,0 +1,135 @@
+"""Data-pipeline determinism/sharding + blueprint-planner tests."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.configs.registry import ARCHS, REDUCED
+from repro.core.blueprint import HBM_BUDGET, suggest_plan
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM
+from repro.launch.mesh import make_mesh_for
+
+
+def test_batches_deterministic_across_restarts():
+    cfg = REDUCED["gemma2-2b"]
+    a = SyntheticLM(cfg, batch=8, seq=64)
+    b = SyntheticLM(cfg, batch=8, seq=64)
+    for step in (0, 5, 1000):
+        np.testing.assert_array_equal(a.global_batch(step)["tokens"],
+                                      b.global_batch(step)["tokens"])
+
+
+def test_shards_partition_the_global_batch():
+    cfg = REDUCED["gemma2-2b"]
+    pipe = SyntheticLM(cfg, batch=8, seq=32)
+    full = pipe.global_batch(3)["tokens"]
+    parts = [pipe.shard_batch(3, r, 4)["tokens"] for r in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts, axis=0), full)
+
+
+def test_elastic_resize_preserves_global_batch():
+    """Same step, different DP size -> identical global batch (the property
+    that makes elastic resume exact)."""
+    cfg = REDUCED["gemma2-2b"]
+    pipe = SyntheticLM(cfg, batch=8, seq=32)
+    full2 = np.concatenate([pipe.shard_batch(7, r, 2)["tokens"]
+                            for r in range(2)], axis=0)
+    full8 = np.concatenate([pipe.shard_batch(7, r, 8)["tokens"]
+                            for r in range(8)], axis=0)
+    np.testing.assert_array_equal(full2, full8)
+
+
+def test_labels_are_shifted_tokens():
+    cfg = REDUCED["gemma2-2b"]
+    pipe = SyntheticLM(cfg, batch=2, seq=16)
+    b = pipe.global_batch(0)
+    # both cut from the same (seq+1) stream
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_tokens_within_true_vocab():
+    cfg = REDUCED["mamba2-1.3b"]    # padded vocab > true vocab
+    pipe = SyntheticLM(cfg, batch=4, seq=64)
+    b = pipe.global_batch(0)
+    assert b["tokens"].max() < cfg.vocab_size
+
+
+def test_prefetcher_order_and_completeness():
+    items = list(range(20))
+    out = list(Prefetcher(iter(items), depth=3))
+    assert out == items
+
+
+def test_extras_per_family():
+    vl = SyntheticLM(ARCHS["qwen2-vl-72b"], batch=2, seq=8)
+    b = vl.extras(vl.global_batch(0))
+    assert b["positions"].shape == (3, 2, 8)
+    wh = SyntheticLM(ARCHS["whisper-tiny"], batch=2, seq=8)
+    b = wh.extras(wh.global_batch(0))
+    assert b["enc_embeds"].shape == (2, 1500, 384)
+
+
+# -------------------------------------------------------------- blueprint --
+
+MESH = {"data": 16, "model": 16}   # planner reasons over topology shape only
+
+
+def test_planner_remat_scales_with_model():
+    small = suggest_plan(ARCHS["gemma2-2b"], SHAPES["train_4k"], MESH)
+    big = suggest_plan(ARCHS["qwen1.5-110b"], SHAPES["train_4k"], MESH)
+    assert small.remat == "none"
+    assert big.remat == "full"
+
+
+def test_planner_memory_estimates_fit():
+    for name, cfg in ARCHS.items():
+        plan = suggest_plan(cfg, SHAPES["train_4k"], MESH)
+        assert plan.est["opt_state_bytes"] < HBM_BUDGET, name
+
+
+def test_planner_cache_placement_by_shape():
+    dec = suggest_plan(ARCHS["qwen3-32b"], SHAPES["decode_32k"], MESH)
+    assert dec.act_rules["cache_seq"] == ("model",)
+    lng = suggest_plan(ARCHS["mamba2-1.3b"], SHAPES["long_500k"], MESH)
+    assert lng.act_rules["cache_seq"][0] == "data"
+
+
+def test_planner_user_overrides_win():
+    """Ambari semantics: suggestions are defaults the user can override."""
+    plan = suggest_plan(ARCHS["qwen1.5-110b"], SHAPES["train_4k"], MESH,
+                        overrides={"remat": "dots"})
+    assert plan.remat == "dots"
+
+
+def test_planner_optimize_mode_encodes_hillclimb_winners():
+    from repro.core.blueprint import optimized_cfg_overrides
+    # small dense model training -> DP-heavy (TP off, model joins batch)
+    p = suggest_plan(ARCHS["gemma2-2b"], SHAPES["train_4k"], MESH,
+                     optimize=True)
+    assert p.param_rules["ff"] == ()
+    assert p.act_rules["batch"] == ("pod", "data", "model")
+    # serving -> 2-axis TP + bf16 params, int8 cache for GQA
+    p = suggest_plan(ARCHS["qwen1.5-110b"], SHAPES["decode_32k"], MESH,
+                     optimize=True)
+    assert p.serve_param_dtype == "bfloat16"
+    assert p.param_rules["embed"] == ()
+    assert optimized_cfg_overrides(ARCHS["qwen1.5-110b"],
+                                   SHAPES["decode_32k"])["cache_quant"]
+    # MoE/MLA train -> scatter combine + head-sharded up-projections + dots
+    p = suggest_plan(ARCHS["deepseek-v2-236b"], SHAPES["train_4k"], MESH,
+                     optimize=True)
+    assert p.remat == "dots"
+    o = optimized_cfg_overrides(ARCHS["deepseek-v2-236b"], SHAPES["train_4k"])
+    assert o == {"moe_combine": "scatter", "mla_shard": "heads"}
+    # ...but MLA *decode* keeps the v1 serving plan (measured regression)
+    p = suggest_plan(ARCHS["deepseek-v2-236b"], SHAPES["decode_32k"], MESH,
+                     optimize=True)
+    assert p.serve_param_dtype == "float32"
+    o = optimized_cfg_overrides(ARCHS["deepseek-v2-236b"],
+                                SHAPES["decode_32k"])
+    assert "mla_shard" not in o
+    # big dense train keeps TP (does not fit DP-only)
+    p = suggest_plan(ARCHS["qwen1.5-110b"], SHAPES["train_4k"], MESH,
+                     optimize=True)
+    assert p.param_rules["ff"] == ("model",)

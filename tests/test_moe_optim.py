@@ -1,0 +1,145 @@
+"""MoE routing invariants (hypothesis) + optimizer unit tests."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import REDUCED
+from repro.models import moe as moe_mod
+from repro.models.moe import _positions_in_expert, capacity, moe_apply
+from repro.models.schema import init_params
+from repro.optim.adamw import OptimConfig, global_norm, lr_at, opt_init, \
+    opt_update
+
+KEY = jax.random.PRNGKey(3)
+
+
+# ------------------------------------------------------------ routing ----
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 64), st.integers(2, 16), st.integers(1, 4))
+def test_positions_in_expert_are_dense_ranks(n_tokens, n_expert, k):
+    flat = np.asarray(jax.random.randint(
+        jax.random.fold_in(KEY, n_tokens * 131 + n_expert * 7 + k),
+        (n_tokens * k,), 0, n_expert))
+    pos = np.asarray(_positions_in_expert(jnp.asarray(flat), n_expert))
+    for e in range(n_expert):
+        got = sorted(pos[flat == e].tolist())
+        assert got == list(range(len(got)))   # dense 0..n_e-1 ranks
+    # earlier slots win lower ranks (priority by token order)
+    for e in range(n_expert):
+        idxs = np.nonzero(flat == e)[0]
+        assert (np.diff(pos[idxs]) > 0).all()
+
+
+def _moe_cfg(**kw):
+    cfg = REDUCED["qwen2-moe-a2.7b"]
+    return dataclasses.replace(cfg, **kw)
+
+
+def test_moe_capacity_drops_lowest_priority():
+    cfg = _moe_cfg(moe_capacity_factor=0.25)
+    p = init_params(moe_mod.moe_schema(cfg), KEY)
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model), jnp.float32)
+    y, aux = moe_apply(cfg, p, x)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_moe_no_drops_at_high_capacity_matches_dense_gather():
+    """With capacity >> needed, MoE output == explicit per-token expert sum."""
+    cfg = _moe_cfg(moe_capacity_factor=8.0, n_shared_experts=0)
+    p = init_params(moe_mod.moe_schema(cfg), KEY)
+    B, S = 2, 8
+    x = jax.random.normal(KEY, (B, S, cfg.d_model), jnp.float32)
+    y, _ = moe_apply(cfg, p, x)
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"])
+    probs = jax.nn.softmax(logits, -1)
+    gates, idx = jax.lax.top_k(probs, cfg.moe_top_k)
+    gates = gates / (gates.sum(-1, keepdims=True) + 1e-20)  # norm_topk
+    want = np.zeros_like(np.asarray(x))
+    xin = np.asarray(x)
+    for b in range(B):
+        for s in range(S):
+            for j in range(cfg.moe_top_k):
+                e = int(idx[b, s, j])
+                h = (jax.nn.silu(xin[b, s] @ p["w_gate"][e])
+                     * (xin[b, s] @ p["w_up"][e]))
+                want[b, s] += float(gates[b, s, j]) * np.asarray(
+                    h @ p["w_down"][e])
+    np.testing.assert_allclose(np.asarray(y), want, rtol=2e-4, atol=2e-4)
+
+
+def test_moe_aux_loss_uniform_router_is_one_coef():
+    """With a perfectly uniform router, E * sum(f_e * P_e) * k == k (Switch
+    normalisation), so aux == coef * k."""
+    cfg = _moe_cfg(router_aux_coef=0.01)
+    p = init_params(moe_mod.moe_schema(cfg), KEY)
+    p = dict(p, router=jnp.zeros_like(p["router"]))   # uniform probs
+    x = jax.random.normal(KEY, (2, 64, cfg.d_model), jnp.float32)
+    _, aux = moe_apply(cfg, p, x)
+    assert abs(float(aux) - 0.01 * cfg.moe_top_k) < 2e-3
+
+
+def test_decode_grouping_single_global_group():
+    cfg = _moe_cfg()
+    p = init_params(moe_mod.moe_schema(cfg), KEY)
+    x = jax.random.normal(KEY, (4, 1, cfg.d_model), jnp.float32)
+    y, _ = moe_apply(cfg, p, x, decode=True)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_capacity_formula():
+    cfg = _moe_cfg(moe_capacity_factor=1.25)
+    c = capacity(cfg, 4096)
+    assert c == int(np.ceil(4096 * cfg.moe_top_k / cfg.n_routed_experts
+                            * 1.25))
+    assert capacity(cfg, 1) >= 1
+
+
+# ----------------------------------------------------------- optimizer ----
+
+def test_lr_schedule_shape():
+    o = OptimConfig(peak_lr=1.0, warmup_steps=10, total_steps=110,
+                    min_lr_ratio=0.1)
+    # (step+1)/warmup ramp: step 0 already has a non-zero lr
+    assert abs(float(lr_at(o, jnp.asarray(0))) - 0.1) < 1e-6
+    assert abs(float(lr_at(o, jnp.asarray(9))) - 1.0) < 1e-6
+    assert abs(float(lr_at(o, jnp.asarray(110))) - 0.1) < 1e-6
+    mid = float(lr_at(o, jnp.asarray(60)))
+    assert 0.1 < mid < 1.0
+
+
+def test_adamw_clip_and_decay():
+    o = OptimConfig(peak_lr=1e-2, warmup_steps=0, total_steps=10,
+                    clip_norm=1.0, weight_decay=0.0)
+    params = {"w": jnp.ones((4, 4))}
+    grads = {"w": jnp.full((4, 4), 100.0)}   # huge -> clipped
+    st_ = opt_init(params)
+    new_p, m, v, gn = opt_update(o, params, grads, st_["m"], st_["v"],
+                                 jnp.asarray(0))
+    assert float(gn) == pytest.approx(np.sqrt(16 * 100.0 ** 2), rel=1e-5)
+    # update magnitude bounded by lr (Adam normalises) regardless of scale
+    delta = np.abs(np.asarray(new_p["w"] - params["w"]))
+    assert delta.max() <= 1e-2 * 1.2
+
+
+def test_adamw_deterministic():
+    o = OptimConfig()
+    params = {"w": jnp.ones((3,))}
+    grads = {"w": jnp.asarray([0.1, -0.2, 0.3])}
+    s = opt_init(params)
+    a = opt_update(o, params, grads, s["m"], s["v"], jnp.asarray(5))
+    b = opt_update(o, params, grads, s["m"], s["v"], jnp.asarray(5))
+    np.testing.assert_array_equal(np.asarray(a[0]["w"]),
+                                  np.asarray(b[0]["w"]))
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert float(global_norm(t)) == pytest.approx(5.0)

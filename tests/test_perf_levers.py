@@ -1,0 +1,92 @@
+"""Correctness of the §Perf optimization levers (each vs its baseline)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import REDUCED
+from repro.models import model as M
+from repro.models import moe as moe_mod
+from repro.models.attention import attend, quantize_kv
+from repro.models.moe import moe_apply
+from repro.models.schema import init_params
+from repro.serving import engine as E
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("arch", ["deepseek-v2-236b", "qwen2-moe-a2.7b",
+                                  "jamba-v0.1-52b"])
+@pytest.mark.parametrize("decode", [False, True])
+def test_moe_scatter_combine_equals_gather(arch, decode):
+    cfg_g = dataclasses.replace(REDUCED[arch], moe_combine="gather")
+    cfg_s = dataclasses.replace(cfg_g, moe_combine="scatter")
+    p = init_params(moe_mod.moe_schema(cfg_g), KEY)
+    x = jax.random.normal(KEY, (2, 24, cfg_g.d_model), jnp.float32)
+    yg, auxg = moe_apply(cfg_g, p, x, decode=decode)
+    ys, auxs = moe_apply(cfg_s, p, x, decode=decode)
+    np.testing.assert_array_equal(np.asarray(yg), np.asarray(ys))
+    assert float(auxg) == float(auxs)
+
+
+@pytest.mark.parametrize("window", [None, 1024])
+def test_attn_mask_opt_is_exact(window):
+    B, S, H, KVH, d = 1, 8192, 4, 2, 64
+    q = jax.random.normal(KEY, (B, S, H, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, KVH, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, KVH, d))
+    a = attend(q, k, v, causal=True, window=window, mask_opt=False)
+    b = attend(q, k, v, causal=True, window=window, mask_opt=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_quantize_kv_roundtrip_error():
+    x = jax.random.normal(KEY, (2, 64, 4, 128), jnp.float32)
+    q, s = quantize_kv(x)
+    assert q.dtype == jnp.int8
+    deq = q.astype(jnp.float32) * s[..., None]
+    err = np.abs(np.asarray(deq - x))
+    # bound: half a quantisation step per element
+    bound = np.asarray(s[..., None]) * 0.5 + 1e-6
+    assert (err <= bound).all()
+
+
+@pytest.mark.parametrize("arch", ["gemma2-2b", "qwen3-32b"])
+def test_int8_cache_decode_close_to_fp32(arch):
+    cfg_f = dataclasses.replace(REDUCED[arch], dtype="float32")
+    cfg_q = dataclasses.replace(cfg_f, cache_quant=True)
+    B, S = 2, 24
+    tokens = jax.random.randint(KEY, (B, S + 1), 0, cfg_f.vocab_size)
+    params = M.init(cfg_f, KEY)
+    ref_lg, _ = M.prefill(cfg_f, params, {"tokens": tokens})
+    _, cache, cur = E.prefill(cfg_q, params, {"tokens": tokens[:, :S]}, S + 8)
+    lg, _ = E.decode_step(cfg_q, params, cache, tokens[:, S:S + 1], cur)
+    rel = (float(jnp.max(jnp.abs(ref_lg - lg)))
+           / (float(jnp.max(jnp.abs(ref_lg))) + 1e-9))
+    assert rel < 0.05, rel
+    # the quantised cache leaves really are int8
+    leaf = jax.tree.leaves({"k": cache})[0]
+    flat = jax.tree.leaves(cache)
+    assert any(l.dtype == jnp.int8 for l in flat)
+
+
+def test_bf16_serve_params_spec_override():
+    from repro.configs.base import SHAPES
+    from repro.core.blueprint import suggest_plan
+    from repro.launch.mesh import make_mesh_for
+    from repro.launch.specs import abstract_params_only
+    import dataclasses as dc
+    cfg = REDUCED["qwen3-32b"]
+    mesh = make_mesh_for(1, 1)
+    plan = suggest_plan(cfg, SHAPES["decode_32k"], {"data": 1, "model": 1})
+    plan_bf16 = dc.replace(plan, serve_param_dtype="bfloat16")
+    p32 = abstract_params_only(cfg, mesh, plan)
+    p16 = abstract_params_only(cfg, mesh, plan_bf16)
+    l32 = jax.tree.leaves(p32)
+    l16 = jax.tree.leaves(p16)
+    assert any(l.dtype == jnp.float32 for l in l32)
+    assert all(l.dtype != jnp.float32 for l in l16)
+    assert sum(np.prod(l.shape) * l.dtype.itemsize for l in l16) < \
+        sum(np.prod(l.shape) * l.dtype.itemsize for l in l32)

@@ -1,0 +1,164 @@
+"""Paper-faithfulness tests: Fig. 1 sequence, security flow, Tables 1-2."""
+import pytest
+
+from repro.core.cluster import ClusterManager, RegionOccupiedError
+from repro.core.provisioner import ClusterProvisioner
+from repro.core.services import PORTS, SERVICE_MATRIX, AmbariServer
+from repro.core.simcloud import AccessKeyError, InstanceState, SimCloud
+
+
+def make_provisioner(deactivate=False):
+    cloud = SimCloud(seed=7)
+    cloud.register_key("AK", "SK")
+    prov = ClusterProvisioner(cloud, region="us-east-1", access_key_id="AK",
+                              secret_key="SK",
+                              deactivate_key_after_discovery=deactivate)
+    return cloud, prov
+
+
+def test_figure1_sequence():
+    """The provisioning event log follows the paper's Fig. 1 exactly."""
+    _, prov = make_provisioner()
+    cluster = prov.provision(n_slaves=4)
+    cluster.log.assert_order(
+        "spawn_slave",
+        "create_temp_user",
+        "install_agent",
+        "spawn_master",
+        "query_ec2_slaves",
+        "assign_hostnames",
+        "update_hosts_file",
+        "generate_keypair",
+        "distribute_keypair_hosts",
+        "delete_temp_user",
+        "tag_instances",
+        "install_ambari_server",
+        "start_ambari_server",
+    )
+
+
+def test_slave_steps_precede_master_discovery():
+    _, prov = make_provisioner()
+    cluster = prov.provision(n_slaves=2)
+    log = cluster.log
+    assert log.last_index("install_agent") < log.first_index(
+        "query_ec2_slaves")
+
+
+def test_temp_user_window_closes():
+    """Security: temp user (password auth) deleted once keys distributed."""
+    _, prov = make_provisioner()
+    cluster = prov.provision(n_slaves=3)
+    assert not any(cluster.security.temp_user_active.values())
+    log = cluster.log
+    assert log.first_index("distribute_keypair_hosts") < log.first_index(
+        "delete_temp_user")
+
+
+def test_hostnames_and_tags():
+    cloud, prov = make_provisioner()
+    cluster = prov.provision(n_slaves=3)
+    hosts = cluster.directory.hosts_file()
+    assert "master" in hosts and "slave-0" in hosts and "slave-2" in hosts
+    for node in cluster.directory.slaves():
+        inst = cloud.instances[node.instance_id]
+        assert inst.tags["instacluster:role"] == node.hostname
+
+
+def test_key_deactivation_after_discovery():
+    cloud, prov = make_provisioner(deactivate=True)
+    prov.provision(n_slaves=2)
+    assert "AK" not in cloud.active_keys
+    with pytest.raises(AccessKeyError):
+        cloud.describe_instances(region="us-east-1", access_key_id="AK")
+
+
+def test_key_deactivation_skipped_for_spot():
+    """Paper: deactivation advisable only if NOT using spot (restarts need
+    live keys)."""
+    cloud, prov = make_provisioner(deactivate=True)
+    cluster = prov.provision(n_slaves=2, spot=True)
+    assert "AK" in cloud.active_keys
+    assert "skip_key_deactivation" in cluster.log.actions()
+
+
+def test_keypair_regenerated_on_rediscovery():
+    _, prov = make_provisioner()
+    cluster = prov.provision(n_slaves=2)
+    g1 = cluster.security.keypair_generation
+    kp1 = cluster.security.cluster_keypair
+    prov.rediscover(cluster)
+    assert cluster.security.keypair_generation == g1 + 1
+    assert cluster.security.cluster_keypair != kp1
+
+
+def test_restart_remaps_private_ips():
+    cloud, prov = make_provisioner()
+    cluster = prov.provision(n_slaves=4)
+    old_ips = {n.hostname: n.private_ip
+               for n in cluster.directory.nodes.values()}
+    cloud.stop_instances(cluster.instance_ids, "AK")
+    cloud.start_instances(cluster.instance_ids, "AK")
+    changed = prov.rediscover(cluster)
+    assert changed, "restart must change at least one private IP"
+    for hn in changed:
+        assert cluster.directory.nodes[hn].private_ip != old_ips[hn]
+    # hosts file reflects new IPs
+    hosts = cluster.directory.hosts_file()
+    for n in cluster.directory.nodes.values():
+        assert f"{n.private_ip}\t{n.hostname}" in hosts
+
+
+# ---------------------------------------------------------------- Table 1 --
+
+def test_table1_every_provisionable_service_installs():
+    cloud, prov = make_provisioner()
+    cluster = prov.provision(n_slaves=4)
+    ambari = AmbariServer(cloud, cluster)
+    provisionable = [n for n, (p, _, _) in SERVICE_MATRIX.items()
+                     if p is not None]
+    ambari.install(provisionable)
+    for name in provisionable:
+        ambari.start(name)
+    assert set(ambari.status()) == set(provisionable)
+    assert all(v == "started" for v in ambari.status().values())
+
+
+def test_table1_ns_services_rejected():
+    cloud, prov = make_provisioner()
+    cluster = prov.provision(n_slaves=1)
+    ambari = AmbariServer(cloud, cluster)
+    with pytest.raises(ValueError):
+        ambari.install(["impala"])   # n/s in Table 1
+
+
+# ---------------------------------------------------------------- Table 2 --
+
+def test_table2_ports():
+    assert PORTS["spark-driver"] == 7077
+    assert PORTS["spark-webui"] == 8888
+    assert PORTS["spark-jobserver"] == 8090
+    assert PORTS["hue"] == 8808
+    assert PORTS["ambari"] == 8080
+
+
+# ------------------------------------------------------- region limitation --
+
+def test_one_cluster_per_region_limit_and_lift():
+    mgr = ClusterManager()
+    mgr.build_cluster(n_slaves=2)
+    with pytest.raises(RegionOccupiedError):
+        mgr.build_cluster(n_slaves=2)
+    mgr2 = ClusterManager(allow_multiple_per_region=True)
+    mgr2.build_cluster(n_slaves=2)
+    mgr2.build_cluster(n_slaves=2)       # beyond-paper: now allowed
+    assert len(mgr2.clusters("us-east-1")) == 2
+
+
+def test_cluster_spec_roundtrip():
+    """Paper §4: researchers share (type, count, config) for reproduction."""
+    mgr = ClusterManager(allow_multiple_per_region=True)
+    a = mgr.build_cluster(n_slaves=3, services=("hdfs", "spark", "hue"))
+    b = mgr.build_from_spec(a.spec(), region="eu-west-1")
+    assert b.cluster.spec()["n_slaves"] == 3
+    assert set(b.ambari.services) == set(a.ambari.services)

@@ -1,0 +1,46 @@
+"""Real-SPMD integration tests: run checks in a subprocess with 8 fake CPU
+devices (keeps the main pytest process single-device)."""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = pathlib.Path(__file__).parent / "spmd_scripts" / "run_spmd_checks.py"
+SRC = str(pathlib.Path(__file__).parent.parent / "src")
+
+
+def run_check(name: str, timeout: int = 900) -> str:
+    env = {"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin:/usr/local/bin",
+           "JAX_PLATFORMS": "cpu", "HOME": "/tmp"}
+    proc = subprocess.run([sys.executable, str(SCRIPT), name],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=env)
+    assert proc.returncode == 0, (proc.stdout[-3000:], proc.stderr[-3000:])
+    assert f"PASS {name}" in proc.stdout, proc.stdout[-3000:]
+    return proc.stdout
+
+
+@pytest.mark.slow
+def test_sharded_train_step_matches_single_device():
+    run_check("sharded_train_step_matches_single_device")
+
+
+@pytest.mark.slow
+def test_elastic_reshard_resume():
+    run_check("elastic_reshard_resume")
+
+
+@pytest.mark.slow
+def test_compressed_psum_error_bound():
+    run_check("compressed_psum")
+
+
+@pytest.mark.slow
+def test_decode_cache_stays_sharded():
+    run_check("decode_cache_stays_sharded")
+
+
+@pytest.mark.slow
+def test_gpipe_matches_sequential():
+    run_check("gpipe_matches_sequential")

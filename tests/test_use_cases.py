@@ -1,0 +1,95 @@
+"""The paper's eight demonstration use cases (Appendix A), as tests."""
+import pytest
+
+from repro.core.cluster import ClusterManager
+from repro.core.interaction import InteractionError
+from repro.core.simcloud import InstanceState
+
+TEXT = b"""the quick brown fox jumps over the lazy dog
+the dog barks and the fox runs
+"""
+
+
+@pytest.fixture()
+def platform():
+    mgr = ClusterManager()
+    ic = mgr.build_cluster(n_slaves=6,
+                           services=("hdfs", "yarn", "zookeeper", "spark",
+                                     "hue"))
+    return mgr, ic
+
+
+def test_use_case_1_provision_and_install(platform):
+    """6-node cluster with the selected services installed + started."""
+    _, ic = platform
+    assert len(ic.cluster.slaves) == 6
+    st = ic.ambari.status()
+    assert st["spark"] == "started" and st["hdfs"] == "started"
+    assert ic.bringup_seconds < 30 * 60       # "minutes, not hours"
+
+
+def test_use_case_2_stop_cluster(platform):
+    mgr, ic = platform
+    ic.lifecycle.stop(ic.cluster)
+    states = {mgr.cloud.instances[i].state for i in ic.cluster.instance_ids}
+    assert states == {InstanceState.STOPPED}
+    assert mgr.cloud.hourly_cost(ic.cluster.instance_ids) == 0.0
+
+
+def test_use_case_3_start_cluster_slaves_first(platform):
+    mgr, ic = platform
+    ic.lifecycle.stop(ic.cluster)
+    ic.lifecycle.start(ic.cluster)
+    log = ic.log
+    assert log.first_index("start_slaves") < log.first_index("start_master")
+    # master re-discovers new private IPs (paper's restart story)
+    assert log.first_index("start_master") < log.last_index(
+        "remap_private_ips")
+    states = {mgr.cloud.instances[i].state for i in ic.cluster.instance_ids}
+    assert states == {InstanceState.RUNNING}
+
+
+def test_use_case_4_extend_by_three(platform):
+    _, ic = platform
+    before = len(ic.cluster.directory.slaves())
+    nodes = ic.lifecycle.extend(ic.cluster, 3)
+    assert [n.hostname for n in nodes] == [f"slave-{before + i}"
+                                           for i in range(3)]
+    assert len(ic.cluster.directory.slaves()) == before + 3
+
+
+def test_use_case_5_browse_storage(platform):
+    _, ic = platform
+    ic.hue.upload_file("/data/corpus.txt", TEXT)
+    listing = ic.hue.browse_storage("/data")
+    assert listing == [{"path": "/data/corpus.txt", "bytes": len(TEXT)}]
+
+
+def test_use_case_6_submit_job(platform):
+    _, ic = platform
+    job = ic.hue.submit_job("spark", lambda: sum(range(10)))
+    assert job.status == "succeeded" and job.result == 45
+
+
+def test_use_case_7_upload_to_hdfs(platform):
+    _, ic = platform
+    info = ic.hue.upload_file("/data/corpus.txt", TEXT)
+    assert info["bytes"] == len(TEXT)
+    assert len(info["placement"]) >= 1
+
+
+def test_use_case_8_wordcount(platform):
+    _, ic = platform
+    ic.hue.upload_file("/data/corpus.txt", TEXT)
+    counts = ic.hue.run_wordcount("/data/corpus.txt")
+    assert counts["the"] == 4
+    assert counts["fox"] == 2
+    assert counts["dog"] == 2
+    assert counts["barks"] == 1
+
+
+def test_interaction_requires_running_services():
+    mgr = ClusterManager()
+    ic = mgr.build_cluster(n_slaves=2, services=("hdfs", "hue"))
+    with pytest.raises(InteractionError):
+        ic.hue.submit_job("spark", lambda: 1)   # spark not installed
