@@ -110,6 +110,16 @@ def suggest_plan(cfg: ModelConfig, shape: ShapeConfig, mesh,
             act_rules["cache_seq"] = ("model",)
         est["cache_bytes"] = _cache_bytes(cfg, shape) / (
             model_par * data_par * pod_par)
+        pp = serving_page_plan(cfg, shape, sizes)
+        if pp is not None:
+            est["page_size"] = pp["page_size"]
+            est["num_pages"] = pp["num_pages"]
+            est["pages_per_seq"] = pp["pages_per_seq"]
+            est["pool_bytes_per_chip"] = pp["pool_bytes"] / n_dev
+            notes.append(
+                f"paged-KV pool: {pp['num_pages']} pages x "
+                f"{pp['page_size']} tok (fits {pp['max_concurrent_seqs']} "
+                f"full-length seqs vs {shape.global_batch} capacity-padded)")
 
     serve_dtype = "float32"
     if optimize:
@@ -170,6 +180,46 @@ def optimized_cfg_overrides(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, A
     if shape.kind == "decode" and cfg.attn_impl == "gqa":
         out["cache_quant"] = True
     return out
+
+
+def serving_page_plan(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
+                      page_size: int = 16) -> Optional[Dict[str, Any]]:
+    """Size the paged-KV page pool for the continuous-batching scheduler.
+
+    The Ambari-style suggested config for the "serve" service
+    (``repro.core.services.AmbariServer.provision_serving``): whatever HBM
+    is left after bf16 serving params becomes one shared page pool, and the
+    scheduler's admission control (worst-case page reservation) keeps
+    occupancy inside it. Returns None for archs the paged engine does not
+    cover (MLA / enc-dec — they keep the dense engine).
+
+    All quantities are *global* (whole mesh); divide ``pool_bytes`` by the
+    device count for the per-chip footprint. The suggestion, as everywhere
+    in the planner, is a starting point the user may override.
+    """
+    if cfg.attn_impl == "mla" or cfg.is_encdec:
+        return None
+    from repro.serving.paged_cache import page_bytes_per_token
+    if page_bytes_per_token(cfg) == 0:
+        return None                 # pure-SSM arch: O(1) state, no KV pages
+    sizes = _mesh_sizes(mesh) if mesh is not None else {}
+    n_dev = 1
+    for v in sizes.values():
+        n_dev *= v
+    param_bytes = cfg.param_count() * 2            # bf16 serving params
+    budget = max(n_dev * HBM_BUDGET - param_bytes, 0)
+    tok_bytes = page_bytes_per_token(cfg)
+    num_pages = int(budget // (tok_bytes * page_size))
+    pages_per_seq = -(-shape.seq_len // page_size)
+    return {
+        "page_size": page_size,
+        "num_pages": num_pages,
+        "pages_per_seq": pages_per_seq,
+        # page 0 of the pool is the scheduler's sink page, never allocated
+        "max_concurrent_seqs": max(num_pages - 1, 0) // max(pages_per_seq, 1),
+        "page_bytes_per_token": tok_bytes,
+        "pool_bytes": num_pages * page_size * tok_bytes,
+    }
 
 
 def _cache_bytes(cfg: ModelConfig, shape: ShapeConfig) -> int:

@@ -135,6 +135,46 @@ class AmbariServer:
             out.append(svc)
         return out
 
+    # ---------------------------------------------------------- serving --
+    def provision_serving(self, model_cfg, shape, mesh=None,
+                          config_overrides: Optional[Dict[str, Any]] = None
+                          ) -> ServiceInstance:
+        """Install the continuous-batching serving engine as a service.
+
+        The framework analogue of installing Impala's backing service: the
+        page-pool sizing comes from the blueprint planner
+        (``repro.core.blueprint.serving_page_plan``) the same way Ambari
+        suggests a service configuration from cluster facts, and the user
+        may override any knob before start. ``model_cfg``/``shape`` are the
+        arch + input-shape cell being served.
+        """
+        from repro.core.blueprint import serving_page_plan
+        pool = serving_page_plan(model_cfg, shape, mesh)
+        if pool is None:
+            raise ValueError(
+                f"{model_cfg.name} is not paged-servable (MLA/enc-dec/"
+                "pure-SSM); provision the dense engine instead")
+        if pool["num_pages"] < 1:
+            raise ValueError(
+                f"{model_cfg.name} on {shape.name}: bf16 params leave no "
+                f"HBM for KV pages on this mesh — provision more chips "
+                f"(plan: {pool})")
+        self.cloud._advance(LATENCY["service_install"])
+        cfg = self.suggest_config("impala")      # serve endpoint placement
+        cfg.update(pool)
+        cfg["arch"] = model_cfg.name
+        cfg["shape"] = shape.name
+        cfg.update(config_overrides or {})
+        svc = ServiceInstance(name="serve", port=cfg.get("port"),
+                              placement=cfg["placement"],
+                              state=ServiceState.INSTALLED, config=cfg)
+        self.services["serve"] = svc
+        self.cluster.log.emit(self.cloud.clock, "ambari", "install_service",
+                              service="serve", placement=len(cfg["placement"]),
+                              num_pages=pool["num_pages"],
+                              page_size=pool["page_size"])
+        return svc
+
     def start(self, name: str) -> ServiceInstance:
         svc = self.services[name]
         self.cloud._advance(LATENCY["service_start"])

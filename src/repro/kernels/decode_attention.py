@@ -7,6 +7,12 @@ triple, and the tiny log-sum-exp combine runs as plain jnp in the wrapper
 serving engine's sequence-sharded distributed decode uses across chips —
 here it is the *within-chip* version that turns HBM cache reads into
 streamed VMEM blocks.
+
+This kernel assumes a contiguous per-sequence cache (the static-batch
+engine's ring buffers). ``repro.kernels.paged_decode`` is the block-table
+variant for the continuous-batching scheduler's paged KV cache: same
+partials and the same LSE combine, but each grid step DMAs one *page*
+resolved through a scalar-prefetched block table.
 """
 from __future__ import annotations
 

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _fd
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_decode as _pd
 from repro.kernels import ssd as _ssd
 
 
@@ -46,6 +47,33 @@ def decode_attention(q, k_cache, v_cache, *, softcap=None, scale=None,
     o_glob = (o * w[..., None]).sum(axis=1)                 # (BK,G,d)
     out = o_glob / jnp.maximum(l_glob, 1e-30)[..., None]
     return out.reshape(B, KVH, G, d).reshape(B, H, d).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "window", "scale",
+                                             "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, block_table, seq_lens, *,
+                           k_scale_pages=None, v_scale_pages=None,
+                           softcap=None, window=None, scale=None,
+                           interpret=False):
+    """Paged flash-decode: per-page partials from the kernel, LSE combine
+    in jnp (same structure as ``decode_attention``).
+
+    q: (B,H,d); pools (P,ps,KVH,d); block_table (B,n_pg); seq_lens (B,)
+    -> (B,H,d). See ``repro.kernels.paged_decode`` for the page gather.
+    """
+    B, H, d = q.shape
+    KVH = k_pages.shape[2]
+    G = H // KVH
+    m, l, o = _pd.paged_decode_partials(
+        q, k_pages, v_pages, block_table, seq_lens,
+        k_scale_pages=k_scale_pages, v_scale_pages=v_scale_pages,
+        softcap=softcap, window=window, scale=scale, interpret=interpret)
+    m_glob = m.max(axis=2, keepdims=True)                   # (B,KVH,1,G)
+    w = jnp.exp(m - m_glob)
+    l_glob = (l * w).sum(axis=2)                            # (B,KVH,G)
+    o_glob = (o * w[..., None]).sum(axis=2)                 # (B,KVH,G,d)
+    out = o_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+    return out.reshape(B, H, d).astype(q.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

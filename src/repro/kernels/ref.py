@@ -52,6 +52,37 @@ def decode_attention_ref(q, k_cache, v_cache, *, softcap=None, scale=None,
     return o.reshape(B, H, d).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pages, v_pages, block_table, seq_lens, *,
+                               softcap=None, window=None, scale=None):
+    """Oracle for the paged flash-decode kernel: gather pages, mask, attend.
+
+    q: (B,H,d); pools: (P,ps,KVH,d); block_table: (B,n_pg) int32;
+    seq_lens: (B,) live token counts -> (B,H,d).
+    """
+    B = q.shape[0]
+    ps = k_pages.shape[1]
+    n_pg = block_table.shape[1]
+    k = k_pages[block_table].reshape(B, n_pg * ps, *k_pages.shape[2:])
+    v = v_pages[block_table].reshape(B, n_pg * ps, *v_pages.shape[2:])
+    if window is None:
+        return decode_attention_ref(q, k, v, softcap=softcap, scale=scale,
+                                    valid_len=seq_lens)
+    pos = jnp.arange(n_pg * ps)[None]
+    ok = (pos < seq_lens[:, None]) & (pos >= seq_lens[:, None] - window)
+    H, d = q.shape[1:]
+    KVH = k.shape[2]
+    G = H // KVH
+    sc = scale if scale is not None else 1.0 / math.sqrt(d)
+    qf = q.astype(jnp.float32).reshape(B, KVH, G, d)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k.astype(jnp.float32)) * sc
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(ok[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, d).astype(q.dtype)
+
+
 def ssd_ref(x, dt, A, Bm, Cm, h0=None):
     """Sequential SSD recurrence (exact oracle).
 

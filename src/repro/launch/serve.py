@@ -1,8 +1,20 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Batched prefill + greedy decode on the arch's reduced config (CPU); the
-full-config serve paths (decode_32k / long_500k) are lowered and analysed
-by the dry-run.
+Two engines, selectable with ``--engine``:
+
+* ``static`` — the original fixed-batch prefill + greedy decode
+  (``repro.serving.engine``): one batch, one ring-buffer cache, every
+  stream padded to the same capacity and decoded until the longest one
+  finishes.
+* ``paged`` — the continuous-batching scheduler over the paged KV cache
+  (``repro.serving.scheduler``): requests join on arrival, evict on
+  finish, and K/V live in a shared page pool sized by the blueprint
+  planner (``repro.core.blueprint.serving_page_plan``). ``--requests``
+  builds a mixed-length workload with staggered arrivals to show the
+  occupancy win; see ``benchmarks/serve_bench.py`` for the head-to-head.
+
+Both paths run the arch's reduced config on CPU; the full-config serve
+cells (decode_32k / long_500k) are lowered and analysed by the dry-run.
 """
 from __future__ import annotations
 
@@ -12,23 +24,16 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.registry import ARCHS, get_reduced
 from repro.models import model as M
 from repro.serving import engine as E
+from repro.serving.scheduler import ContinuousBatchingScheduler, supports_paged
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    args = ap.parse_args()
-
-    cfg = get_reduced(args.arch)
+def run_static(cfg, params, args) -> dict:
     key = jax.random.PRNGKey(0)
-    params = M.init(cfg, key)
     B, S = args.batch, args.prompt_len
     batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
     if cfg.rope_variant == "mrope":
@@ -50,12 +55,68 @@ def main() -> None:
                                        args.gen)
     toks.block_until_ready()
     t_dec = time.time() - t0
-    print(json.dumps({
+    return {
+        "engine": "static",
         "arch": cfg.name,
         "prefill_tok_per_s": round(B * S / t_pre, 1),
         "decode_tok_per_s": round(B * args.gen / t_dec, 1),
         "generated": [[int(t) for t in row[:8]] for row in toks],
-    }))
+    }
+
+
+def run_paged(cfg, params, args) -> dict:
+    if not supports_paged(cfg):
+        raise SystemExit(f"{cfg.name}: use --engine static (MLA/enc-dec)")
+    rng = np.random.RandomState(args.seed)
+    max_seq = args.prompt_len + args.gen + 8
+    sched = ContinuousBatchingScheduler(
+        cfg, params, max_slots=args.batch, page_size=args.page_size,
+        max_seq_len=max_seq)
+    for i in range(args.requests):
+        plen = int(rng.randint(max(args.prompt_len // 2, 1),
+                               args.prompt_len + 1))
+        gen = int(rng.randint(max(args.gen // 2, 1), args.gen + 1))
+        prompt = rng.randint(0, cfg.vocab_size, size=plen)
+        sched.submit(prompt, gen, arrival_step=i // 2)
+
+    t0 = time.time()
+    done = sched.run()
+    wall = time.time() - t0
+    toks = sched.stats["tokens_out"]
+    return {
+        "engine": "paged",
+        "arch": cfg.name,
+        "requests": len(done),
+        "decode_steps": sched.stats["decode_steps"],
+        "tokens_out": toks,
+        "tok_per_s": round(toks / wall, 1),
+        "mean_occupancy": round(
+            (toks - sched.stats["prefills"])
+            / max(sched.stats["decode_steps"] * args.batch, 1), 3),
+        "generated": [r.out_tokens[:8] for r in done[:4]],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--engine", default="static",
+                    choices=("static", "paged"))
+    ap.add_argument("--batch", type=int, default=4,
+                    help="static batch / paged decode slots")
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=8,
+                    help="paged engine: workload size")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    out = (run_paged if args.engine == "paged" else run_static)(
+        cfg, params, args)
+    print(json.dumps(out))
 
 
 if __name__ == "__main__":

@@ -188,11 +188,15 @@ def _scan_chunk(qi, ks, vs, causal, window, softcap, scale,
 
 def decode_attend(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
                   *, valid_len: Optional[jnp.ndarray] = None,
+                  start_len: Optional[jnp.ndarray] = None,
                   softcap: Optional[float] = None,
                   scale: Optional[float] = None) -> jnp.ndarray:
     """Single-position attention over a full cache.
 
-    q: (B,1,H,hd); caches: (B,S,KVH,hd). valid_len masks slots >= valid_len.
+    q: (B,1,H,hd); caches: (B,S,KVH,hd). valid_len masks slots >= valid_len;
+    start_len (paged sliding-window layers) additionally masks slots below
+    it — the paged cache stores absolute positions, so the window is a mask
+    rather than a ring write (cf. ``gqa_decode``).
     """
     B, _, H, hd = q.shape
     S, KVH = k_cache.shape[1], k_cache.shape[2]
@@ -204,6 +208,8 @@ def decode_attend(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
     s = soft_cap(s, softcap)
     if valid_len is not None:
         ok = jnp.arange(S)[None] < valid_len[:, None]          # (B,S)
+        if start_len is not None:
+            ok &= jnp.arange(S)[None] >= start_len[:, None]
         s = jnp.where(ok[:, None, None], s, _NEG)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
@@ -324,6 +330,64 @@ def gqa_decode(cfg: ModelConfig, p, x, cos, sin, cache: Dict[str, jnp.ndarray],
         new_cache = {"k": k_cache, "v": v_cache}
     valid = jnp.minimum(cur_len + 1, cap) * jnp.ones((B,), jnp.int32)
     o = decode_attend(q, k_deq, v_deq, valid_len=valid,
+                      softcap=cfg.attn_softcap)
+    y = o.reshape(B, 1, -1) @ p["wo"].astype(x.dtype)
+    return y, new_cache
+
+
+def gqa_paged_decode(cfg: ModelConfig, p, x, cos, sin,
+                     cache: Dict[str, jnp.ndarray], seq_lens: jnp.ndarray,
+                     block_table: jnp.ndarray, *, local: bool):
+    """Paged-KV decode step: write the new token's K/V into its page, then
+    attend the sequence's pages via the block table.
+
+    x: (B,1,D); seq_lens: (B,) live token counts (the new token lands at
+    position ``seq_lens[b]``); block_table: (B, n_pg) page ids into the
+    layer's pools ``cache["k_pages"]``/``cache["v_pages"]`` of shape
+    (num_pages, page_size, KVH, hd). This is the pure-XLA path (CPU smoke
+    tests / dry-run); ``repro.kernels.paged_decode`` computes the same
+    function on TPU without materialising the gathered cache. Sliding-window
+    layers mask ``[len+1-window, len]`` instead of ring-writing — pages hold
+    absolute positions.
+    """
+    B = x.shape[0]
+    dt = x.dtype
+    q, k_new, v_new = _qkv(cfg, p, x, cos, sin)
+    ps = cache["k_pages"].shape[1]
+    n_pg = block_table.shape[1]
+    pos = seq_lens.astype(jnp.int32)                       # write position
+    page = jnp.take_along_axis(block_table, (pos // ps)[:, None],
+                               axis=1)[:, 0]
+    slot = pos % ps
+    if cfg.cache_quant:
+        k8, ks = quantize_kv(k_new)
+        v8, vs_ = quantize_kv(v_new)
+        k_pages = cache["k_pages"].at[page, slot].set(k8[:, 0])
+        v_pages = cache["v_pages"].at[page, slot].set(v8[:, 0])
+        k_sc = cache["k_scale_pages"].at[page, slot].set(ks[:, 0])
+        v_sc = cache["v_scale_pages"].at[page, slot].set(vs_[:, 0])
+        k_deq = (k_pages[block_table].astype(dt)
+                 * k_sc[block_table][..., None].astype(dt))
+        v_deq = (v_pages[block_table].astype(dt)
+                 * v_sc[block_table][..., None].astype(dt))
+        new_cache = {"k_pages": k_pages, "v_pages": v_pages,
+                     "k_scale_pages": k_sc, "v_scale_pages": v_sc}
+    else:
+        k_pages = cache["k_pages"].at[page, slot].set(k_new[:, 0].astype(
+            cache["k_pages"].dtype))
+        v_pages = cache["v_pages"].at[page, slot].set(v_new[:, 0].astype(
+            cache["v_pages"].dtype))
+        k_deq = k_pages[block_table]
+        v_deq = v_pages[block_table]
+        new_cache = {"k_pages": k_pages, "v_pages": v_pages}
+    KVH, hd = k_deq.shape[-2], k_deq.shape[-1]
+    k_deq = k_deq.reshape(B, n_pg * ps, KVH, hd)
+    v_deq = v_deq.reshape(B, n_pg * ps, KVH, hd)
+    valid = pos + 1
+    start = None
+    if local and cfg.sliding_window:
+        start = jnp.maximum(valid - cfg.sliding_window, 0)
+    o = decode_attend(q, k_deq, v_deq, valid_len=valid, start_len=start,
                       softcap=cfg.attn_softcap)
     y = o.reshape(B, 1, -1) @ p["wo"].astype(x.dtype)
     return y, new_cache
@@ -464,6 +528,15 @@ def attn_decode(cfg, p, x, cos, sin, cache, cur_len, *, local=False):
     if cfg.attn_impl == "mla":
         return mla_decode(cfg, p, x, cos, sin, cache, cur_len)
     return gqa_decode(cfg, p, x, cos, sin, cache, cur_len, local=local)
+
+
+def attn_paged_decode(cfg, p, x, cos, sin, cache, seq_lens, block_table, *,
+                      local=False):
+    if cfg.attn_impl == "mla":
+        raise NotImplementedError(
+            "paged decode covers GQA; MLA serves via the dense absorbed path")
+    return gqa_paged_decode(cfg, p, x, cos, sin, cache, seq_lens, block_table,
+                            local=local)
 
 
 def kv_cache_spec(cfg: ModelConfig, batch: int, capacity: int,

@@ -117,6 +117,22 @@ def decode_step(cfg: ModelConfig, params, cache, tokens: jnp.ndarray,
     return lg, new_cache
 
 
+def paged_decode_step(cfg: ModelConfig, params, cache, tokens: jnp.ndarray,
+                      seq_lens: jnp.ndarray, block_table: jnp.ndarray):
+    """Paged-KV decode step for the continuous-batching scheduler.
+
+    tokens: (B,1); seq_lens: (B,) per-sequence live lengths; block_table:
+    (B, n_pg) page ids into the pools in ``cache`` (see
+    ``repro.serving.paged_cache``). -> (logits (B,1,V), new_cache).
+    """
+    hidden, _, new_cache = lm_forward(cfg, params, tokens,
+                                      mode="paged_decode", cache=cache,
+                                      cur_len=seq_lens,
+                                      block_table=block_table)
+    lg = final_logits(cfg, params, hidden)
+    return lg, new_cache
+
+
 # ---------------------------------------------------------------------------
 # cache schema (ParamSpec tree -> reuse init/abstract machinery)
 # ---------------------------------------------------------------------------

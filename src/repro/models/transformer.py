@@ -85,7 +85,8 @@ def block_schema(cfg: ModelConfig, idx: int) -> Dict[str, Any]:
 
 def block_apply(cfg: ModelConfig, p: Dict[str, Any], x: jnp.ndarray, idx: int,
                 cos, sin, mode: str, cache: Optional[Dict] = None,
-                cur_len: Optional[jnp.ndarray] = None):
+                cur_len: Optional[jnp.ndarray] = None,
+                block_table: Optional[jnp.ndarray] = None):
     """-> (x, aux, cache_update)."""
     kind = cfg.block_kind(idx)
     local = kind == "attn_local"
@@ -104,6 +105,10 @@ def block_apply(cfg: ModelConfig, p: Dict[str, Any], x: jnp.ndarray, idx: int,
         elif mode == "prefill":
             mix, cache_update = attn.attn_prefill(cfg, p["mixer"], h, cos, sin,
                                                   local=local)
+        elif mode == "paged_decode":
+            mix, cache_update = attn.attn_paged_decode(
+                cfg, p["mixer"], h, cos, sin, cache, cur_len, block_table,
+                local=local)
         else:
             mix, cache_update = attn.attn_decode(cfg, p["mixer"], h, cos, sin,
                                                  cache, cur_len, local=local)
@@ -114,8 +119,9 @@ def block_apply(cfg: ModelConfig, p: Dict[str, Any], x: jnp.ndarray, idx: int,
     if "ffn" in p:
         h2 = rmsnorm(x, p["ln2"], cfg.rms_eps)
         if cfg.is_moe_layer(idx):
-            ff, aux = moe_mod.moe_apply(cfg, p["ffn"], h2,
-                                        decode=(mode == "decode"))
+            ff, aux = moe_mod.moe_apply(
+                cfg, p["ffn"], h2,
+                decode=(mode in ("decode", "paged_decode")))
         else:
             ff = mlp(cfg, p["ffn"], h2)
         if cfg.use_post_norm:
@@ -156,21 +162,29 @@ def default_positions(cfg: ModelConfig, batch: int, seq: int,
 def lm_forward(cfg: ModelConfig, params: Dict[str, Any], tokens: jnp.ndarray,
                positions: Optional[jnp.ndarray] = None, *, mode: str = "train",
                cache: Optional[Dict] = None, cur_len=None,
+               block_table: Optional[jnp.ndarray] = None,
                remat: str = "none"):
     """Decoder-only forward.
 
-    train  -> (hidden, aux)
-    prefill-> (hidden, aux, cache)
-    decode -> (hidden, aux, cache)   tokens: (B, 1)
+    train        -> (hidden, aux)
+    prefill      -> (hidden, aux, cache)
+    decode       -> (hidden, aux, cache)   tokens: (B, 1)
+    paged_decode -> (hidden, aux, cache)   tokens: (B, 1); ``cache`` holds
+        page pools (``repro.serving.paged_cache``), ``cur_len`` is the (B,)
+        per-sequence length vector and ``block_table`` (B, n_pg) maps each
+        sequence to its pages — this is what lets the continuous-batching
+        scheduler decode sequences of different lengths in one step.
     """
     assert not cfg.is_encdec
     B, S = tokens.shape
+    decoding = mode in ("decode", "paged_decode")
     prefix, period, n_periods = depth_plan(cfg)
     if positions is None:
-        if mode == "decode":
-            base = jnp.broadcast_to(cur_len[None, None].astype(jnp.int32)
-                                    if jnp.ndim(cur_len) == 0 else cur_len,
-                                    (B, 1))
+        if decoding:
+            cl = jnp.asarray(cur_len, jnp.int32)
+            base = jnp.broadcast_to(
+                cl[None, None] if cl.ndim == 0 else
+                cl[:, None] if cl.ndim == 1 else cl, (B, 1))
             positions = base
             if cfg.rope_variant == "mrope":
                 positions = jnp.broadcast_to(base[None], (3, B, 1))
@@ -185,9 +199,9 @@ def lm_forward(cfg: ModelConfig, params: Dict[str, Any], tokens: jnp.ndarray,
     # ---- prefix layers (unrolled) ---------------------------------------
     prefix_cache_out = {}
     for i in range(prefix):
-        c_in = cache["prefix"][str(i)] if (cache and mode == "decode") else None
+        c_in = cache["prefix"][str(i)] if (cache and decoding) else None
         x, aux, c_out = block_apply(cfg, params["prefix"][str(i)], x, i,
-                                    cos, sin, mode, c_in, cur_len)
+                                    cos, sin, mode, c_in, cur_len, block_table)
         aux_total = aux_total + aux
         if c_out is not None:
             prefix_cache_out[str(i)] = c_out
@@ -230,14 +244,14 @@ def lm_forward(cfg: ModelConfig, params: Dict[str, Any], tokens: jnp.ndarray,
         if prefix_cache_out:
             cache_out["prefix"] = prefix_cache_out
 
-    else:  # decode
+    else:  # decode / paged_decode
         def body(xx, xs_p):
             ps, cs = xs_p
             new_cs = {}
             for p in range(period):
                 xx, _, c_out = block_apply(cfg, ps[str(p)], xx, prefix + p,
-                                           cos, sin, "decode", cs[str(p)],
-                                           cur_len)
+                                           cos, sin, mode, cs[str(p)],
+                                           cur_len, block_table)
                 new_cs[str(p)] = c_out
             return xx, new_cs
 

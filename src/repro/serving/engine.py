@@ -1,10 +1,19 @@
-"""Serving engine: KV/state cache management, prefill + decode loops.
+"""Static-batch serving engine: KV/state cache management, prefill + decode.
 
 Cache layout mirrors the model's scan structure (see
 ``repro.models.model.cache_schema``). Sliding-window layers get
 window-capacity ring buffers; SSM layers carry (state, conv-tail). The
 decode step is a single jit-able function suitable for pjit lowering in the
 dry-run (``decode_32k`` / ``long_500k`` cells).
+
+This engine decodes one fixed batch at a time — every stream pays
+``capacity`` cache memory and the batch runs until its longest member
+finishes. For mixed-length request traffic use the continuous-batching
+scheduler (``repro.serving.scheduler``) over the paged variant of this
+cache (``repro.serving.paged_cache``): same quantisation contract
+(``quantize_kv``), but K/V live in a shared page pool so sequences join
+and leave mid-flight. MLA and enc-dec archs stay on this engine (see
+docs/serving.md).
 """
 from __future__ import annotations
 

@@ -1,0 +1,266 @@
+"""Paged KV cache: shared page pools + block tables for the serving engine.
+
+The dense engine (``repro.serving.engine``) gives every sequence a
+capacity-padded ring buffer — memory scales with ``batch * capacity`` even
+when most sequences are short. Here K/V live in per-layer *page pools* of
+shape ``(num_pages, page_size, KVH, head_dim)``; a sequence owns just the
+pages its tokens fill, recorded in a block table row. Allocation and
+freeing are O(pages) host-side list operations, so the continuous-batching
+scheduler (``repro.serving.scheduler``) can admit and evict sequences
+mid-flight without reshaping any device buffer.
+
+Layout invariants
+-----------------
+* Page 0 is the **sink page**: never allocated, and every unused block-table
+  entry points at it. Idle decode slots write their garbage token there and
+  the attention mask (``seq_lens``) keeps it out of every real sequence's
+  softmax.
+* Token ``t`` of a sequence lives at ``(block_table[t // page_size],
+  t % page_size)`` — pages are filled densely in order, so a sequence of
+  length ``n`` owns exactly ``ceil(n / page_size)`` pages.
+* With ``cfg.cache_quant`` the pools hold int8 K/V plus fp32
+  per-(position, kv-head) scale pages — the same quantisation contract as
+  the dense engine's ring buffers (``repro.models.attention.quantize_kv``).
+
+SSM layers need no paging (their state is O(1) per sequence); they keep a
+dense ``(max_slots, ...)`` state row per scheduler slot in the same cache
+pytree, so hybrid archs (jamba, mamba2) flow through the same decode step.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as ssm_mod
+from repro.models.attention import quantize_kv
+from repro.models.transformer import depth_plan
+
+SINK_PAGE = 0
+
+# leaves whose first axis is the page-pool axis
+PAGE_LEAVES = ("k_pages", "v_pages", "k_scale_pages", "v_scale_pages")
+
+
+def pages_for_len(n_tokens: int, page_size: int) -> int:
+    """Pages a sequence of ``n_tokens`` occupies (dense fill from page 0)."""
+    return -(-n_tokens // page_size)
+
+
+class PageAllocator:
+    """Host-side free-list allocator over the shared page-id space.
+
+    One allocator serves every layer: layer pools are shaped identically, so
+    page id ``p`` addresses the same slot in each. Page 0 (the sink) is
+    never handed out.
+    """
+
+    def __init__(self, num_pages: int):
+        assert num_pages >= 2, "need at least one allocatable page + sink"
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages - 1, SINK_PAGE, -1))
+        self._owner: Dict[int, Any] = {}
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_allocated(self) -> int:
+        return len(self._owner)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int, owner: Any = None) -> List[int]:
+        if n > len(self._free):
+            raise MemoryError(
+                f"page pool exhausted: want {n}, free {len(self._free)} "
+                f"of {self.num_pages - 1}")
+        out = [self._free.pop() for _ in range(n)]
+        for p in out:
+            self._owner[p] = owner
+        return out
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if p == SINK_PAGE:
+                raise ValueError("sink page cannot be freed")
+            if p not in self._owner:
+                raise ValueError(f"double free of page {p}")
+            del self._owner[p]
+            self._free.append(p)
+
+
+# ---------------------------------------------------------------------------
+# cache pytree construction
+# ---------------------------------------------------------------------------
+
+def _attn_pool_leaves(cfg: ModelConfig, num_pages: int,
+                      page_size: int) -> Dict[str, jnp.ndarray]:
+    if cfg.attn_impl == "mla":
+        raise NotImplementedError(
+            "paged serving covers GQA archs; MLA decode keeps the dense "
+            "compressed-cache path (see docs/serving.md)")
+    hd = cfg.resolved_head_dim
+    KVH = cfg.n_kv_heads
+    kv_dt = jnp.int8 if cfg.cache_quant else jnp.dtype(cfg.dtype)
+    out = {
+        "k_pages": jnp.zeros((num_pages, page_size, KVH, hd), kv_dt),
+        "v_pages": jnp.zeros((num_pages, page_size, KVH, hd), kv_dt),
+    }
+    if cfg.cache_quant:
+        out["k_scale_pages"] = jnp.zeros((num_pages, page_size, KVH),
+                                         jnp.float32)
+        out["v_scale_pages"] = jnp.zeros((num_pages, page_size, KVH),
+                                         jnp.float32)
+    return out
+
+
+def _ssm_slot_leaves(cfg: ModelConfig, max_slots: int) -> Dict[str, jnp.ndarray]:
+    raw = ssm_mod.ssm_cache_spec(cfg, max_slots)
+    return {k: jnp.zeros(shape, jnp.dtype(str(dt)))
+            for k, (shape, _axes, dt) in raw.items()}
+
+
+def _layer_leaves(cfg: ModelConfig, idx: int, num_pages: int, page_size: int,
+                  max_slots: int) -> Dict[str, jnp.ndarray]:
+    if cfg.block_kind(idx) == "ssm":
+        return _ssm_slot_leaves(cfg, max_slots)
+    return _attn_pool_leaves(cfg, num_pages, page_size)
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     max_slots: int) -> Any:
+    """Zero page pools in the same prefix/stack pytree shape the dense cache
+    uses (``repro.models.model.cache_schema``), so the transformer's scanned
+    stack threads them identically."""
+    if cfg.is_encdec:
+        raise NotImplementedError("paged serving targets decoder-only archs")
+    prefix, period, n_periods = depth_plan(cfg)
+    out: Dict[str, Any] = {}
+    if prefix:
+        out["prefix"] = {str(i): _layer_leaves(cfg, i, num_pages, page_size,
+                                               max_slots)
+                         for i in range(prefix)}
+    out["stack"] = {
+        str(p): jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_periods,) + x.shape).copy(),
+            _layer_leaves(cfg, prefix + p, num_pages, page_size, max_slots))
+        for p in range(period)}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# prefill insertion
+# ---------------------------------------------------------------------------
+
+def _write_attn_prefill(cfg: ModelConfig, node: Dict[str, jnp.ndarray],
+                        pre: Dict[str, jnp.ndarray], page_ids: jnp.ndarray,
+                        page_slots: jnp.ndarray,
+                        stacked: bool) -> Dict[str, jnp.ndarray]:
+    """Scatter one sequence's prefill K/V (B=1) into its pages.
+
+    ``page_ids``/``page_slots``: (n_write,) int32 — padding positions past
+    the live length are routed to the sink page by the caller."""
+    out = dict(node)
+    n_write = page_ids.shape[0]
+    for name in ("k", "v"):
+        kv = pre[name][..., 0, :n_write, :, :] if stacked \
+            else pre[name][0, :n_write]                   # ([L,]n,KVH,hd)
+        if cfg.cache_quant:
+            q8, sc = quantize_kv(kv)
+            if stacked:
+                out[f"{name}_pages"] = node[f"{name}_pages"].at[
+                    :, page_ids, page_slots].set(q8)
+                out[f"{name}_scale_pages"] = node[f"{name}_scale_pages"].at[
+                    :, page_ids, page_slots].set(sc)
+            else:
+                out[f"{name}_pages"] = node[f"{name}_pages"].at[
+                    page_ids, page_slots].set(q8)
+                out[f"{name}_scale_pages"] = node[f"{name}_scale_pages"].at[
+                    page_ids, page_slots].set(sc)
+        else:
+            dt = node[f"{name}_pages"].dtype
+            if stacked:
+                out[f"{name}_pages"] = node[f"{name}_pages"].at[
+                    :, page_ids, page_slots].set(kv.astype(dt))
+            else:
+                out[f"{name}_pages"] = node[f"{name}_pages"].at[
+                    page_ids, page_slots].set(kv.astype(dt))
+    return out
+
+
+def _write_ssm_prefill(node: Dict[str, jnp.ndarray],
+                       pre: Dict[str, jnp.ndarray], slot,
+                       stacked: bool) -> Dict[str, jnp.ndarray]:
+    out = dict(node)
+    for name in node:
+        val = pre[name]
+        if stacked:
+            out[name] = node[name].at[:, slot].set(
+                val[:, 0].astype(node[name].dtype))
+        else:
+            out[name] = node[name].at[slot].set(
+                val[0].astype(node[name].dtype))
+    return out
+
+
+def write_prefill(cfg: ModelConfig, paged: Any, pre: Any, block_row,
+                  slot, plen, n_write: int, page_size: int) -> Any:
+    """Insert a freshly prefilled sequence (batch 1) into the paged cache.
+
+    ``pre`` is the cache returned by a batch-1 prefill on an ``n_write``-long
+    (possibly right-padded) prompt; ``plen`` (dynamic) is the live length —
+    padding positions are scattered to the sink page, so one compilation per
+    prefill *bucket* serves every prompt length in it. ``block_row``:
+    (n_pg,) int32 page ids for this sequence (unused tail = sink).
+    Returns the updated cache pytree; jit with ``n_write``/``page_size``
+    static. For archs with SSM layers the caller must use ``n_write ==
+    plen`` — an SSM final state folds padding tokens in.
+    """
+    t = jnp.arange(n_write)
+    live = t < jnp.asarray(plen)
+    page_ids = jnp.where(live, jnp.asarray(block_row)[t // page_size],
+                         SINK_PAGE).astype(jnp.int32)
+    page_slots = (t % page_size).astype(jnp.int32)
+
+    def walk(node: Any, pnode: Any, stacked: bool) -> Any:
+        if "k_pages" in node:
+            return _write_attn_prefill(cfg, node, pnode, page_ids,
+                                       page_slots, stacked)
+        if "h" in node and "conv" in node:
+            return _write_ssm_prefill(node, pnode, slot, stacked)
+        return {k: walk(node[k], pnode[k], stacked or k == "stack")
+                for k in node}
+
+    return walk(paged, pre, False)
+
+
+# ---------------------------------------------------------------------------
+# sizing helpers (used by core.blueprint.serving_page_plan and the bench)
+# ---------------------------------------------------------------------------
+
+def page_bytes_per_token(cfg: ModelConfig) -> int:
+    """KV bytes one token occupies across all attention layers' pools."""
+    hd, KVH = cfg.resolved_head_dim, cfg.n_kv_heads
+    per = 2 * KVH * hd * (1 if cfg.cache_quant else 2)
+    if cfg.cache_quant:
+        per += 2 * KVH * 4                       # fp32 scales
+    n_attn = sum(1 for i in range(cfg.n_layers)
+                 if cfg.block_kind(i) != "ssm")
+    return per * n_attn
+
+
+def pool_bytes(cfg: ModelConfig, num_pages: int, page_size: int) -> int:
+    """Total HBM the page pools occupy (all layers)."""
+    return page_bytes_per_token(cfg) * num_pages * page_size
+
+
+def dense_cache_bytes(cfg: ModelConfig, batch: int, capacity: int) -> int:
+    """Footprint of the dense engine's capacity-padded ring buffers, for the
+    memory comparison in ``benchmarks/serve_bench.py``."""
+    return page_bytes_per_token(cfg) * batch * capacity

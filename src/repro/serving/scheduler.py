@@ -1,0 +1,371 @@
+"""Continuous-batching serving scheduler over the paged KV cache.
+
+The dense engine (``repro.serving.engine``) decodes one fixed batch until
+its *longest* member finishes — occupancy decays as short requests drain,
+and a new request waits for the whole batch. This scheduler keeps a fixed
+set of decode *slots* and runs one jit-compiled paged decode step per tick:
+
+* **join-on-arrival** — a waiting request is prefilled and inserted into
+  any free slot between decode steps (no reshape, no recompile: the step
+  function's shapes are fixed at ``(max_slots, 1)``);
+* **evict-on-finish** — a finished request frees its pages and its slot the
+  same tick, so the next arrival takes over immediately;
+* **prefill/decode interleave** — admission runs between decode ticks;
+  prefill is batch-1, bucketed to a small set of padded lengths so mixed
+  prompt lengths share compilations (right padding is causally invisible).
+
+Greedy sampling, like the dense engine. Admission uses worst-case page
+reservation (``ceil((prompt + max_new) / page_size)`` pages), so a request
+that is admitted can never hit a mid-flight pool OOM. Page-pool sizing for
+a target arch/shape comes from ``repro.core.blueprint.serving_page_plan``,
+and the provisioning layer exposes it as the "serve" service
+(``repro.core.services.AmbariServer.provision_serving``).
+
+Works for decoder-only archs without MLA attention; SSM/hybrid and MoE
+archs are supported with exact-length prefill (an SSM state folds padding
+in; MoE routing lets padding compete for expert capacity). One caveat for
+MoE at multi-slot: the decode router groups all slots' tokens under one
+capacity bound (exactly like the dense engine's batch), so concurrent
+requests can influence each other's routing when capacity binds — the
+late-join byte-determinism guarantee is for dense/SSM archs. See
+docs/serving.md for the API walk-through and tuning knobs.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+from typing import Any, Deque, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.transformer import lm_forward
+from repro.serving import paged_cache as PC
+
+DEFAULT_BUCKETS = (8, 16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                    # (plen,) int32
+    max_new_tokens: int
+    arrival_step: int = 0                 # earliest tick it may be admitted
+    # filled in by the scheduler
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    admit_step: Optional[int] = None
+    finish_step: Optional[int] = None
+
+    @property
+    def plen(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def done(self) -> bool:
+        return len(self.out_tokens) >= self.max_new_tokens
+
+
+def supports_paged(cfg: ModelConfig) -> bool:
+    return not cfg.is_encdec and cfg.attn_impl != "mla"
+
+
+class ContinuousBatchingScheduler:
+    """Admission + continuous batching loop over ``max_slots`` decode slots.
+
+    Parameters mirror ``serving_page_plan``'s output: ``page_size`` tokens
+    per page, ``num_pages`` in the shared pool (page 0 is the sink),
+    ``max_seq_len`` bounds prompt+generation and fixes the block-table
+    width.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Any, *, max_slots: int = 4,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 max_seq_len: int = 512,
+                 prefill_buckets: Sequence[int] = DEFAULT_BUCKETS):
+        if not supports_paged(cfg):
+            raise NotImplementedError(
+                f"{cfg.name}: paged serving covers decoder-only non-MLA "
+                "archs; use repro.serving.engine for this one")
+        self.cfg = cfg
+        self.params = params
+        self.page_size = page_size
+        self.max_slots = max_slots
+        self.max_seq_len = max_seq_len
+        self.n_pg = PC.pages_for_len(max_seq_len, page_size)
+        if num_pages is None:
+            num_pages = max_slots * self.n_pg + 1        # + sink
+        # SSM state folds every processed token in, and MoE routing makes
+        # tokens compete for expert capacity — bucket padding would change
+        # real tokens' results for either, so such archs prefill exact-length
+        # (one compile per distinct prompt length).
+        self.exact_prefill = cfg.n_routed_experts > 0 or any(
+            cfg.block_kind(i) == "ssm" for i in range(cfg.n_layers))
+        self.buckets = tuple(sorted(b for b in prefill_buckets
+                                    if b <= max_seq_len))
+
+        self.cache = PC.init_paged_cache(cfg, num_pages, page_size, max_slots)
+        self.alloc = PC.PageAllocator(num_pages)
+        self.block_table = np.full((max_slots, self.n_pg), PC.SINK_PAGE,
+                                   np.int32)
+        self.seq_lens = np.zeros((max_slots,), np.int32)
+        self.last_tokens = np.zeros((max_slots, 1), np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * max_slots
+        self.slot_pages: List[List[int]] = [[] for _ in range(max_slots)]
+        self.waiting: Deque[Request] = collections.deque()
+        self.finished: List[Request] = []
+        self._admit_done: List[Request] = []
+        self.step_idx = 0
+        self.reserved_pages = 0
+        self.stats: Dict[str, int] = {"decode_steps": 0, "tokens_out": 0,
+                                      "prefills": 0, "peak_pages": 0}
+
+        # donate the cache: pools are sized to fill HBM, so the step must
+        # update them in place rather than double-buffer (cf. trainer.py)
+        self._decode_fn = jax.jit(functools.partial(self._decode_multi, cfg),
+                                  static_argnames=("k",), donate_argnums=(1,))
+        self._prefill_fns: Dict[int, Any] = {}
+        self._insert_fns: Dict[int, Any] = {}
+        self._rid = 0
+
+    # ------------------------------------------------------------ jit fns --
+    @staticmethod
+    def _decode_multi(cfg, params, cache, tokens, seq_lens, block_table, *,
+                      k: int):
+        """``k`` fused greedy decode ticks in one lax.scan (one dispatch).
+
+        The host loop picks ``k`` so that no request finishes and no arrival
+        becomes admissible mid-scan — fusion is a pure dispatch-overhead
+        optimisation, token-for-token identical to k=1 stepping.
+        Returns (tokens (k, B), new_cache).
+        """
+        def body(carry, _):
+            toks, lens, cc = carry
+            lg, cc = M.paged_decode_step(cfg, params, cc, toks, lens,
+                                         block_table)
+            nxt = jnp.argmax(lg[:, -1, :cfg.vocab_size],
+                             axis=-1).astype(jnp.int32)
+            return (nxt[:, None], lens + 1, cc), nxt
+
+        (_, _, new_cache), outs = jax.lax.scan(
+            body, (tokens, seq_lens, cache), None, length=k)
+        return outs, new_cache
+
+    def _prefill_fn(self, n: int):
+        """Batch-1 prefill at padded length ``n``; logits taken at the live
+        prompt's last position (right padding is causally invisible)."""
+        if n not in self._prefill_fns:
+            cfg = self.cfg
+
+            def fn(params, tokens, plen):
+                positions = None
+                if cfg.rope_variant == "mrope":
+                    pos = jnp.broadcast_to(
+                        jnp.arange(n, dtype=jnp.int32)[None], (1, n))
+                    positions = jnp.broadcast_to(pos[None], (3, 1, n))
+                hidden, _, pre = lm_forward(cfg, params, tokens,
+                                            positions=positions,
+                                            mode="prefill")
+                h_last = jax.lax.dynamic_slice_in_dim(hidden, plen - 1, 1,
+                                                      axis=1)
+                lg = M.final_logits(cfg, params, h_last)
+                tok = jnp.argmax(lg[0, -1, :cfg.vocab_size]).astype(jnp.int32)
+                return tok, pre
+
+            self._prefill_fns[n] = jax.jit(fn)
+        return self._prefill_fns[n]
+
+    def _insert_fn(self, n: int):
+        if n not in self._insert_fns:
+            cfg, ps = self.cfg, self.page_size
+
+            def fn(cache, pre, block_row, slot, plen):
+                return PC.write_prefill(cfg, cache, pre, block_row, slot,
+                                        plen, n, ps)
+
+            self._insert_fns[n] = jax.jit(fn, donate_argnums=(0,))
+        return self._insert_fns[n]
+
+    # ---------------------------------------------------------- submission --
+    def submit(self, prompt, max_new_tokens: int,
+               arrival_step: int = 0) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1 (the prefill "
+                             "already produces the first token)")
+        total = prompt.shape[0] + max_new_tokens
+        if total > self.max_seq_len:
+            raise ValueError(f"request needs {total} positions > "
+                             f"max_seq_len {self.max_seq_len}")
+        worst = PC.pages_for_len(total, self.page_size)
+        if worst > self.alloc.num_pages - 1:
+            raise ValueError(
+                f"request reserves {worst} pages but the pool only holds "
+                f"{self.alloc.num_pages - 1} — it could never be admitted")
+        req = Request(rid=self._rid, prompt=prompt,
+                      max_new_tokens=max_new_tokens,
+                      arrival_step=arrival_step)
+        self._rid += 1
+        self.waiting.append(req)
+        return req
+
+    # ----------------------------------------------------------- admission --
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _try_admit(self) -> None:
+        while self.waiting and self.waiting[0].arrival_step <= self.step_idx:
+            free = self._free_slots()   # re-list: _admit may finish a slot
+            if not free:
+                break
+            req = self.waiting[0]
+            need = PC.pages_for_len(req.plen + req.max_new_tokens,
+                                    self.page_size)
+            if self.alloc.num_free - (self.reserved_pages
+                                      - self._pages_in_use()) < need:
+                break                       # reservation would overcommit
+            self.waiting.popleft()
+            self._admit(req, free[0], need)
+
+    def _pages_in_use(self) -> int:
+        return sum(len(p) for p in self.slot_pages)
+
+    def _bucket(self, plen: int) -> int:
+        if self.exact_prefill:
+            return plen
+        for b in self.buckets:
+            if plen <= b:
+                return b
+        return self.max_seq_len
+
+    def _admit(self, req: Request, slot: int, reserve: int) -> None:
+        plen = req.plen
+        n = self._bucket(plen)
+        tokens = np.zeros((1, n), np.int32)
+        tokens[0, :plen] = req.prompt
+        first, pre = self._prefill_fn(n)(self.params, jnp.asarray(tokens),
+                                         jnp.asarray(plen, jnp.int32))
+        pages = self.alloc.alloc(PC.pages_for_len(plen + 1, self.page_size),
+                                 owner=req.rid)
+        self.reserved_pages += reserve
+        row = np.full((self.n_pg,), PC.SINK_PAGE, np.int32)
+        row[:len(pages)] = pages
+        self.cache = self._insert_fn(n)(self.cache, pre, jnp.asarray(row),
+                                        jnp.asarray(slot, jnp.int32),
+                                        jnp.asarray(plen, jnp.int32))
+        self.block_table[slot] = row
+        self.seq_lens[slot] = plen
+        self.last_tokens[slot, 0] = int(first)
+        self.slot_req[slot] = req
+        self.slot_pages[slot] = pages
+        req.admit_step = self.step_idx
+        req.out_tokens.append(int(first))
+        self.stats["prefills"] += 1
+        self.stats["tokens_out"] += 1
+        if req.done:                        # max_new_tokens == 1
+            self._finish(slot)
+            self._admit_done.append(req)
+
+    # -------------------------------------------------------------- finish --
+    def _finish(self, slot: int) -> None:
+        req = self.slot_req[slot]
+        req.finish_step = self.step_idx
+        self.alloc.free(self.slot_pages[slot])
+        self.reserved_pages -= PC.pages_for_len(
+            req.plen + req.max_new_tokens, self.page_size)
+        self.slot_pages[slot] = []
+        self.slot_req[slot] = None
+        self.block_table[slot] = PC.SINK_PAGE
+        self.seq_lens[slot] = 0
+        self.last_tokens[slot, 0] = 0
+        self.finished.append(req)
+
+    def _grow_pages(self, k: int = 1) -> None:
+        """Ensure each active slot owns the pages its next ``k`` tokens land
+        in (admission reserved them, so allocation cannot fail here)."""
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            needed = (int(self.seq_lens[slot]) + k - 1) // self.page_size + 1
+            while len(self.slot_pages[slot]) < needed:
+                new = self.alloc.alloc(1, owner=req.rid)[0]
+                self.block_table[slot, len(self.slot_pages[slot])] = new
+                self.slot_pages[slot].append(new)
+
+    def _fuse_k(self, max_fuse: int) -> int:
+        """Largest tick count that changes nothing mid-scan: bounded by the
+        earliest finish among active requests and the next future arrival."""
+        k = min(r.max_new_tokens - len(r.out_tokens)
+                for r in self.slot_req if r is not None)
+        future = [r.arrival_step - self.step_idx for r in self.waiting
+                  if r.arrival_step > self.step_idx]
+        if future:
+            k = min(k, min(future))
+        return max(1, min(k, max_fuse))
+
+    # ---------------------------------------------------------------- step --
+    @property
+    def num_active(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    @property
+    def pending(self) -> int:
+        return len(self.waiting)
+
+    def step(self, max_fuse: int = 16) -> List[Request]:
+        """Admit what fits, run up to ``max_fuse`` fused decode ticks, evict
+        finished requests.
+
+        Fusing runs several ticks in one jit dispatch (a lax.scan) but only
+        when nothing could change mid-scan — no active request finishes and
+        no waiting arrival becomes due — so the schedule (and every token)
+        is identical to single-stepping. Returns the requests that finished.
+        A tick with no active slots (arrival gap) only advances the clock.
+        """
+        self._try_admit()
+        done_now: List[Request] = self._admit_done
+        self._admit_done = []
+        if not self.num_active:
+            arrivals = [r.arrival_step for r in self.waiting]
+            if arrivals and min(arrivals) > self.step_idx:
+                self.step_idx = min(arrivals)   # idle gap: skip to the next
+            else:                               # arrival, don't spin ticks
+                self.step_idx += 1
+            return done_now
+        k = self._fuse_k(max_fuse)
+        k = 1 << (k.bit_length() - 1)       # pow2 buckets bound compiles
+        self._grow_pages(k)
+        self.stats["peak_pages"] = max(self.stats["peak_pages"],
+                                       self._pages_in_use())
+        outs, self.cache = self._decode_fn(
+            self.params, self.cache, jnp.asarray(self.last_tokens),
+            jnp.asarray(self.seq_lens), jnp.asarray(self.block_table), k=k)
+        outs = np.asarray(outs)             # (k, max_slots)
+        self.stats["decode_steps"] += k
+        self.step_idx += k                  # before _finish: finish_step must
+        for slot, req in enumerate(self.slot_req):  # not depend on max_fuse
+            if req is None:
+                continue
+            req.out_tokens.extend(int(t) for t in outs[:, slot])
+            self.stats["tokens_out"] += k
+            self.last_tokens[slot, 0] = int(outs[-1, slot])
+            self.seq_lens[slot] += k
+            if req.done:
+                done_now.append(req)
+                self._finish(slot)
+        return done_now
+
+    def run(self, max_steps: int = 100_000,
+            max_fuse: int = 32) -> List[Request]:
+        """Drive ``step`` until every submitted request has finished."""
+        while (self.waiting or self.num_active) and max_steps:
+            self.step(max_fuse=max_fuse)
+            max_steps -= 1
+        if self.waiting or self.num_active:
+            raise RuntimeError(
+                f"run() exhausted max_steps with {len(self.waiting)} waiting "
+                f"and {self.num_active} active requests")
+        return self.finished

@@ -1,0 +1,303 @@
+"""Paged-KV serving: allocator invariants, kernel-vs-oracle equivalence
+(interpret mode), paged-vs-dense decode equivalence, and the continuous
+batching scheduler's late-join determinism property."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import REDUCED
+from repro.kernels import ops, ref
+from repro.models import model as M
+from repro.serving import engine as E
+from repro.serving import paged_cache as PC
+from repro.serving.scheduler import ContinuousBatchingScheduler, supports_paged
+
+KEY = jax.random.PRNGKey(7)
+
+
+def rand(shape, i, dtype=jnp.float32):
+    return jax.random.normal(jax.random.fold_in(KEY, i), shape, dtype)
+
+
+# ------------------------------------------------------------- allocator --
+
+def test_allocator_invariants():
+    a = PC.PageAllocator(10)                 # 9 allocatable + sink
+    assert a.num_free == 9
+    p1 = a.alloc(4, owner="r1")
+    p2 = a.alloc(5, owner="r2")
+    assert a.num_free == 0 and a.num_allocated == 9
+    assert PC.SINK_PAGE not in p1 + p2       # sink never handed out
+    assert len(set(p1) | set(p2)) == 9       # no double allocation
+    with pytest.raises(MemoryError):
+        a.alloc(1)
+    a.free(p1)
+    assert a.num_free == 4
+    with pytest.raises(ValueError):
+        a.free(p1)                           # double free
+    with pytest.raises(ValueError):
+        a.free([PC.SINK_PAGE])
+    a.free(p2)
+    assert a.num_free == 9 and a.num_allocated == 0
+
+
+def test_pages_for_len():
+    assert PC.pages_for_len(1, 8) == 1
+    assert PC.pages_for_len(8, 8) == 1
+    assert PC.pages_for_len(9, 8) == 2
+
+
+# ------------------------------------------------- kernel vs ref oracle --
+
+@pytest.mark.parametrize("window,softcap", [(None, None), (None, 30.0),
+                                            (10, None), (12, 50.0)])
+def test_paged_decode_kernel_matches_ref(window, softcap):
+    B, H, KVH, d, ps, P, n_pg = 3, 8, 2, 32, 8, 17, 4
+    q = rand((B, H, d), 1)
+    kp = rand((P, ps, KVH, d), 2)
+    vp = rand((P, ps, KVH, d), 3)
+    bt = jnp.asarray(np.random.RandomState(0).choice(
+        np.arange(1, P), (B, n_pg)), jnp.int32)
+    lens = jnp.asarray([5, 32, 17], jnp.int32)
+    out = ops.paged_decode_attention(q, kp, vp, bt, lens, softcap=softcap,
+                                     window=window, interpret=True)
+    want = ref.paged_decode_attention_ref(q, kp, vp, bt, lens,
+                                          softcap=softcap, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_decode_kernel_matches_dense_ref():
+    """Identity block table + full pages == contiguous dense decode."""
+    B, H, KVH, d, ps, n_pg = 2, 4, 2, 32, 8, 3
+    S = ps * n_pg
+    q = rand((B, H, d), 4)
+    k = rand((B, S, KVH, d), 5)
+    v = rand((B, S, KVH, d), 6)
+    # pages 1.. hold the contiguous cache rows; page 0 is the sink
+    kp = jnp.concatenate([jnp.zeros((1, ps, KVH, d))] + [
+        k[b].reshape(n_pg, ps, KVH, d) for b in range(B)])
+    vp = jnp.concatenate([jnp.zeros((1, ps, KVH, d))] + [
+        v[b].reshape(n_pg, ps, KVH, d) for b in range(B)])
+    bt = jnp.asarray(1 + np.arange(B * n_pg).reshape(B, n_pg), jnp.int32)
+    lens = jnp.asarray([S, S - 3], jnp.int32)
+    out = ops.paged_decode_attention(q, kp, vp, bt, lens, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, valid_len=lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_decode_kernel_quantised():
+    B, H, KVH, d, ps, P, n_pg = 2, 4, 2, 32, 8, 9, 3
+    from repro.models.attention import quantize_kv
+    kp = rand((P, ps, KVH, d), 7)
+    vp = rand((P, ps, KVH, d), 8)
+    k8, ks = quantize_kv(kp)
+    v8, vs = quantize_kv(vp)
+    q = rand((B, H, d), 9)
+    bt = jnp.asarray(np.random.RandomState(1).choice(
+        np.arange(1, P), (B, n_pg)), jnp.int32)
+    lens = jnp.asarray([20, 11], jnp.int32)
+    out = ops.paged_decode_attention(q, k8, v8, bt, lens, k_scale_pages=ks,
+                                     v_scale_pages=vs, interpret=True)
+    want = ref.paged_decode_attention_ref(
+        q, k8.astype(jnp.float32) * ks[..., None],
+        v8.astype(jnp.float32) * vs[..., None], bt, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_paged_decode_zero_length_finite():
+    B, H, KVH, d, ps, P, n_pg = 2, 4, 2, 32, 8, 5, 2
+    out = ops.paged_decode_attention(
+        rand((B, H, d), 10), rand((P, ps, KVH, d), 11),
+        rand((P, ps, KVH, d), 12),
+        jnp.zeros((B, n_pg), jnp.int32), jnp.zeros((B,), jnp.int32),
+        interpret=True)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+# --------------------------------------- paged model path vs dense engine --
+
+@pytest.mark.parametrize("arch,quant", [
+    ("qwen3-32b", False),            # plain GQA
+    ("gemma2-2b", False),            # sliding window + softcaps
+    ("jamba-v0.1-52b", False),       # hybrid attn+SSM (dense state slots)
+    ("qwen2-moe-a2.7b", False),      # MoE decode routing path
+    ("qwen3-32b", True),             # int8-quantised pools
+])
+def test_paged_decode_matches_dense_engine(arch, quant):
+    """Prefill -> page insert -> paged decode reproduces the dense engine's
+    greedy tokens exactly.
+
+    fp32 activations: the dense and paged paths are different XLA programs,
+    and in bf16/int8 their reassociated reductions can drift ~1e-3 — enough
+    to flip a greedy argmax on near-ties. fp32 shrinks the drift ~2^13 so
+    exact token equality is a stable assertion of the *logic*, not of
+    bitwise numerics XLA never promises.
+    """
+    cfg = dataclasses.replace(REDUCED[arch], cache_quant=quant,
+                              dtype="float32")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    plen, gen, ps = 13, 8, 8
+    toks = jax.random.randint(KEY, (1, plen), 0, cfg.vocab_size)
+
+    lg, cache, cur = E.prefill(cfg, params, {"tokens": toks},
+                               capacity=plen + gen + 2)
+    first = jnp.argmax(lg[:, -1, :cfg.vocab_size], -1).astype(
+        jnp.int32)[:, None]
+    dtoks, _, _ = E.greedy_decode(cfg, params, cache, first, cur, gen - 1)
+    dense_out = [int(first[0, 0])] + [int(t) for t in dtoks[0]]
+
+    sched = ContinuousBatchingScheduler(cfg, params, max_slots=1,
+                                        page_size=ps, max_seq_len=64)
+    req = sched.submit(np.asarray(toks[0]), gen)
+    sched.run()
+    assert req.out_tokens == dense_out
+
+
+def test_scheduler_late_join_determinism():
+    """Requests joining a running batch decode the same tokens as solo.
+
+    fp32 for argmax stability across the two differently-shaped compiled
+    programs (1-slot vs 2-slot) — see the note on the equivalence test.
+    """
+    cfg = dataclasses.replace(REDUCED["qwen3-32b"], dtype="float32")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 12, 20, 9)]
+    gens = [6, 3, 8, 5]
+
+    solo = []
+    for p, g in zip(prompts, gens):
+        s = ContinuousBatchingScheduler(cfg, params, max_slots=1,
+                                        page_size=8, max_seq_len=64)
+        s.submit(p, g)
+        solo.append(s.run()[0].out_tokens)
+
+    s = ContinuousBatchingScheduler(cfg, params, max_slots=2, page_size=8,
+                                    max_seq_len=64)
+    reqs = [s.submit(p, g, arrival_step=i)
+            for i, (p, g) in enumerate(zip(prompts, gens))]
+    s.run()
+    for r, want in zip(reqs, solo):
+        assert r.out_tokens == want
+    # evict-on-finish returned every page; reservations drained
+    assert s.alloc.num_allocated == 0
+    assert s.reserved_pages == 0
+    assert all(r.finish_step is not None for r in reqs)
+
+
+def test_scheduler_rejects_unsupported():
+    cfg = REDUCED["deepseek-v2-236b"]          # MLA
+    assert not supports_paged(cfg)
+    with pytest.raises(NotImplementedError):
+        ContinuousBatchingScheduler(cfg, params=None)
+
+
+def test_scheduler_admission_respects_pool():
+    """With a pool too small for two worst-case requests, the second waits
+    and still completes after the first frees its pages."""
+    cfg = REDUCED["qwen3-32b"]
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(3)
+    # each request reserves ceil((8+8)/8)=2 pages; pool holds 3 (+sink)
+    s = ContinuousBatchingScheduler(cfg, params, max_slots=2, page_size=8,
+                                    num_pages=4, max_seq_len=16)
+    r1 = s.submit(rng.randint(0, cfg.vocab_size, size=8), 8)
+    r2 = s.submit(rng.randint(0, cfg.vocab_size, size=8), 8)
+    s.step()
+    assert r1.admit_step is not None and r2.admit_step is None
+    s.run()
+    assert r2.finish_step is not None and len(r2.out_tokens) == 8
+    assert s.alloc.num_allocated == 0
+
+
+def test_scheduler_rejects_unservable_request():
+    """A reservation that could never fit the pool fails at submit, not by
+    spinning the run loop forever."""
+    cfg = REDUCED["qwen3-32b"]
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    s = ContinuousBatchingScheduler(cfg, params, max_slots=2, page_size=8,
+                                    num_pages=4, max_seq_len=64)
+    with pytest.raises(ValueError, match="never be admitted"):
+        s.submit(np.zeros(40, np.int32), 20)   # needs 8 pages, pool holds 3
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        s.submit(np.zeros(4, np.int32), 0)
+
+
+def test_scheduler_single_token_request_finishes_via_step():
+    """max_new_tokens == 1 completes at prefill; step() must still report it
+    and hand its slot to a same-tick waiting request."""
+    cfg = REDUCED["qwen3-32b"]
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(5)
+    s = ContinuousBatchingScheduler(cfg, params, max_slots=1, page_size=8,
+                                    max_seq_len=32)
+    r1 = s.submit(rng.randint(0, cfg.vocab_size, size=6), 1)
+    r2 = s.submit(rng.randint(0, cfg.vocab_size, size=6), 2)
+    done = s.step()
+    assert r1 in done and r1.finish_step is not None
+    assert r2.admit_step is not None           # took r1's slot the same tick
+    s.run()
+    assert len(r2.out_tokens) == 2
+
+
+def test_scheduler_finish_step_fuse_invariant():
+    """Fusion is a dispatch optimisation: recorded finish ticks must not
+    depend on max_fuse."""
+    cfg = REDUCED["qwen3-32b"]
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(6)
+    prompts = [rng.randint(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 9)]
+    gens = [7, 4]
+    records = []
+    for fuse in (1, 32):
+        s = ContinuousBatchingScheduler(cfg, params, max_slots=2,
+                                        page_size=8, max_seq_len=32)
+        reqs = [s.submit(p, g) for p, g in zip(prompts, gens)]
+        s.run(max_fuse=fuse)
+        records.append([(r.admit_step, r.finish_step) for r in reqs])
+    assert records[0] == records[1]
+
+
+# ------------------------------------------------ blueprint + provisioning --
+
+def test_serving_page_plan_sizing():
+    from repro.configs.base import SHAPES
+    from repro.core.blueprint import serving_page_plan
+    from repro.configs.registry import ARCHS
+    plan = serving_page_plan(ARCHS["qwen3-32b"], SHAPES["decode_32k"],
+                             {"model": 8, "data": 4})
+    assert plan["num_pages"] > 0
+    assert plan["pages_per_seq"] == -(-32768 // plan["page_size"])
+    assert plan["pool_bytes"] <= 32 * 16 * 1024 ** 3
+    # MLA archs keep the dense engine
+    assert serving_page_plan(ARCHS["deepseek-v2-236b"],
+                             SHAPES["decode_32k"]) is None
+
+
+def test_provision_serving_service():
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import ARCHS
+    from repro.core.provisioner import ClusterProvisioner
+    from repro.core.services import AmbariServer, PORTS
+    from repro.core.simcloud import SimCloud
+    cloud = SimCloud(seed=7)
+    cloud.register_key("AK", "SK")
+    prov = ClusterProvisioner(cloud, region="us-east-1", access_key_id="AK",
+                              secret_key="SK")
+    cluster = prov.provision(n_slaves=2)
+    server = AmbariServer(cloud, cluster)
+    svc = server.provision_serving(ARCHS["qwen3-32b"], SHAPES["decode_32k"],
+                                   {"model": 8, "data": 4})
+    assert svc.port == PORTS["serve"]
+    assert svc.config["num_pages"] > 0
+    assert server.status()["serve"] == "installed"
+    server.start("serve")
+    assert server.status()["serve"] == "started"
