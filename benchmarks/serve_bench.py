@@ -139,7 +139,13 @@ def main() -> None:
                     "(matching the static baseline, which batches the whole "
                     "workload upfront)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fast run for CI: exercises both engines "
+                    "end-to-end, ignores the speedup number")
     args = ap.parse_args()
+
+    if args.smoke:
+        args.requests, args.repeats, args.wide, args.deep = 8, 1, 1, 1
 
     cfg = bench_cfg(args.arch, args.wide, args.deep)
     params = M.init(cfg, jax.random.PRNGKey(0))

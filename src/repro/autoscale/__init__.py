@@ -1,0 +1,24 @@
+"""Elastic autoscaling control plane.
+
+Closes the loop between the serving engine and the cluster control plane:
+
+* ``metrics``    — telemetry bus aggregating per-tick scheduler + heartbeat
+                   signals into windowed series on the SimCloud clock;
+* ``policy``     — target-tracking and step-scaling policies with
+                   hysteresis/cooldown, emitting typed ``ScaleDecision``s;
+* ``controller`` — the actuator: live slot/page-pool resize on the paged
+                   scheduler, node add/remove through ``ClusterLifecycle``,
+                   spot-preemption replacement from the warm-spare pool.
+
+See docs/autoscaling.md for the control-loop walk-through.
+"""
+from repro.autoscale.controller import AutoscaleController, CapacityBands
+from repro.autoscale.metrics import TelemetryBus, sample_scheduler
+from repro.autoscale.policy import (ScaleDecision, StepScalingPolicy,
+                                    TargetTrackingPolicy)
+
+__all__ = [
+    "AutoscaleController", "CapacityBands", "TelemetryBus",
+    "sample_scheduler", "ScaleDecision", "StepScalingPolicy",
+    "TargetTrackingPolicy",
+]

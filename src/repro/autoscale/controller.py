@@ -1,0 +1,327 @@
+"""Autoscale controller: metrics in, ScaleDecisions out, resizes applied.
+
+The control loop runs synchronously between decode ticks:
+
+1. **sample** — scheduler + heartbeat signals land on the telemetry bus;
+2. **decide** — every ``eval_interval`` ticks the policies run against
+   windowed aggregates and emit ``ScaleDecision``s;
+3. **actuate** — slot targets are snapped to power-of-two buckets (each
+   distinct shape costs one jit re-trace, so the bucket ladder bounds the
+   number of compiled programs), the page pool follows the slot target
+   (worst-case pages per slot) unless a dedicated page policy is given,
+   and ``ContinuousBatchingScheduler.resize`` applies the change —
+   drain-before-shrink and reservation-aware by construction.
+
+When cluster-wired (``lifecycle``/``cluster``), the slot ceiling is what
+the current node fleet provides (``slots_per_node``): scaling out first
+extends the cluster through ``ClusterLifecycle.extend`` and the new slots
+become usable only after ``node_boot_ticks`` (boot latency); scaling in
+drains slots first, then shrinks the emptied nodes away. Spot preemption
+notices from SimCloud are handled by draining the lost capacity and
+replacing the instance from the warm-spare pool when one is available.
+
+Cost accounting is tick-integrated (``instance_ticks`` — node-ticks, and
+``slot_ticks``) so benchmarks compare instance-seconds deterministically
+on the simulated clock; see ``benchmarks/autoscale_bench.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional
+
+from repro.autoscale.metrics import (TelemetryBus, sample_monitor,
+                                     sample_scheduler)
+from repro.autoscale.policy import ScaleDecision, TargetTrackingPolicy
+from repro.core.events import EventLog
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityBands:
+    """Min/max capacity the policies may move within (blueprint-derived)."""
+    min_slots: int
+    max_slots: int
+    min_pages: int
+    max_pages: int
+
+    @staticmethod
+    def from_plan(plan: Dict[str, Any]) -> "CapacityBands":
+        """Build bands from a ``serving_page_plan`` suggestion dict."""
+        return CapacityBands(
+            min_slots=plan["min_slots"], max_slots=plan["max_slots"],
+            min_pages=plan["min_pages"], max_pages=plan["max_pages"])
+
+
+def pow2_bucket(n: int) -> int:
+    """Smallest power of two >= n (slot targets snap up, never starving)."""
+    return 1 << max(n - 1, 1).bit_length() if n > 1 else 1
+
+
+def default_slot_policy(bands: CapacityBands) -> TargetTrackingPolicy:
+    """Track (active + queued) / slots toward 80% occupancy. Quantized to
+    the actuator's pow2 buckets so a desired value that buckets back to the
+    current capacity is a non-decision (no cooldown burned, no log entry)."""
+    return TargetTrackingPolicy(
+        metric="demand_per_slot", target=0.8, tolerance=0.15,
+        min_cap=bands.min_slots, max_cap=bands.max_slots,
+        cooldown_in=24.0, cooldown_out=0.0, resource="slots",
+        quantize=pow2_bucket)
+
+
+class AutoscaleController:
+    def __init__(self, sched, bands: CapacityBands, *,
+                 slot_policy=None, page_policy=None,
+                 eval_interval: int = 8, tick_seconds: float = 1.0,
+                 slots_per_node: Optional[int] = None,
+                 node_boot_ticks: int = 0,
+                 lifecycle=None, cluster=None, monitor=None,
+                 log: Optional[EventLog] = None):
+        self.sched = sched
+        self.bands = bands
+        self.slot_policy = slot_policy or default_slot_policy(bands)
+        self.page_policy = page_policy        # None -> pages follow slots
+        self.eval_interval = eval_interval
+        self.tick_seconds = tick_seconds
+        self.bus = TelemetryBus()
+        self.monitor = monitor
+        self.lifecycle = lifecycle
+        self.cluster = cluster
+        self.log = log if log is not None else (
+            cluster.log if cluster is not None else EventLog())
+        self.decisions: List[ScaleDecision] = []
+
+        # ---- node fleet model -------------------------------------------
+        self.slots_per_node = slots_per_node
+        self.node_boot_ticks = node_boot_ticks
+        if slots_per_node:
+            self.nodes_ready = math.ceil(sched.target_slots / slots_per_node)
+        else:
+            self.nodes_ready = 0
+        self._booting: List[tuple] = []        # (ready_tick, count)
+
+        # ---- accounting --------------------------------------------------
+        self.instance_ticks = 0.0              # node-ticks (cost integral)
+        self.slot_ticks = 0.0
+        self.capacity_log: List[tuple] = []    # (tick, nodes, slots, pages)
+        self._last_tick = sched.step_idx
+        self._next_eval = sched.step_idx
+
+        sched.capacity_hint = bands.max_pages
+        if cluster is not None and lifecycle is not None:
+            lifecycle.cloud.on_preempt(self._on_preempt)
+
+    # ------------------------------------------------------------- clock --
+    @property
+    def now(self) -> float:
+        return self.sched.step_idx * self.tick_seconds
+
+    def _nodes_total(self) -> int:
+        return self.nodes_ready + sum(c for _, c in self._booting)
+
+    # --------------------------------------------------------------- tick --
+    def tick(self) -> None:
+        """One control-loop pass. ``run`` calls this *before* each scheduler
+        step: newly due requests are sampled as queue depth and the resize
+        lands before that tick's admission, so with warm capacity
+        (``node_boot_ticks == 0`` — the paper's fast-provisioning pitch) a
+        reactive scale-out adds zero admission latency over static peak
+        provisioning."""
+        t = self.sched.step_idx
+        elapsed = t - self._last_tick        # fused/idle steps advance >1
+        self._last_tick = t
+        if elapsed > 0:
+            # billed while booting too — that is what makes over-eager
+            # scale-out cost real in the benchmark
+            self.instance_ticks += elapsed * self._nodes_total()
+            # bill the allocated width (max_slots): a draining shrink keeps
+            # decoding at the old width until its last request finishes
+            self.slot_ticks += elapsed * self.sched.max_slots
+
+        still_booting = []
+        for ready, count in self._booting:
+            if t >= ready:
+                self.nodes_ready += count
+            else:
+                still_booting.append((ready, count))
+        if len(still_booting) != len(self._booting):
+            self._booting = still_booting
+            self._apply_slot_target(self._desired_slots_cache)
+        self._shrink_nodes()    # release nodes whose drain completed
+
+        sample = sample_scheduler(self.sched)
+        sample["demand_per_slot"] = sample["demand"] / max(sample["slots"], 1)
+        sample.update(sample_monitor(self.monitor))
+        self.bus.record(t * self.tick_seconds, sample)
+
+        if t >= self._next_eval:
+            self._next_eval = t + self.eval_interval
+            self._evaluate()
+
+    _desired_slots_cache: int = 0
+
+    def _evaluate(self) -> None:
+        """Run the policies on windowed-max aggregates over the last eval
+        interval: scale-out still sees this tick's spike at full strength
+        (the freshest sample is in the window), while scale-in waits until
+        the *whole* window is quiet — smoothing over single-tick dips."""
+        now = self.now
+        horizon = self.eval_interval * self.tick_seconds
+        d = self.slot_policy.evaluate(
+            now, self.bus.max(self.slot_policy.metric, horizon),
+            int(self.sched.target_slots))
+        if d is not None:
+            self._record(d)
+            self._scale_slots(d.desired)
+        if self.page_policy is not None:
+            dp = self.page_policy.evaluate(
+                now, self.bus.max(self.page_policy.metric, horizon),
+                int(self.sched.alloc.capacity + 1))
+            if dp is not None:
+                self._record(dp)
+                self._scale_pages(dp.desired)
+
+    def _record(self, d: ScaleDecision) -> None:
+        self.decisions.append(d)
+        self.log.emit(d.at, "autoscale", f"scale_{d.direction}",
+                      resource=d.resource, desired=d.desired, delta=d.delta,
+                      reason=d.reason)
+
+    # ----------------------------------------------------------- actuate --
+    def _scale_slots(self, desired: int) -> None:
+        desired = max(self.bands.min_slots,
+                      min(self.bands.max_slots, pow2_bucket(desired)))
+        self._desired_slots_cache = desired
+        if self.slots_per_node:
+            need_nodes = math.ceil(desired / self.slots_per_node)
+            if need_nodes > self._nodes_total():
+                self._extend_nodes(need_nodes - self._nodes_total())
+        self._apply_slot_target(desired)    # node release: tick() handles it
+
+    def _apply_slot_target(self, desired: int) -> None:
+        if desired <= 0:
+            return
+        if self.slots_per_node:
+            ceiling = max(self.nodes_ready * self.slots_per_node,
+                          self.bands.min_slots)
+            desired = min(desired, ceiling)
+        if desired != self.sched.target_slots:
+            self.sched.resize(max_slots=desired)
+        if self.page_policy is None:
+            # pages follow slots: worst-case pages per slot (+ sink), so a
+            # page resize only ever happens together with a slot resize
+            self._scale_pages(desired * self.sched.n_pg + 1)
+
+    def _scale_pages(self, desired: int) -> None:
+        desired = max(self.bands.min_pages,
+                      min(self.bands.max_pages, desired))
+        if desired != self.sched.alloc.effective_pages:
+            self.sched.resize(num_pages=desired)
+
+    # ------------------------------------------------------------- nodes --
+    def _extend_nodes(self, n: int) -> None:
+        t = self.sched.step_idx
+        if self.lifecycle is not None and self.cluster is not None:
+            self.lifecycle.extend(self.cluster, n)
+            if self.monitor is not None:
+                for node in self.cluster.directory.slaves()[-n:]:
+                    self.monitor.register(node.hostname,
+                                          now=self.lifecycle.cloud.clock)
+        if self.node_boot_ticks == 0:
+            self.nodes_ready += n       # warm-pool attach: usable this tick
+        else:
+            self._booting.append((t + self.node_boot_ticks, n))
+        self.log.emit(self.now, "autoscale", "extend_nodes", n=n,
+                      ready_tick=t + self.node_boot_ticks)
+
+    def _shrink_nodes(self) -> None:
+        """Release nodes whose slots have fully drained."""
+        if not self.slots_per_node:
+            return
+        # only shrink nodes made idle by a *completed* slot shrink
+        needed = math.ceil(self.sched.max_slots / self.slots_per_node)
+        needed = max(needed, math.ceil(self.bands.min_slots
+                                       / self.slots_per_node), 1)
+        excess = self.nodes_ready - needed
+        if excess <= 0:
+            return
+        self.nodes_ready = needed
+        if self.lifecycle is not None and self.cluster is not None:
+            victims = [n.hostname for n in
+                       self.cluster.directory.slaves()[-excess:]]
+            self.lifecycle.shrink(self.cluster, victims)
+            if self.monitor is not None:
+                for hn in victims:
+                    self.monitor.deregister(hn)
+        self.log.emit(self.now, "autoscale", "release_nodes", n=excess)
+
+    def _on_preempt(self, inst) -> None:
+        """SimCloud preemption notice: replace from the warm-spare pool if
+        one is ready, otherwise drain the lost capacity."""
+        if self.cluster is None:
+            return
+        hostname = None
+        for node in self.cluster.directory.slaves():
+            if node.instance_id == inst.instance_id:
+                hostname = node.hostname
+                break
+        if hostname is None:
+            return                              # not ours (e.g. a spare)
+        if self.lifecycle.spares:
+            self.lifecycle.replace_failed(self.cluster, hostname)
+            self.log.emit(self.now, "autoscale", "preempt_replaced",
+                          hostname=hostname)
+        else:
+            # no spare: drop the dead host from the fleet bookkeeping
+            # (directory + monitor) and drain the lost slot capacity
+            self.lifecycle.shrink(self.cluster, [hostname])
+            if self.monitor is not None:
+                self.monitor.deregister(hostname)
+            self.nodes_ready = max(self.nodes_ready - 1, 1)
+            ceiling = self.nodes_ready * (self.slots_per_node or
+                                          self.sched.target_slots)
+            self.sched.resize(max_slots=max(min(ceiling,
+                                                self.sched.target_slots), 1))
+            self.log.emit(self.now, "autoscale", "preempt_drained",
+                          hostname=hostname, new_slots=self.sched.target_slots)
+
+    # ---------------------------------------------------------------- run --
+    def snapshot(self) -> None:
+        self.capacity_log.append(
+            (self.sched.step_idx, self._nodes_total(),
+             self.sched.target_slots, self.sched.alloc.effective_pages))
+
+    def run(self, max_steps: int = 100_000) -> list:
+        """Drive the scheduler to completion under the control loop.
+
+        ``max_fuse`` is capped at ``eval_interval`` so the controller gets
+        a look-in at least once per interval even when decode fuses ticks.
+        """
+        sched = self.sched
+        while (sched.waiting or sched.num_active) and max_steps:
+            self.tick()                 # decide *before* this tick's admission
+            sched.step(max_fuse=max(self.eval_interval, 1))
+            self.snapshot()
+            max_steps -= 1
+        if sched.waiting or sched.num_active:
+            raise RuntimeError("autoscale run exhausted max_steps")
+        self.tick()                     # settle accounting for the last span
+        sched._settle_resize()
+        return sched.finished
+
+    # ------------------------------------------------------------ summary --
+    def summary(self) -> Dict[str, Any]:
+        out = {
+            "slot_seconds": self.slot_ticks * self.tick_seconds,
+            "decisions": len(self.decisions),
+            "scale_out": sum(1 for d in self.decisions if d.delta > 0),
+            "scale_in": sum(1 for d in self.decisions if d.delta < 0),
+            "peak_slots": max((s for _, _, s, _ in self.capacity_log),
+                              default=self.sched.target_slots),
+            "final_slots": self.sched.target_slots,
+        }
+        if self.slots_per_node:
+            # node-level cost only exists when the controller is node-wired;
+            # engine-only controllers report slot_seconds alone rather than
+            # a misleading 0.0
+            out["instance_seconds"] = self.instance_ticks * self.tick_seconds
+        return out

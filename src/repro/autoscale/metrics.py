@@ -1,0 +1,104 @@
+"""Telemetry bus: windowed per-tick signals for the autoscaling loop.
+
+One ``TelemetryBus`` aggregates everything the policy engine looks at:
+
+* serving-scheduler signals (``sample_scheduler``) — queue depth, decode
+  slot occupancy, page-pool occupancy, cumulative tokens out, admission
+  blocks;
+* heartbeat signals (``sample_monitor``) — DEAD / STRAGGLER host counts.
+
+Samples are keyed on a monotonically increasing clock — the SimCloud clock
+when the controller is cluster-wired, the scheduler tick otherwise — and
+kept in bounded per-signal deques so a long serving run cannot grow host
+memory. Aggregation (``mean``/``max``/``last``/``rate``) is computed over
+a trailing window at read time; there is no background thread, the
+controller drives sampling synchronously between decode ticks.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Deque, Dict, Iterable, Optional, Tuple
+
+from repro.core.heartbeat import HeartbeatMonitor, HostState
+
+
+def sample_scheduler(sched) -> Dict[str, float]:
+    """One tick's worth of signals from a ``ContinuousBatchingScheduler``."""
+    # occupancy reads against the *effective* capacity: during a pending
+    # shrink the retired pages are no longer allocatable, and reading load
+    # against the old pool size would mask real pressure
+    pages_total = max(sched.alloc.capacity, 1)
+    due = sched.pending_due
+    return {
+        "queue_depth": float(due),
+        "active": float(sched.num_active),
+        "slots": float(sched.target_slots),
+        "slot_occupancy": sched.num_active / max(sched.target_slots, 1),
+        "demand": float(sched.num_active + due),
+        "pages_used": float(sched.pages_in_use),
+        "pages_total": float(pages_total),
+        "page_occupancy": sched.pages_in_use / pages_total,
+        "reserved_pages": float(sched.reserved_pages),
+        "tokens_out": float(sched.stats["tokens_out"]),
+        "admit_blocked": float(sched.stats["admit_blocked"]),
+    }
+
+
+def sample_monitor(monitor: Optional[HeartbeatMonitor]) -> Dict[str, float]:
+    """DEAD / STRAGGLER counts from the Ambari heartbeat monitor."""
+    if monitor is None:
+        return {"dead_hosts": 0.0, "straggler_hosts": 0.0}
+    states = [h.state for h in monitor.hosts.values()]
+    return {
+        "dead_hosts": float(sum(s == HostState.DEAD for s in states)),
+        "straggler_hosts": float(
+            sum(s == HostState.STRAGGLER for s in states)),
+    }
+
+
+class TelemetryBus:
+    """Bounded windowed series, one deque of ``(t, value)`` per signal."""
+
+    def __init__(self, maxlen: int = 4096):
+        self.maxlen = maxlen
+        self.series: Dict[str, Deque[Tuple[float, float]]] = {}
+
+    def record(self, t: float, values: Dict[str, float]) -> None:
+        for name, v in values.items():
+            self.series.setdefault(
+                name, collections.deque(maxlen=self.maxlen)).append(
+                    (t, float(v)))
+
+    # ------------------------------------------------------------- reads --
+    def _window(self, name: str, horizon: Optional[float]
+                ) -> Iterable[Tuple[float, float]]:
+        s = self.series.get(name)
+        if not s:
+            return []
+        if horizon is None:
+            return s
+        cut = s[-1][0] - horizon
+        return [(t, v) for t, v in s if t >= cut]
+
+    def last(self, name: str, default: float = 0.0) -> float:
+        s = self.series.get(name)
+        return s[-1][1] if s else default
+
+    def mean(self, name: str, horizon: Optional[float] = None,
+             default: float = 0.0) -> float:
+        w = list(self._window(name, horizon))
+        return sum(v for _, v in w) / len(w) if w else default
+
+    def max(self, name: str, horizon: Optional[float] = None,
+            default: float = 0.0) -> float:
+        w = list(self._window(name, horizon))
+        return max(v for _, v in w) if w else default
+
+    def rate(self, name: str, horizon: Optional[float] = None) -> float:
+        """Per-clock-unit rate of change of a cumulative counter (e.g.
+        ``tokens_out`` -> tokens/s on the SimCloud clock)."""
+        w = list(self._window(name, horizon))
+        if len(w) < 2:
+            return 0.0
+        (t0, v0), (t1, v1) = w[0], w[-1]
+        return (v1 - v0) / (t1 - t0) if t1 > t0 else 0.0

@@ -1,0 +1,154 @@
+"""Scaling policies: target tracking and step scaling, with hysteresis.
+
+Both policy kinds map a windowed metric value to a desired capacity and
+emit a typed ``ScaleDecision`` only when an actual change should happen.
+The guards that keep the loop from flapping live here, not in the
+actuator:
+
+* **deadband** (target tracking) — no decision while the metric sits
+  within ``tolerance`` of the target;
+* **cooldown** — per-direction minimum spacing between decisions, with
+  scale-in typically slower than scale-out (AWS-style asymmetry: adding
+  capacity is urgent, removing it is housekeeping);
+* **bounds** — desired capacity is clamped to ``[min_cap, max_cap]``
+  before the decision is emitted (the blueprint's capacity bands).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleDecision:
+    """A typed resize the actuator should carry out."""
+    resource: str            # "slots" | "pages" | "nodes"
+    desired: int             # absolute target capacity
+    delta: int               # desired - current
+    reason: str
+    at: float                # decision clock
+
+    @property
+    def direction(self) -> str:
+        return "out" if self.delta > 0 else "in"
+
+
+class _CooldownMixin:
+    def _cooled_down(self, now: float, direction: str) -> bool:
+        last = self._last_action.get(direction)
+        wait = (self.cooldown_out if direction == "out"
+                else self.cooldown_in)
+        return last is None or now - last >= wait
+
+    def _note(self, now: float, direction: str) -> None:
+        self._last_action[direction] = now
+
+
+class TargetTrackingPolicy(_CooldownMixin):
+    """Keep ``metric`` near ``target`` by scaling capacity proportionally.
+
+    ``metric`` is read as *per-unit-of-capacity load* (e.g. slot occupancy
+    ``(active + queued) / slots``), so the proportional desired capacity is
+    ``ceil(current * metric / target)`` — the same control law as AWS
+    target tracking. ``tolerance`` is the relative deadband around the
+    target inside which no decision fires.
+    """
+
+    def __init__(self, *, metric: str, target: float, tolerance: float = 0.1,
+                 min_cap: int = 1, max_cap: int = 1 << 30,
+                 cooldown_out: float = 0.0, cooldown_in: float = 0.0,
+                 resource: str = "slots", quantize=None):
+        if target <= 0:
+            raise ValueError("target must be positive")
+        self.metric = metric
+        self.target = target
+        self.tolerance = tolerance
+        self.min_cap = min_cap
+        self.max_cap = max_cap
+        self.cooldown_out = cooldown_out
+        self.cooldown_in = cooldown_in
+        self.resource = resource
+        # actuator granularity (e.g. pow2 slot buckets): applied *before*
+        # the no-change check, so a desired value that quantizes back to
+        # the current capacity is a non-decision — it neither consumes a
+        # cooldown nor lands in the event log
+        self.quantize = quantize
+        self._last_action = {}
+
+    def evaluate(self, now: float, value: float,
+                 current: int) -> Optional[ScaleDecision]:
+        lo = self.target * (1 - self.tolerance)
+        hi = self.target * (1 + self.tolerance)
+        if lo <= value <= hi:
+            return None                       # inside the deadband
+        desired = math.ceil(current * value / self.target)
+        if self.quantize is not None:
+            desired = self.quantize(desired)
+        desired = max(self.min_cap, min(self.max_cap, desired))
+        if desired == current:
+            return None
+        direction = "out" if desired > current else "in"
+        if not self._cooled_down(now, direction):
+            return None
+        self._note(now, direction)
+        return ScaleDecision(
+            resource=self.resource, desired=desired,
+            delta=desired - current, at=now,
+            reason=(f"target-tracking {self.metric}={value:.3f} vs "
+                    f"target {self.target:.3f}"))
+
+
+class StepScalingPolicy(_CooldownMixin):
+    """Threshold ladder: metric above a step's bound adds that step's delta.
+
+    ``steps_out`` is a sequence of ``(lower_bound, delta)`` pairs sorted
+    ascending; the highest bound the metric clears wins (e.g. queue depth
+    ``[(1, +1), (4, +2), (16, +4)]``). When the metric falls to
+    ``scale_in_below`` or lower, capacity steps down by ``scale_in_step``.
+    """
+
+    def __init__(self, *, metric: str,
+                 steps_out: Sequence[Tuple[float, int]],
+                 scale_in_below: Optional[float] = None,
+                 scale_in_step: int = 1,
+                 min_cap: int = 1, max_cap: int = 1 << 30,
+                 cooldown_out: float = 0.0, cooldown_in: float = 0.0,
+                 resource: str = "slots", quantize=None):
+        self.metric = metric
+        self.steps_out: List[Tuple[float, int]] = sorted(steps_out)
+        self.scale_in_below = scale_in_below
+        self.scale_in_step = scale_in_step
+        self.min_cap = min_cap
+        self.max_cap = max_cap
+        self.cooldown_out = cooldown_out
+        self.cooldown_in = cooldown_in
+        self.resource = resource
+        self.quantize = quantize              # see TargetTrackingPolicy
+        self._last_action = {}
+
+    def evaluate(self, now: float, value: float,
+                 current: int) -> Optional[ScaleDecision]:
+        delta = 0
+        for bound, d in self.steps_out:
+            if value >= bound:
+                delta = d
+        if delta == 0 and self.scale_in_below is not None \
+                and value <= self.scale_in_below:
+            delta = -self.scale_in_step
+        if delta == 0:
+            return None
+        desired = current + delta
+        if self.quantize is not None:
+            desired = self.quantize(desired)
+        desired = max(self.min_cap, min(self.max_cap, desired))
+        if desired == current:
+            return None
+        direction = "out" if desired > current else "in"
+        if not self._cooled_down(now, direction):
+            return None
+        self._note(now, direction)
+        return ScaleDecision(
+            resource=self.resource, desired=desired,
+            delta=desired - current, at=now,
+            reason=f"step-scaling {self.metric}={value:.3f}")

@@ -211,14 +211,24 @@ def serving_page_plan(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
     tok_bytes = page_bytes_per_token(cfg)
     num_pages = int(budget // (tok_bytes * page_size))
     pages_per_seq = -(-shape.seq_len // page_size)
+    max_seqs = max(num_pages - 1, 0) // max(pages_per_seq, 1)
+    # capacity bands for the elastic control plane (repro.autoscale): the
+    # autoscaler may move slot count / pool size anywhere inside them. The
+    # max band is the HBM fit above; the min band keeps one full-length
+    # sequence admissible so the service never scales to zero.
+    min_slots = 1 if max_seqs else 0
     return {
         "page_size": page_size,
         "num_pages": num_pages,
         "pages_per_seq": pages_per_seq,
         # page 0 of the pool is the scheduler's sink page, never allocated
-        "max_concurrent_seqs": max(num_pages - 1, 0) // max(pages_per_seq, 1),
+        "max_concurrent_seqs": max_seqs,
         "page_bytes_per_token": tok_bytes,
         "pool_bytes": num_pages * page_size * tok_bytes,
+        "min_slots": min_slots,
+        "max_slots": max_seqs,
+        "min_pages": min(pages_per_seq + 1, num_pages),
+        "max_pages": num_pages,
     }
 
 

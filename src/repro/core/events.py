@@ -1,7 +1,16 @@
-"""Provisioning event log — lets tests assert the paper's Fig. 1 sequence."""
+"""Provisioning event log — lets tests assert the paper's Fig. 1 sequence.
+
+The log round-trips through JSON lines (``write_jsonl``/``from_jsonl``), so
+a full provision/scale/serve run can be exported and replayed — the paper's
+reproducibility claim (§4, "share the experimental environment") made
+concrete for the event stream as well as the cluster spec. ``launch.serve
+--events-out`` and ``benchmarks/autoscale_bench.py --events-out`` write
+this format.
+"""
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Any, Dict, List, Optional
 
 
@@ -12,6 +21,10 @@ class Event:
     action: str       # e.g. "create_temp_user"
     detail: Dict[str, Any]
 
+    def to_dict(self) -> Dict[str, Any]:
+        return {"t": self.t, "actor": self.actor, "action": self.action,
+                "detail": self.detail}
+
 
 class EventLog:
     def __init__(self) -> None:
@@ -19,6 +32,34 @@ class EventLog:
 
     def emit(self, t: float, actor: str, action: str, **detail: Any) -> None:
         self.events.append(Event(t, actor, action, dict(detail)))
+
+    # -------------------------------------------------------------- export --
+    def to_jsonl(self) -> str:
+        """One JSON object per line, in emission order."""
+        return "".join(json.dumps(e.to_dict(), sort_keys=True,
+                                  default=str) + "\n"
+                       for e in self.events)
+
+    def write_jsonl(self, path: str) -> int:
+        """Write the log to ``path``; returns the number of events."""
+        with open(path, "w") as f:
+            f.write(self.to_jsonl())
+        return len(self.events)
+
+    @classmethod
+    def from_jsonl(cls, path: str) -> "EventLog":
+        """Replay an exported log: every assertion helper (``assert_order``,
+        ``actions`` …) works on the loaded copy exactly as on the live one."""
+        log = cls()
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                d = json.loads(line)
+                log.events.append(Event(d["t"], d["actor"], d["action"],
+                                        dict(d["detail"])))
+        return log
 
     def actions(self, actor: Optional[str] = None) -> List[str]:
         return [e.action for e in self.events

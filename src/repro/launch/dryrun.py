@@ -128,8 +128,17 @@ def _lin_extrap(c1, c2, n_periods: int):
     return max(0.0, float(c1) + (n_periods - 1) * (float(c2) - float(c1)))
 
 
-def _extract_costs(compiled) -> Dict[str, Any]:
+def _cost_dict(compiled) -> Dict[str, Any]:
+    """compiled.cost_analysis() across jax versions: 0.4.x returns a list of
+    per-computation dicts, newer jax a single dict."""
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
+def _extract_costs(compiled) -> Dict[str, Any]:
+    cost = _cost_dict(compiled)
     colls = parse_collectives(compiled.as_text())
     return {
         "flops": float(cost.get("flops", 0.0)),
@@ -259,7 +268,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     try:
         meas = measure_costs(cfg, shape, mesh, plan)
     except Exception as e:  # noqa: BLE001 - fall back to scanned numbers
-        cost = compiled.cost_analysis()
+        cost = _cost_dict(compiled)
         meas = {
             "flops": float(cost.get("flops", 0.0)),
             "bytes": float(cost.get("bytes accessed", 0.0)),
@@ -293,7 +302,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             "argument_bytes": mem.argument_size_in_bytes,
             "output_bytes": mem.output_size_in_bytes,
             "temp_bytes": mem.temp_size_in_bytes,
-            "peak_bytes": mem.peak_memory_in_bytes,
+            # jax < 0.5 has no peak_memory_in_bytes; resident args +
+            # outputs + temps (minus donated aliases) is the same bound
+            "peak_bytes": getattr(
+                mem, "peak_memory_in_bytes",
+                mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes - mem.alias_size_in_bytes),
             "alias_bytes": mem.alias_size_in_bytes,
         },
         "cost": {"flops_per_device": flops_dev,

@@ -12,6 +12,10 @@ Two engines, selectable with ``--engine``:
   planner (``repro.core.blueprint.serving_page_plan``). ``--requests``
   builds a mixed-length workload with staggered arrivals to show the
   occupancy win; see ``benchmarks/serve_bench.py`` for the head-to-head.
+  With ``--autoscale`` the engine starts at one decode slot and the
+  elastic control plane (``repro.autoscale``) grows/shrinks slots and
+  page pool with load; ``--events-out run.jsonl`` exports the scale
+  decisions for replay (``EventLog.from_jsonl``).
 
 Both paths run the arch's reduced config on CPU; the full-config serve
 cells (decode_32k / long_500k) are lowered and analysed by the dry-run.
@@ -29,6 +33,7 @@ import numpy as np
 from repro.configs.registry import ARCHS, get_reduced
 from repro.models import model as M
 from repro.serving import engine as E
+from repro.serving import paged_cache as PC
 from repro.serving.scheduler import ContinuousBatchingScheduler, supports_paged
 
 
@@ -69,9 +74,19 @@ def run_paged(cfg, params, args) -> dict:
         raise SystemExit(f"{cfg.name}: use --engine static (MLA/enc-dec)")
     rng = np.random.RandomState(args.seed)
     max_seq = args.prompt_len + args.gen + 8
+    n_pg = PC.pages_for_len(max_seq, args.page_size)
+    start_slots = 1 if args.autoscale else args.batch
     sched = ContinuousBatchingScheduler(
-        cfg, params, max_slots=args.batch, page_size=args.page_size,
+        cfg, params, max_slots=start_slots, page_size=args.page_size,
+        num_pages=start_slots * n_pg + 1 if args.autoscale else None,
         max_seq_len=max_seq)
+    ctl = None
+    if args.autoscale:
+        from repro.autoscale import AutoscaleController, CapacityBands
+        bands = CapacityBands(min_slots=1, max_slots=args.batch,
+                              min_pages=n_pg + 1,
+                              max_pages=args.batch * n_pg + 1)
+        ctl = AutoscaleController(sched, bands, eval_interval=2)
     for i in range(args.requests):
         plen = int(rng.randint(max(args.prompt_len // 2, 1),
                                args.prompt_len + 1))
@@ -80,21 +95,29 @@ def run_paged(cfg, params, args) -> dict:
         sched.submit(prompt, gen, arrival_step=i // 2)
 
     t0 = time.time()
-    done = sched.run()
+    done = ctl.run() if ctl else sched.run()
     wall = time.time() - t0
     toks = sched.stats["tokens_out"]
-    return {
+    out = {
         "engine": "paged",
         "arch": cfg.name,
         "requests": len(done),
         "decode_steps": sched.stats["decode_steps"],
         "tokens_out": toks,
         "tok_per_s": round(toks / wall, 1),
+        # under --autoscale the allocated width varies, so occupancy is
+        # decode tokens over *paid* slot-ticks, not a fixed --batch width
         "mean_occupancy": round(
             (toks - sched.stats["prefills"])
-            / max(sched.stats["decode_steps"] * args.batch, 1), 3),
+            / max(ctl.slot_ticks if ctl is not None
+                  else sched.stats["decode_steps"] * args.batch, 1), 3),
         "generated": [r.out_tokens[:8] for r in done[:4]],
     }
+    if ctl is not None:
+        out["autoscale"] = ctl.summary()
+        if args.events_out:
+            out["events_written"] = ctl.log.write_jsonl(args.events_out)
+    return out
 
 
 def main() -> None:
@@ -109,8 +132,20 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8,
                     help="paged engine: workload size")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--autoscale", action="store_true",
+                    help="paged engine: start at 1 slot and let the "
+                    "autoscale control plane move capacity inside "
+                    "[1, --batch] (see docs/autoscaling.md)")
+    ap.add_argument("--events-out", default=None,
+                    help="write the run's event log (scale decisions, "
+                    "lifecycle ops) as JSON lines for replay")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.autoscale and args.engine != "paged":
+        ap.error("--autoscale requires --engine paged")
+    if args.events_out and not args.autoscale:
+        ap.error("--events-out requires --autoscale (the autoscale control "
+                 "loop is what emits events on this path)")
 
     cfg = get_reduced(args.arch)
     params = M.init(cfg, jax.random.PRNGKey(0))

@@ -92,7 +92,74 @@ class PageAllocator:
             if p not in self._owner:
                 raise ValueError(f"double free of page {p}")
             del self._owner[p]
-            self._free.append(p)
+            if p < self._shrink_target:
+                self._free.append(p)
+            # else: the page is being retired by a pending shrink
+
+    # --------------------------------------------------------- live resize --
+    # _shrink_target defaults past any page id, i.e. "no shrink pending";
+    # set as a class attribute so allocators pickled/built before this field
+    # existed keep working.
+    _shrink_target: int = 1 << 62
+
+    @property
+    def shrink_pending(self) -> bool:
+        return self._shrink_target < self.num_pages
+
+    def grow(self, new_num_pages: int) -> None:
+        """Add pages ``[num_pages, new_num_pages)`` to the free list; cancels
+        any pending shrink (its retired pages return to the pool). The
+        shrink target is cleared unconditionally — a stale target below the
+        new size would read as a phantom pending shrink and let a later
+        ``complete_shrink`` slice the grown pool out from under the free
+        list."""
+        assert new_num_pages >= self.num_pages
+        old_target = min(self._shrink_target, self.num_pages)
+        in_free = set(self._free)
+        self._free.extend(p for p in range(old_target, self.num_pages)
+                          if p not in self._owner and p not in in_free)
+        self._shrink_target = 1 << 62
+        self._free.extend(range(self.num_pages, new_num_pages))
+        self.num_pages = new_num_pages
+
+    def request_shrink(self, new_num_pages: int) -> None:
+        """Retire free pages with id >= ``new_num_pages`` immediately; pages
+        still owned keep their owner and block ``complete_shrink`` until
+        freed (drain-before-shrink). Raising a pending target un-retires the
+        pages between the two targets."""
+        assert 2 <= new_num_pages <= self.num_pages
+        old = min(self._shrink_target, self.num_pages)
+        if new_num_pages > old:
+            in_free = set(self._free)
+            self._free.extend(p for p in range(old, new_num_pages)
+                              if p not in self._owner
+                              and p not in in_free)
+        # relaxing all the way back to the pool size is a cancellation, not
+        # a pending shrink — leave no stale target behind
+        self._shrink_target = (new_num_pages if new_num_pages < self.num_pages
+                               else 1 << 62)
+        self._free = [p for p in self._free if p < new_num_pages]
+
+    def shrink_ready(self) -> bool:
+        return self.shrink_pending and all(p < self._shrink_target
+                                           for p in self._owner)
+
+    def complete_shrink(self) -> int:
+        """Finish a drained shrink; returns the new pool size."""
+        assert self.shrink_ready()
+        self.num_pages = self._shrink_target
+        self._shrink_target = 1 << 62
+        return self.num_pages
+
+    @property
+    def effective_pages(self) -> int:
+        """Pool size after any pending shrink lands (including sink)."""
+        return min(self.num_pages, self._shrink_target)
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable pages after any pending shrink lands (minus sink)."""
+        return self.effective_pages - 1
 
 
 # ---------------------------------------------------------------------------
@@ -238,6 +305,67 @@ def write_prefill(cfg: ModelConfig, paged: Any, pre: Any, block_row,
                 for k in node}
 
     return walk(paged, pre, False)
+
+
+# ---------------------------------------------------------------------------
+# live resize (the autoscaler's actuation path)
+# ---------------------------------------------------------------------------
+
+def _resize_axis(leaf: jnp.ndarray, axis: int, new: int) -> jnp.ndarray:
+    """Grow (zero-pad) or shrink (slice) one leaf along ``axis``."""
+    cur = leaf.shape[axis]
+    if new == cur:
+        return leaf
+    if new > cur:
+        pad_shape = leaf.shape[:axis] + (new - cur,) + leaf.shape[axis + 1:]
+        return jnp.concatenate([leaf, jnp.zeros(pad_shape, leaf.dtype)],
+                               axis=axis)
+    idx = [slice(None)] * leaf.ndim
+    idx[axis] = slice(0, new)
+    return leaf[tuple(idx)]
+
+
+def resize_cache_pages(cache: Any, new_num_pages: int) -> Any:
+    """Resize every page pool to ``new_num_pages``.
+
+    Growth appends zero pages — existing page ids (and everything any block
+    table references) are untouched, so decoded tokens are unaffected.
+    Shrink slices the tail; the caller (scheduler) guarantees every page
+    with id >= ``new_num_pages`` is free and out of every live block table
+    before calling. SSM slot leaves are untouched. Runs eagerly (outside
+    jit) — resizes are rare, bucketed events.
+    """
+    def walk(node: Any, stacked: bool) -> Any:
+        if "k_pages" in node:
+            axis = 1 if stacked else 0
+            return {k: (_resize_axis(v, axis, new_num_pages)
+                        if k in PAGE_LEAVES else v) for k, v in node.items()}
+        if "h" in node and "conv" in node:
+            return node
+        return {k: walk(node[k], stacked or k == "stack") for k in node}
+
+    return walk(cache, False)
+
+
+def resize_cache_slots(cache: Any, new_slots: int) -> Any:
+    """Resize the dense per-slot SSM state rows to ``new_slots``.
+
+    New slots get zero state — identical to a fresh ``init_paged_cache``
+    slot, so a request later admitted there prefills exactly as it would
+    have at construction time. Shrink slices the tail; the caller drains
+    those slots first. Attention page pools are untouched (they have no
+    slot axis).
+    """
+    def walk(node: Any, stacked: bool) -> Any:
+        if "k_pages" in node:
+            return node
+        if "h" in node and "conv" in node:
+            axis = 1 if stacked else 0
+            return {k: _resize_axis(v, axis, new_slots)
+                    for k, v in node.items()}
+        return {k: walk(node[k], stacked or k == "stack") for k in node}
+
+    return walk(cache, False)
 
 
 # ---------------------------------------------------------------------------

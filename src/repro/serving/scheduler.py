@@ -120,8 +120,15 @@ class ContinuousBatchingScheduler:
         self._admit_done: List[Request] = []
         self.step_idx = 0
         self.reserved_pages = 0
+        # live resize (repro.autoscale): slots above target_slots are
+        # draining — no new admissions; the arrays shrink once they empty
+        self.target_slots = max_slots
+        # a controller may promise future pool growth up to this many pages
+        # so submit() validates against the band ceiling, not today's pool
+        self.capacity_hint: Optional[int] = None
         self.stats: Dict[str, int] = {"decode_steps": 0, "tokens_out": 0,
-                                      "prefills": 0, "peak_pages": 0}
+                                      "prefills": 0, "peak_pages": 0,
+                                      "admit_blocked": 0, "resizes": 0}
 
         # donate the cache: pools are sized to fill HBM, so the step must
         # update them in place rather than double-buffer (cf. trainer.py)
@@ -201,10 +208,13 @@ class ContinuousBatchingScheduler:
             raise ValueError(f"request needs {total} positions > "
                              f"max_seq_len {self.max_seq_len}")
         worst = PC.pages_for_len(total, self.page_size)
-        if worst > self.alloc.num_pages - 1:
+        cap = self.alloc.capacity
+        if self.capacity_hint is not None:
+            cap = max(cap, self.capacity_hint - 1)
+        if worst > cap:
             raise ValueError(
                 f"request reserves {worst} pages but the pool only holds "
-                f"{self.alloc.num_pages - 1} — it could never be admitted")
+                f"{cap} — it could never be admitted")
         req = Request(rid=self._rid, prompt=prompt,
                       max_new_tokens=max_new_tokens,
                       arrival_step=arrival_step)
@@ -214,23 +224,28 @@ class ContinuousBatchingScheduler:
 
     # ----------------------------------------------------------- admission --
     def _free_slots(self) -> List[int]:
-        return [i for i, r in enumerate(self.slot_req) if r is None]
+        # slots at or above target_slots are draining (pending shrink)
+        return [i for i, r in enumerate(self.slot_req[:self.target_slots])
+                if r is None]
 
     def _try_admit(self) -> None:
         while self.waiting and self.waiting[0].arrival_step <= self.step_idx:
             free = self._free_slots()   # re-list: _admit may finish a slot
             if not free:
+                self.stats["admit_blocked"] += 1
                 break
             req = self.waiting[0]
             need = PC.pages_for_len(req.plen + req.max_new_tokens,
                                     self.page_size)
             if self.alloc.num_free - (self.reserved_pages
-                                      - self._pages_in_use()) < need:
+                                      - self.pages_in_use) < need:
+                self.stats["admit_blocked"] += 1
                 break                       # reservation would overcommit
             self.waiting.popleft()
             self._admit(req, free[0], need)
 
-    def _pages_in_use(self) -> int:
+    @property
+    def pages_in_use(self) -> int:
         return sum(len(p) for p in self.slot_pages)
 
     def _bucket(self, plen: int) -> int:
@@ -306,6 +321,69 @@ class ContinuousBatchingScheduler:
             k = min(k, min(future))
         return max(1, min(k, max_fuse))
 
+    # -------------------------------------------------------------- resize --
+    def resize(self, *, max_slots: Optional[int] = None,
+               num_pages: Optional[int] = None) -> None:
+        """Live capacity change (the autoscaler's actuation point).
+
+        Growth is immediate: slot-state rows / page pools are zero-padded,
+        which leaves every live sequence's pages and tokens untouched.
+        Shrink is drain-before-shrink: slots >= the new target stop
+        admitting and the arrays slice down once those slots empty; pages
+        >= the new pool size are retired from the free list now and the
+        pools slice once their last owner finishes. A page shrink is
+        clamped so the pool always covers every outstanding admission
+        reservation — an admitted request can never hit a mid-flight OOM,
+        resize or not. Each distinct (slots, pages) shape costs one jit
+        re-trace, so callers should bucket targets (see
+        ``repro.autoscale.controller``).
+        """
+        if max_slots is not None:
+            if max_slots < 1:
+                raise ValueError("max_slots must be >= 1")
+            if max_slots > self.max_slots:
+                self._grow_slots(max_slots)
+            self.target_slots = max_slots
+        if num_pages is not None:
+            # reservation-aware floor (+1 for the sink page)
+            num_pages = max(num_pages, self.reserved_pages + 1, 2)
+            if num_pages > self.alloc.num_pages:
+                self.cache = PC.resize_cache_pages(self.cache, num_pages)
+                self.alloc.grow(num_pages)
+            else:
+                self.alloc.request_shrink(num_pages)
+        self.stats["resizes"] += 1
+        self._settle_resize()
+
+    def _grow_slots(self, new: int) -> None:
+        pad = new - self.max_slots
+        self.block_table = np.vstack(
+            [self.block_table,
+             np.full((pad, self.n_pg), PC.SINK_PAGE, np.int32)])
+        self.seq_lens = np.concatenate(
+            [self.seq_lens, np.zeros((pad,), np.int32)])
+        self.last_tokens = np.vstack(
+            [self.last_tokens, np.zeros((pad, 1), np.int32)])
+        self.slot_req.extend([None] * pad)
+        self.slot_pages.extend([] for _ in range(pad))
+        self.cache = PC.resize_cache_slots(self.cache, new)
+        self.max_slots = new
+
+    def _settle_resize(self) -> None:
+        """Complete any drained shrink (called between decode ticks)."""
+        n = self.target_slots
+        if n < self.max_slots and all(r is None for r in self.slot_req[n:]):
+            self.block_table = self.block_table[:n]
+            self.seq_lens = self.seq_lens[:n]
+            self.last_tokens = self.last_tokens[:n]
+            del self.slot_req[n:]
+            del self.slot_pages[n:]
+            self.cache = PC.resize_cache_slots(self.cache, n)
+            self.max_slots = n
+        if self.alloc.shrink_ready():
+            self.cache = PC.resize_cache_pages(self.cache,
+                                               self.alloc.complete_shrink())
+
     # ---------------------------------------------------------------- step --
     @property
     def num_active(self) -> int:
@@ -314,6 +392,13 @@ class ContinuousBatchingScheduler:
     @property
     def pending(self) -> int:
         return len(self.waiting)
+
+    @property
+    def pending_due(self) -> int:
+        """Waiting requests whose arrival time has passed — the real queue
+        depth (benchmarks submit whole traces upfront with future
+        ``arrival_step``s; those must not read as present load)."""
+        return sum(r.arrival_step <= self.step_idx for r in self.waiting)
 
     def step(self, max_fuse: int = 16) -> List[Request]:
         """Admit what fits, run up to ``max_fuse`` fused decode ticks, evict
@@ -325,21 +410,25 @@ class ContinuousBatchingScheduler:
         is identical to single-stepping. Returns the requests that finished.
         A tick with no active slots (arrival gap) only advances the clock.
         """
+        self._settle_resize()
         self._try_admit()
         done_now: List[Request] = self._admit_done
         self._admit_done = []
         if not self.num_active:
             arrivals = [r.arrival_step for r in self.waiting]
             if arrivals and min(arrivals) > self.step_idx:
-                self.step_idx = min(arrivals)   # idle gap: skip to the next
-            else:                               # arrival, don't spin ticks
+                # idle gap: skip toward the next arrival instead of spinning
+                # ticks — capped at max_fuse so a control loop driving this
+                # scheduler still samples (and can scale in) inside the gap
+                self.step_idx = min(min(arrivals), self.step_idx + max_fuse)
+            else:
                 self.step_idx += 1
             return done_now
         k = self._fuse_k(max_fuse)
         k = 1 << (k.bit_length() - 1)       # pow2 buckets bound compiles
         self._grow_pages(k)
         self.stats["peak_pages"] = max(self.stats["peak_pages"],
-                                       self._pages_in_use())
+                                       self.pages_in_use)
         outs, self.cache = self._decode_fn(
             self.params, self.cache, jnp.asarray(self.last_tokens),
             jnp.asarray(self.seq_lens), jnp.asarray(self.block_table), k=k)

@@ -187,8 +187,8 @@ def check_gpipe_matches_sequential():
     for i in range(L):
         ref = body(jax.tree.map(lambda a: a[i], params), ref)
 
-    mesh = jax.make_mesh((4,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import _axis_kwargs
+    mesh = jax.make_mesh((4,), ("stage",), **_axis_kwargs(1))
     ps = jax.tree.map(
         lambda a: jax.device_put(a, NamedSharding(mesh, P("stage"))), params)
     with mesh:

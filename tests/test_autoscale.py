@@ -1,0 +1,303 @@
+"""Elastic autoscaling control plane: live resize token-identity, allocator
+grow/shrink invariants, policy hysteresis, cluster wiring (extend/shrink,
+spot preemption -> warm-spare replacement), event-log replay, and the
+cost-vs-latency acceptance criterion on the bursty trace."""
+import dataclasses
+import pathlib
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.autoscale import (AutoscaleController, CapacityBands,
+                             StepScalingPolicy, TargetTrackingPolicy)
+from repro.autoscale.controller import pow2_bucket
+from repro.configs.registry import REDUCED
+from repro.core.cluster import ClusterManager
+from repro.core.events import EventLog
+from repro.core.heartbeat import HeartbeatMonitor
+from repro.models import model as M
+from repro.serving import paged_cache as PC
+from repro.serving.scheduler import ContinuousBatchingScheduler
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "benchmarks"))
+import autoscale_bench as AB                                    # noqa: E402
+
+CFG = dataclasses.replace(REDUCED["qwen3-32b"], dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init(CFG, jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------------------- allocator --
+
+def test_allocator_grow_shrink():
+    a = PC.PageAllocator(6)                  # pages 1..5
+    low = a.alloc(5, owner="r")
+    a.grow(10)                               # adds 6..9
+    assert a.num_free == 4 and a.num_pages == 10
+    high = a.alloc(4, owner="s")
+    assert set(low + high) == set(range(1, 10))
+    a.free(low)
+    a.request_shrink(6)                      # s still owns pages 6..9
+    assert not a.shrink_ready()              # drain-before-shrink
+    assert a.capacity == 5 and a.num_free == 5
+    a.free(high)                             # freed high pages are retired,
+    assert a.num_free == 5                   # not returned to the free list
+    assert a.shrink_ready()
+    assert a.complete_shrink() == 6
+    assert a.num_free == 5 and a.num_pages == 6
+
+
+def test_allocator_shrink_relax_and_cancel():
+    a = PC.PageAllocator(10)
+    a.request_shrink(4)
+    assert a.capacity == 3
+    a.request_shrink(8)                      # relax: 4..7 un-retired
+    assert a.capacity == 7 and a.num_free == 7
+    a.grow(12)                               # cancel: everything back + new
+    assert a.num_free == 11 and not a.shrink_pending
+
+
+def test_allocator_relax_to_full_then_grow_no_phantom_shrink():
+    """Regression: relaxing a shrink back to the exact pool size must clear
+    the target; a stale target used to turn the next grow into a phantom
+    pending shrink whose completion sliced the grown pool out from under
+    the free list (double allocation of the same page id)."""
+    a = PC.PageAllocator(21)
+    a.request_shrink(11)
+    a.request_shrink(21)                     # full relax == cancellation
+    assert not a.shrink_pending
+    p = a.alloc(1, owner="x")[0]
+    a.free([p])                              # no limbo drop with no shrink
+    assert a.num_free == 20
+    a.grow(41)
+    assert not a.shrink_ready()              # no phantom shrink to complete
+    got = a.alloc(40, owner="y")
+    assert len(set(got)) == 40               # every page id handed out once
+
+
+def test_scheduler_page_shrink_is_reservation_aware(params):
+    """Shrinking below outstanding reservations clamps instead of letting a
+    mid-flight _grow_pages OOM."""
+    rng = np.random.RandomState(0)
+    s = ContinuousBatchingScheduler(CFG, params, max_slots=2, page_size=8,
+                                    num_pages=9, max_seq_len=32)
+    r1 = s.submit(rng.randint(0, CFG.vocab_size, size=8), 16)   # 3 pages
+    r2 = s.submit(rng.randint(0, CFG.vocab_size, size=8), 16)   # 3 pages
+    s.step()
+    assert s.reserved_pages == 6
+    s.resize(num_pages=2)                    # floor: reserved + sink = 7
+    assert s.alloc.capacity >= s.reserved_pages
+    s.run()                                  # must complete without OOM
+    assert r1.done and r2.done
+    s._settle_resize()
+    assert s.alloc.num_pages == 7
+
+
+# ---------------------------------------------------------------- policy --
+
+def test_target_tracking_deadband_and_cooldown():
+    p = TargetTrackingPolicy(metric="m", target=0.8, tolerance=0.1,
+                             min_cap=1, max_cap=16, cooldown_in=30.0)
+    assert p.evaluate(0.0, 0.8, 4) is None            # on target
+    assert p.evaluate(0.0, 0.85, 4) is None           # inside deadband
+    d = p.evaluate(1.0, 1.6, 4)                       # 2x over target
+    assert d.desired == 8 and d.delta == 4 and d.direction == "out"
+    d = p.evaluate(2.0, 0.1, 8)
+    assert d.desired == 1 and d.direction == "in"
+    assert p.evaluate(10.0, 0.1, 8) is None           # scale-in cooldown
+    assert p.evaluate(33.0, 0.1, 8) is not None       # cooldown expired
+    d = p.evaluate(40.0, 100.0, 8)
+    assert d.desired == 16                            # clamped to max_cap
+
+
+def test_step_scaling_ladder():
+    p = StepScalingPolicy(metric="queue", steps_out=[(1, 1), (4, 2), (16, 8)],
+                          scale_in_below=0.0, min_cap=1, max_cap=12)
+    assert p.evaluate(0.0, 0.0, 4).desired == 3       # scale-in step
+    assert p.evaluate(1.0, 5.0, 4).desired == 6       # middle rung
+    assert p.evaluate(2.0, 20.0, 4).desired == 12     # top rung, clamped
+    assert p.evaluate(3.0, 0.5, 4) is None            # between rungs
+
+
+def test_pow2_bucket():
+    assert [pow2_bucket(n) for n in (1, 2, 3, 4, 5, 9)] == [1, 2, 4, 4, 8, 16]
+
+
+# ------------------------------------------- live resize: token identity --
+
+def test_live_resize_token_identity(params):
+    """Acceptance: a slot + page-pool resize mid-run produces token-identical
+    fp32 output vs a fixed-capacity run of the same request trace."""
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, CFG.vocab_size, size=n).astype(np.int32)
+               for n in (5, 9, 7, 11)]
+    gens = [6, 8, 5, 7]
+
+    fixed = ContinuousBatchingScheduler(CFG, params, max_slots=2,
+                                        page_size=8, max_seq_len=64)
+    ref = [fixed.submit(p, g, arrival_step=i)
+           for i, (p, g) in enumerate(zip(prompts, gens))]
+    fixed.run()
+
+    s = ContinuousBatchingScheduler(CFG, params, max_slots=1, page_size=8,
+                                    num_pages=9, max_seq_len=64)
+    s.capacity_hint = 20
+    reqs = [s.submit(p, g, arrival_step=i)
+            for i, (p, g) in enumerate(zip(prompts, gens))]
+    s.step(); s.step()
+    s.resize(max_slots=2, num_pages=17)      # grow mid-flight
+    for _ in range(6):
+        s.step()
+    s.resize(max_slots=1, num_pages=9)       # drain-shrink mid-flight
+    s.run()
+    assert [r.out_tokens for r in reqs] == [r.out_tokens for r in ref]
+    assert s.alloc.num_allocated == 0 and s.reserved_pages == 0
+    s._settle_resize()
+    assert s.max_slots == 1 and s.alloc.num_pages == 9
+    assert s.stats["resizes"] == 2
+
+
+def test_live_resize_token_identity_hybrid():
+    """Same property through the SSM dense-slot resize path (jamba)."""
+    cfg = dataclasses.replace(REDUCED["jamba-v0.1-52b"], dtype="float32")
+    p = M.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(1)
+    prompts = [rng.randint(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (4, 6, 5)]
+    gens = [5, 4, 6]
+    fixed = ContinuousBatchingScheduler(cfg, p, max_slots=2, page_size=8,
+                                        max_seq_len=32)
+    ref = [fixed.submit(pr, g) for pr, g in zip(prompts, gens)]
+    fixed.run()
+    s = ContinuousBatchingScheduler(cfg, p, max_slots=1, page_size=8,
+                                    max_seq_len=32)
+    reqs = [s.submit(pr, g) for pr, g in zip(prompts, gens)]
+    s.step()
+    s.resize(max_slots=2)
+    s.run()
+    assert [r.out_tokens for r in reqs] == [r.out_tokens for r in ref]
+
+
+# ------------------------------------------------------------ controller --
+
+def test_controller_scales_out_and_in(params):
+    sched = ContinuousBatchingScheduler(CFG, params, max_slots=1,
+                                        page_size=8, max_seq_len=48)
+    bands = CapacityBands(min_slots=1, max_slots=8, min_pages=7,
+                          max_pages=49)
+    ctl = AutoscaleController(sched, bands, eval_interval=4)
+    rng = np.random.RandomState(2)
+    for _ in range(12):                      # burst at t=0
+        sched.submit(rng.randint(0, CFG.vocab_size, size=6), 8,
+                     arrival_step=0)
+    for i in range(3):                       # trickle after a valley
+        sched.submit(rng.randint(0, CFG.vocab_size, size=6), 6,
+                     arrival_step=120 + 10 * i)
+    done = ctl.run()
+    assert len(done) == 15
+    slots = [s for _, _, s, _ in ctl.capacity_log]
+    assert max(slots) == 8                   # burst drove it to the band max
+    assert sched.target_slots <= 2           # valley + tail scaled back in
+    assert ctl.summary()["scale_in"] >= 1
+    # pages followed slots and every decision landed in the event log
+    assert any(p > 7 for _, _, _, p in ctl.capacity_log)
+    assert len(ctl.log.actions("autoscale")) >= ctl.summary()["decisions"]
+
+
+def test_controller_cluster_wiring_and_preemption(params):
+    """Node scale-out goes through ClusterLifecycle.extend, drained nodes are
+    shrunk away, and a spot preemption is replaced from the warm-spare pool
+    without losing the serving run."""
+    mgr = ClusterManager()
+    ic = mgr.build_cluster(n_slaves=1, spot=True)
+    ic.lifecycle.provision_spares(ic.cluster, 1)
+    monitor = HeartbeatMonitor()
+    for node in ic.cluster.directory.slaves():
+        monitor.register(node.hostname, now=mgr.cloud.clock)
+
+    sched = ContinuousBatchingScheduler(CFG, params, max_slots=2,
+                                        page_size=8, max_seq_len=48)
+    bands = CapacityBands(min_slots=2, max_slots=8, min_pages=13,
+                          max_pages=49)
+    ctl = AutoscaleController(sched, bands, eval_interval=2,
+                              slots_per_node=2, lifecycle=ic.lifecycle,
+                              cluster=ic.cluster, monitor=monitor)
+    rng = np.random.RandomState(3)
+    for _ in range(10):
+        sched.submit(rng.randint(0, CFG.vocab_size, size=6), 10,
+                     arrival_step=0)
+    # drive manually so we can preempt mid-run, after scale-out
+    preempted = False
+    for _ in range(200):
+        if not (sched.waiting or sched.num_active):
+            break
+        ctl.tick()
+        sched.step(max_fuse=2)
+        if not preempted and len(ic.cluster.slaves) > 1:
+            victim = ic.cluster.slaves[-1].instance_id
+            mgr.cloud.preempt_spot(victim)
+            preempted = True
+    ctl.tick()
+    assert preempted, "controller never extended the cluster"
+    assert not sched.waiting and sched.num_active == 0
+    ic.log.assert_order("extend_cluster", "preempt_replaced")
+    # the preempted host was replaced, keeping its logical hostname
+    hostnames = [n.hostname for n in ic.cluster.directory.slaves()]
+    assert len(hostnames) == len(set(hostnames))
+    # scale-in after the run released the extra nodes
+    assert ctl.nodes_ready <= 2
+
+
+def test_event_log_roundtrip_with_scale_events(tmp_path, params):
+    sched = ContinuousBatchingScheduler(CFG, params, max_slots=1,
+                                        page_size=8, max_seq_len=32)
+    bands = CapacityBands(min_slots=1, max_slots=4, min_pages=5,
+                          max_pages=17)
+    ctl = AutoscaleController(sched, bands, eval_interval=2)
+    rng = np.random.RandomState(4)
+    for _ in range(6):
+        sched.submit(rng.randint(0, CFG.vocab_size, size=5), 6,
+                     arrival_step=0)
+    ctl.run()
+    path = tmp_path / "events.jsonl"
+    n = ctl.log.write_jsonl(path)
+    assert n == len(ctl.log.events) > 0
+    replay = EventLog.from_jsonl(path)
+    assert [e.to_dict() for e in replay.events] == \
+        [e.to_dict() for e in ctl.log.events]
+    replay.assert_order("scale_out")
+
+
+# ------------------------------------------------- blueprint + benchmark --
+
+def test_serving_page_plan_capacity_bands():
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import ARCHS
+    from repro.core.blueprint import serving_page_plan
+    plan = serving_page_plan(ARCHS["qwen3-32b"], SHAPES["decode_32k"],
+                             {"model": 8, "data": 4})
+    assert plan["min_slots"] >= 1
+    assert plan["max_slots"] == plan["max_concurrent_seqs"]
+    assert plan["min_pages"] <= plan["max_pages"] == plan["num_pages"]
+    bands = CapacityBands.from_plan(plan)
+    assert bands.max_slots >= bands.min_slots
+
+
+def test_autoscale_bench_cost_criterion(params):
+    """Acceptance: on the bursty trace, autoscaling is >= 1.3x cheaper in
+    instance-seconds than static peak provisioning at equal-or-better p99
+    latency. Deterministic: everything runs on the simulated tick clock."""
+    rng = np.random.RandomState(0)
+    trace = AB.bursty_trace(rng, CFG.vocab_size, requests=32, horizon=160,
+                            n_bursts=2, burst_frac=0.5, p_lo=4, p_hi=12,
+                            g_lo=4, g_hi=12)
+    out = AB.compare(CFG, params, trace, page_size=8, max_seq=32,
+                     slots_per_node=2, boot_ticks=0, eval_interval=1)
+    assert out["cost_ratio"] >= 1.3, out
+    assert out["p99_ratio"] <= 1.0, out
+    assert out["autoscale"]["peak_slots"] <= out["peak_slots"]

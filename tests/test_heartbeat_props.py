@@ -1,0 +1,128 @@
+"""HeartbeatMonitor state-transition properties (hypothesis).
+
+The monitor classifies hosts from heartbeat silence and step-time EWMAs;
+these properties pin the transition system the autoscale control plane
+relies on: silence thresholds are honoured exactly, DEAD is absorbing,
+a beat recovers SUSPECT/STRAGGLER, the straggler callback has hysteresis
+(fires on the transition, not per check), and callbacks fire exactly once
+per death.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.heartbeat import HeartbeatMonitor, HostState
+
+# beat offsets as integer deciseconds to avoid float-equality edge cases
+# exactly on a threshold boundary
+beat_times = st.lists(st.integers(min_value=0, max_value=1200),
+                      min_size=0, max_size=20, unique=True)
+
+
+def make(interval=10.0, **kw):
+    return HeartbeatMonitor(interval=interval, suspect_after=2.5,
+                            dead_after=6.0, **kw)
+
+
+@given(beats=beat_times, check_at=st.integers(min_value=0, max_value=1500))
+@settings(max_examples=200, deadline=None)
+def test_silence_classification_matches_thresholds(beats, check_at):
+    """After any beat pattern, a single check classifies purely from the
+    silence since the last beat (no step times involved)."""
+    mon = make()
+    mon.register("h", now=0.0)
+    for t in sorted(beats):
+        mon.beat("h", float(t))
+    state = mon.check(float(check_at))["h"]
+    last = max([0.0] + [float(t) for t in beats])
+    silence = check_at - last
+    if silence > 6.0 * 10.0:
+        assert state == HostState.DEAD
+    elif silence > 2.5 * 10.0:
+        assert state == HostState.SUSPECT
+    else:
+        assert state == HostState.ALIVE
+
+
+@given(beats=beat_times)
+@settings(max_examples=100, deadline=None)
+def test_dead_is_absorbing_and_callback_fires_once(beats):
+    """Once DEAD, later beats and checks never resurrect the host, and the
+    on_dead callback fired exactly once."""
+    mon = make()
+    deaths = []
+    mon.on_dead(deaths.append)
+    mon.register("h", now=0.0)
+    mon.check(100.0)                        # silence 100 > 60 -> DEAD
+    assert mon.hosts["h"].state == HostState.DEAD
+    for t in sorted(beats):
+        mon.beat("h", 100.0 + t)
+        assert mon.hosts["h"].state == HostState.DEAD
+    mon.check(100.0 + 1300.0)
+    assert deaths == ["h"]
+    assert "h" not in mon.alive()
+
+
+@given(silence=st.floats(min_value=25.1, max_value=60.0,
+                         exclude_max=True, allow_nan=False))
+@settings(max_examples=50, deadline=None)
+def test_beat_recovers_suspect(silence):
+    mon = make()
+    mon.register("h", now=0.0)
+    state = mon.check(silence)["h"]
+    assert state == HostState.SUSPECT
+    mon.beat("h", silence)
+    assert mon.hosts["h"].state == HostState.ALIVE
+    assert mon.check(silence + 1.0)["h"] == HostState.ALIVE
+
+
+@given(factor=st.floats(min_value=2.0, max_value=10.0, allow_nan=False),
+       n_checks=st.integers(min_value=1, max_value=6))
+@settings(max_examples=50, deadline=None)
+def test_straggler_hysteresis_fires_on_transition_only(factor, n_checks):
+    """A host ``factor``x slower than the median is STRAGGLER, the callback
+    fires once per episode however many checks run, and a recovery beat +
+    fast step re-arms it."""
+    mon = make(straggler_factor=1.8)
+    flagged = []
+    mon.on_straggler(flagged.append)
+    for i in range(4):
+        mon.register(f"h{i}", now=0.0)
+    for step in range(1, 4):
+        t = step * 5.0
+        for i in range(4):
+            mon.beat(f"h{i}", t, step_time=1.0 if i < 3 else factor)
+    for k in range(n_checks):
+        states = mon.check(16.0 + k)
+        assert states["h3"] == HostState.STRAGGLER
+        assert states["h0"] == HostState.ALIVE
+    assert flagged == ["h3"]                # hysteresis: one episode, one call
+    # recovery: fast beats pull the EWMA back under the straggler bound
+    for step in range(12):
+        mon.beat("h3", 20.0 + step, step_time=1.0)
+    assert mon.hosts["h3"].state == HostState.ALIVE   # beat() recovers it
+    states = mon.check(21.0 + 12)
+    assert states["h3"] == HostState.ALIVE
+    # a fresh slow spell is a new episode: callback fires again
+    for step in range(1, 10):
+        t = 40.0 + step
+        for i in range(4):
+            mon.beat(f"h{i}", t, step_time=1.0 if i < 3 else 10.0 * factor)
+    mon.check(50.0)
+    assert flagged == ["h3", "h3"]
+
+
+@given(beats=beat_times)
+@settings(max_examples=50, deadline=None)
+def test_alive_listing_consistent_with_states(beats):
+    """``alive()`` is exactly the ALIVE + STRAGGLER hosts."""
+    mon = make()
+    mon.register("a", now=0.0)
+    mon.register("b", now=0.0)
+    for t in sorted(beats):
+        mon.beat("a", float(t))
+    states = mon.check(70.0)
+    want = {h for h, s in states.items()
+            if s in (HostState.ALIVE, HostState.STRAGGLER)}
+    assert set(mon.alive()) == want
