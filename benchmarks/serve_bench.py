@@ -21,23 +21,31 @@ way the scheduler's step is. Reported ``useful_tok_per_s`` counts only
 requested generation tokens. The memory line compares the static engine's
 capacity-padded ring buffers against the pages the scheduler actually
 touched (its peak page occupancy).
+
+``--replicas 1,2,4`` switches to **fleet mode**: the same trace is served
+through the replicated fabric (``repro.serving.router``) at each fleet
+width, the per-replica slot/page budget divided so k replicas of
+``batch/k`` slots hold the same total capacity, and the report carries
+fleet throughput, p50/p99 latency in fleet ticks, and the router's
+steady-state reserved-page imbalance. ``--smoke --replicas 2`` is the CI
+fleet smoke step.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import functools
 import json
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import REDUCED
 from repro.models import model as M
 from repro.serving import engine as E
 from repro.serving import paged_cache as PC
+from repro.serving.request import make_request
+from repro.serving.router import ServingRouter
 from repro.serving.scheduler import ContinuousBatchingScheduler
 
 
@@ -71,36 +79,15 @@ def make_workload(cfg, rng, n, p_lo, p_hi, g_lo, g_hi, long_frac):
 
 # ---------------------------------------------------------------- static --
 
-@functools.partial(jax.jit, static_argnames=("cfg", "capacity"))
-def _static_prefill(cfg, params, batch, capacity):
-    return E.prefill(cfg, params, batch, capacity)
-
-
-@functools.partial(jax.jit, static_argnames=("cfg", "n_steps"))
-def _static_decode(cfg, params, cache, first, cur, n_steps):
-    return E.greedy_decode(cfg, params, cache, first, cur, n_steps)
-
-
 def run_static(cfg, params, workload, batch_width):
-    """Fixed batches in arrival order; group-max padding and decode length."""
-    useful = 0
-    for i in range(0, len(workload), batch_width):
-        group = workload[i:i + batch_width]
-        B = len(group)
-        plen = max(p.shape[0] for p, _ in group)
-        gen = max(g for _, g in group)
-        toks = np.zeros((B, plen), np.int32)
-        for j, (p, _) in enumerate(group):
-            toks[j, :p.shape[0]] = p       # static batch pads every prompt
-        lg, cache, cur = _static_prefill(cfg, params,
-                                         {"tokens": jnp.asarray(toks)},
-                                         plen + gen + 1)
-        first = jnp.argmax(lg[:, -1, :cfg.vocab_size], -1).astype(
-            jnp.int32)[:, None]
-        out, _, _ = _static_decode(cfg, params, cache, first, cur, gen - 1)
-        out.block_until_ready()
-        useful += sum(g for _, g in group)
-    return useful
+    """Fixed batches in arrival order; group-max padding and decode length.
+
+    Uses the shared Request lifecycle (``engine.serve_requests``), so the
+    static baseline fills the same bookkeeping the paged scheduler does.
+    """
+    reqs = [make_request(i, p, g) for i, (p, g) in enumerate(workload)]
+    E.serve_requests(cfg, params, reqs, batch_width)
+    return sum(g for _, g in workload)
 
 
 # ----------------------------------------------------------------- paged --
@@ -113,6 +100,55 @@ def run_paged(sched, workload, arrivals_per_step):
     before = dict(sched.stats)
     sched.run()
     return {k: sched.stats[k] - before[k] for k in before}
+
+
+# ----------------------------------------------------------------- fleet --
+
+def run_fleet(router, workload, arrivals_per_step):
+    """One pass of the trace through the fabric; returns (stats delta over
+    the pass, this pass's finished requests for latency percentiles)."""
+    base = router.step_idx
+    reqs = []
+    for i, (prompt, gen) in enumerate(workload):
+        arrival = base + (i // arrivals_per_step if arrivals_per_step else 0)
+        reqs.append(router.submit(prompt, gen, arrival_step=arrival))
+    before = router.fleet_stats()
+    router.run()
+    after = router.fleet_stats()
+    delta = {k: after[k] - before[k]
+             for k in ("tokens_out", "decode_steps", "prefills", "routed",
+                       "spillovers")}
+    return delta, reqs
+
+
+def bench_fleet(cfg, params, workload, k, args):
+    """Fleet at width k: batch budget split as k replicas of batch/k slots
+    (matching serving_page_plan's per-replica split semantics)."""
+    slots = max(args.batch // k, 1)
+    max_seq = args.prompt_hi + args.gen_hi + 1
+    router = ServingRouter(cfg, params, replicas=k, max_slots=slots,
+                           page_size=args.page_size, max_seq_len=max_seq)
+    run_fleet(router, workload, args.arrivals_per_step)        # warm
+    t_best, delta, reqs = None, None, None
+    for _ in range(args.repeats):
+        t0 = time.time()
+        delta, reqs = run_fleet(router, workload, args.arrivals_per_step)
+        t = time.time() - t0
+        t_best = t if t_best is None else min(t_best, t)
+    lat = np.asarray([r.finish_step - r.arrival_step for r in reqs], float)
+    out = {
+        "replicas": k,
+        "slots_per_replica": slots,
+        "fleet_tok_per_s": round(delta["tokens_out"] / t_best, 1),
+        "wall_s": round(t_best, 2),
+        "p50_latency_ticks": float(np.percentile(lat, 50)),
+        "p99_latency_ticks": float(np.percentile(lat, 99)),
+        "spillovers": delta["spillovers"],
+    }
+    imb = router.imbalance()
+    if imb is not None:
+        out["reserved_page_imbalance"] = round(imb, 3)
+    return out
 
 
 def main() -> None:
@@ -138,7 +174,12 @@ def main() -> None:
                     help="requests becoming due per tick; 0 = all at once "
                     "(matching the static baseline, which batches the whole "
                     "workload upfront)")
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--replicas", default=None,
+                    help="fleet mode: comma-separated fleet widths (e.g. "
+                    "1,2,4) served through the fabric router instead of "
+                    "the static-vs-paged head-to-head")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="drives parameter init AND workload generation")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny fast run for CI: exercises both engines "
                     "end-to-end, ignores the speedup number")
@@ -148,12 +189,22 @@ def main() -> None:
         args.requests, args.repeats, args.wide, args.deep = 8, 1, 1, 1
 
     cfg = bench_cfg(args.arch, args.wide, args.deep)
-    params = M.init(cfg, jax.random.PRNGKey(0))
+    params = M.init(cfg, jax.random.PRNGKey(args.seed))
     rng = np.random.RandomState(args.seed)
     workload = make_workload(cfg, rng, args.requests, args.prompt_lo,
                              args.prompt_hi, args.gen_lo, args.gen_hi,
                              args.long_frac)
     max_seq = args.prompt_hi + args.gen_hi + 1
+
+    # ---- fleet mode: fabric at each requested width -----------------------
+    if args.replicas:
+        widths = [int(k) for k in str(args.replicas).split(",")]
+        out = {"arch": cfg.name, "requests": args.requests,
+               "batch_budget": args.batch, "mode": "fleet",
+               "fleet": [bench_fleet(cfg, params, workload, k, args)
+                         for k in widths]}
+        print(json.dumps(out, indent=2))
+        return
 
     # ---- static engine: warm, then time -----------------------------------
     run_static(cfg, params, workload, args.batch)

@@ -8,17 +8,23 @@ Closes the loop between the serving engine and the cluster control plane:
                    hysteresis/cooldown, emitting typed ``ScaleDecision``s;
 * ``controller`` — the actuator: live slot/page-pool resize on the paged
                    scheduler, node add/remove through ``ClusterLifecycle``,
-                   spot-preemption replacement from the warm-spare pool.
+                   spot-preemption replacement from the warm-spare pool;
+* ``fleet``      — the replica axis: a ``FleetController`` over the serving
+                   fabric router adds/removes whole replicas (drain-based
+                   scale-in, node acquisition per replica) on fleet-wide
+                   queue depth, composing with per-replica slot/page
+                   controllers.
 
 See docs/autoscaling.md for the control-loop walk-through.
 """
 from repro.autoscale.controller import AutoscaleController, CapacityBands
+from repro.autoscale.fleet import FleetController, default_fleet_policy
 from repro.autoscale.metrics import TelemetryBus, sample_scheduler
 from repro.autoscale.policy import (ScaleDecision, StepScalingPolicy,
                                     TargetTrackingPolicy)
 
 __all__ = [
-    "AutoscaleController", "CapacityBands", "TelemetryBus",
-    "sample_scheduler", "ScaleDecision", "StepScalingPolicy",
-    "TargetTrackingPolicy",
+    "AutoscaleController", "CapacityBands", "FleetController",
+    "TelemetryBus", "default_fleet_policy", "sample_scheduler",
+    "ScaleDecision", "StepScalingPolicy", "TargetTrackingPolicy",
 ]

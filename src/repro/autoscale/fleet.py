@@ -1,0 +1,284 @@
+"""Fleet autoscaling: the replica axis of the serving fabric.
+
+PR 2's ``AutoscaleController`` moves capacity *within* one scheduler —
+decode slots and page pool, plus the nodes backing them. This module adds
+the second actuation axis the replicated fabric opens up: whole replicas.
+The two compose: a ``FleetController`` optionally gives every replica its
+own engine-level controller (slot/page resize inside the replica's
+blueprint bands) while its fleet policy adds/removes fabric members on
+fleet-wide queue depth.
+
+Scale-out order is cheapest-first: un-drain a draining replica (instant —
+its scheduler never went away), else add a fresh replica, acquiring a node
+through ``ClusterLifecycle.extend`` when cluster-wired. Scale-in never
+kills: the victim (least outstanding work; newest on ties) is *drained* —
+routing stops, its admitted and queued streams finish — and only an empty
+drained replica is removed and its node released. Replica death is the
+involuntary path: a heartbeat DEAD host or a SimCloud spot preemption
+fails every replica on the host, the router re-prefills the lost streams
+on survivors (token-identical for dense/SSM archs), and the node is
+replaced from the warm-spare pool when one is available.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+from repro.autoscale.controller import AutoscaleController, CapacityBands
+from repro.autoscale.metrics import TelemetryBus
+from repro.autoscale.policy import ScaleDecision, StepScalingPolicy
+from repro.core.events import EventLog
+from repro.serving.replica import ServingReplica
+from repro.serving.router import ServingRouter
+
+
+def default_fleet_policy(min_replicas: int, max_replicas: int,
+                         slots_per_replica: int) -> StepScalingPolicy:
+    """Queue-depth ladder on fleet demand per live replica.
+
+    Scale out when a replica's worth of extra demand is outstanding
+    (demand = active + queued fleet-wide), again when three are; scale in
+    when the whole window stayed under half a replica's slot width.
+    Scale-in cooldown is the hysteresis: a drain takes ticks to empty, and
+    re-draining every eval would thrash the router's candidate set.
+    """
+    s = max(slots_per_replica, 1)
+    return StepScalingPolicy(
+        metric="demand_per_replica",
+        steps_out=[(1.25 * s, 1), (3.0 * s, 2)],
+        scale_in_below=0.5 * s, scale_in_step=1,
+        min_cap=min_replicas, max_cap=max_replicas,
+        cooldown_out=2.0, cooldown_in=12.0, resource="replicas")
+
+
+class FleetController:
+    """Replica-count control loop over a ``ServingRouter``.
+
+    ``replica_bands`` (a ``CapacityBands``) turns on within-replica
+    autoscaling: each fabric member gets its own engine-only
+    ``AutoscaleController`` so slots/pages track that replica's load while
+    this controller tracks the fleet's.
+    """
+
+    def __init__(self, router: ServingRouter, *, min_replicas: int = 1,
+                 max_replicas: int = 4, policy=None,
+                 eval_interval: int = 4, tick_seconds: float = 1.0,
+                 lifecycle=None, cluster=None, monitor=None,
+                 replica_bands: Optional[CapacityBands] = None,
+                 log: Optional[EventLog] = None):
+        self.router = router
+        self.min_replicas = min_replicas
+        self.max_replicas = max_replicas
+        self.policy = policy or default_fleet_policy(
+            min_replicas, max_replicas, router.replica_kw["max_slots"])
+        self.eval_interval = eval_interval
+        self.tick_seconds = tick_seconds
+        self.lifecycle = lifecycle
+        self.cluster = cluster
+        self.monitor = monitor
+        self.replica_bands = replica_bands
+        self.bus = TelemetryBus()
+        self.log = log if log is not None else (
+            cluster.log if cluster is not None else EventLog())
+        self.decisions: List[ScaleDecision] = []
+        self.replica_ticks = 0.0
+        self.capacity_log: List[tuple] = []    # (tick, live, draining)
+        self._next_eval = router.step_idx
+        self._inner: Dict[int, AutoscaleController] = {}
+        if replica_bands is not None:
+            for rep in router.replicas.values():
+                self._attach_inner(rep)
+        if monitor is not None:
+            monitor.on_dead(self._on_host_dead)
+        if lifecycle is not None and cluster is not None:
+            lifecycle.cloud.on_preempt(self._on_preempt)
+
+    # ------------------------------------------------------------- clock --
+    @property
+    def now(self) -> float:
+        return self.router.step_idx * self.tick_seconds
+
+    def _live(self) -> List[ServingReplica]:
+        return [r for r in self.router.replicas.values() if r.live]
+
+    def _draining(self) -> List[ServingReplica]:
+        return [r for r in self.router.replicas.values()
+                if r.draining and not r.failed]
+
+    # ---------------------------------------------------- inner controllers --
+    def _attach_inner(self, rep: ServingReplica) -> None:
+        if self.replica_bands is None:
+            return
+        self._inner[rep.replica_id] = AutoscaleController(
+            rep.sched, self.replica_bands,
+            eval_interval=self.eval_interval,
+            tick_seconds=self.tick_seconds, log=self.log)
+
+    # --------------------------------------------------------------- tick --
+    def tick(self) -> None:
+        """One fleet control pass; call before each ``router.step``."""
+        live = self._live()
+        self.replica_ticks += len(self.router.replicas) - sum(
+            r.failed for r in self.router.replicas.values())
+        self._finish_drains()
+        demand = self.router.pending_due + sum(
+            r.num_unfinished for r in live)
+        sample = {
+            "replicas": float(len(live)),
+            "fleet_demand": float(demand),
+            "demand_per_replica": demand / max(len(live), 1),
+            "fleet_queue": float(self.router.pending_due),
+        }
+        self.bus.record(self.now, sample)
+        if self.router.step_idx >= self._next_eval:
+            self._next_eval = self.router.step_idx + self.eval_interval
+            self._evaluate()
+        for rid, ctl in list(self._inner.items()):
+            if rid in self.router.replicas \
+                    and not self.router.replicas[rid].failed:
+                ctl.tick()
+
+    def _evaluate(self) -> None:
+        horizon = self.eval_interval * self.tick_seconds
+        d = self.policy.evaluate(
+            self.now, self.bus.max(self.policy.metric, horizon),
+            len(self._live()))
+        if d is None:
+            return
+        self.decisions.append(d)
+        self.log.emit(d.at, "autoscale", f"scale_{d.direction}",
+                      resource=d.resource, desired=d.desired, delta=d.delta,
+                      reason=d.reason)
+        if d.delta > 0:
+            self._scale_out(d.delta)
+        else:
+            self._scale_in(-d.delta)
+
+    # ------------------------------------------------------------ actuate --
+    def _scale_out(self, n: int) -> None:
+        for _ in range(n):
+            if len(self._live()) >= self.max_replicas:
+                return
+            draining = self._draining()
+            if draining:
+                # cheapest capacity: a drain not yet completed reverses
+                rep = max(draining, key=lambda r: r.replica_id)
+                self.router.undrain_replica(rep.replica_id)
+                self.log.emit(self.now, "autoscale", "undrain_replica",
+                              replica=rep.replica_id)
+                continue
+            hostname = self._acquire_node()
+            rep = self.router.add_replica(hostname=hostname)
+            self._attach_inner(rep)
+            self.log.emit(self.now, "autoscale", "add_replica",
+                          replica=rep.replica_id, hostname=hostname)
+
+    def _scale_in(self, n: int) -> None:
+        for _ in range(n):
+            live = self._live()
+            if len(live) <= self.min_replicas:
+                return
+            # least outstanding work drains fastest; newest id on ties
+            rep = min(live, key=lambda r: (r.outstanding_pages,
+                                           -r.replica_id))
+            self.router.drain_replica(rep.replica_id)
+            self.log.emit(self.now, "autoscale", "drain_replica",
+                          replica=rep.replica_id,
+                          outstanding=rep.num_unfinished)
+
+    def _finish_drains(self) -> None:
+        for rep in self._draining():
+            if rep.idle:
+                hostname = self.router.remove_replica(rep.replica_id)
+                self._inner.pop(rep.replica_id, None)
+                self.log.emit(self.now, "autoscale", "remove_replica",
+                              replica=rep.replica_id, hostname=hostname)
+                self._release_node(hostname)
+
+    # -------------------------------------------------------------- nodes --
+    def _acquire_node(self) -> Optional[str]:
+        if self.lifecycle is None or self.cluster is None:
+            return None
+        nodes = self.lifecycle.extend(self.cluster, 1)
+        if self.monitor is not None:
+            self.monitor.register(nodes[0].hostname,
+                                  now=self.lifecycle.cloud.clock)
+        return nodes[0].hostname
+
+    def _release_node(self, hostname: Optional[str]) -> None:
+        if hostname is None or self.lifecycle is None or self.cluster is None:
+            return
+        if hostname not in self.cluster.directory.nodes:
+            return                           # already gone (failed host)
+        # only release nodes no other replica still occupies
+        if any(r.hostname == hostname for r in self.router.replicas.values()):
+            return
+        self.lifecycle.shrink(self.cluster, [hostname])
+        if self.monitor is not None:
+            self.monitor.deregister(hostname)
+
+    # ----------------------------------------------------------- failures --
+    def _on_host_dead(self, hostname: str) -> None:
+        """Heartbeat DEAD (or preemption) on a replica host: fail + re-route
+        its streams, then replace the node from the warm-spare pool when
+        one exists (a fresh replica lands on the stable hostname)."""
+        had_replica = any(r.hostname == hostname
+                          for r in self.router.replicas.values())
+        rerouted = self.router.fail_host(hostname)
+        if not had_replica:
+            return
+        self.log.emit(self.now, "autoscale", "replica_failed",
+                      hostname=hostname, rerouted=len(rerouted))
+        if self.lifecycle is None or self.cluster is None:
+            return
+        if self.lifecycle.spares:
+            self.lifecycle.replace_failed(self.cluster, hostname)
+            rep = self.router.add_replica(hostname=hostname)
+            self._attach_inner(rep)
+            self.log.emit(self.now, "autoscale", "preempt_replaced",
+                          hostname=hostname, replica=rep.replica_id)
+        else:
+            if hostname in self.cluster.directory.nodes:
+                self.lifecycle.shrink(self.cluster, [hostname])
+            if self.monitor is not None:
+                self.monitor.deregister(hostname)
+            self.log.emit(self.now, "autoscale", "preempt_drained",
+                          hostname=hostname)
+
+    def _on_preempt(self, inst) -> None:
+        if self.cluster is None:
+            return
+        for node in self.cluster.directory.slaves():
+            if node.instance_id == inst.instance_id:
+                self._on_host_dead(node.hostname)
+                return
+
+    # ---------------------------------------------------------------- run --
+    def snapshot(self) -> None:
+        self.capacity_log.append(
+            (self.router.step_idx, len(self._live()),
+             len(self._draining())))
+
+    def run(self, max_steps: int = 100_000) -> list:
+        router = self.router
+        while router.num_unfinished and max_steps:
+            self.tick()
+            router.step(max_fuse=max(self.eval_interval, 1))
+            self.snapshot()
+            max_steps -= 1
+        if router.num_unfinished:
+            raise RuntimeError("fleet run exhausted max_steps")
+        self.tick()                   # settle drains + accounting
+        return router.finished
+
+    # ------------------------------------------------------------ summary --
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "replica_seconds": self.replica_ticks * self.tick_seconds,
+            "decisions": len(self.decisions),
+            "scale_out": sum(1 for d in self.decisions if d.delta > 0),
+            "scale_in": sum(1 for d in self.decisions if d.delta < 0),
+            "peak_replicas": max((n for _, n, _ in self.capacity_log),
+                                 default=len(self.router.replicas)),
+            "final_replicas": len(self._live()),
+            "reroutes": self.router.stats["reroutes"],
+        }

@@ -183,7 +183,8 @@ def optimized_cfg_overrides(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, A
 
 
 def serving_page_plan(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
-                      page_size: int = 16) -> Optional[Dict[str, Any]]:
+                      page_size: int = 16,
+                      replicas: int = 1) -> Optional[Dict[str, Any]]:
     """Size the paged-KV page pool for the continuous-batching scheduler.
 
     The Ambari-style suggested config for the "serve" service
@@ -193,12 +194,25 @@ def serving_page_plan(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
     occupancy inside it. Returns None for archs the paged engine does not
     cover (MLA / enc-dec — they keep the dense engine).
 
+    With ``replicas=k`` the plan additionally carries a coherent per-replica
+    split for the serving fabric (``repro.serving.router``): each replica
+    is an independent scheduler with its own page pool, so the fleet-wide
+    slot budget divides into k pools of ``slots_per_replica`` slots and
+    ``pages_per_replica`` pages (+ each pool's own sink page). The split is
+    floored at one full-length sequence per replica — a fabric member that
+    could never admit a max-length request would be routing dead weight —
+    so ``k * pages_per_replica`` may exceed ``num_pages`` when k is large
+    relative to the HBM fit; ``max_replicas`` is the largest k for which
+    the split stays inside the budget.
+
     All quantities are *global* (whole mesh); divide ``pool_bytes`` by the
     device count for the per-chip footprint. The suggestion, as everywhere
     in the planner, is a starting point the user may override.
     """
     if cfg.attn_impl == "mla" or cfg.is_encdec:
         return None
+    if replicas < 1:
+        raise ValueError("replicas must be >= 1")
     from repro.serving.paged_cache import page_bytes_per_token
     if page_bytes_per_token(cfg) == 0:
         return None                 # pure-SSM arch: O(1) state, no KV pages
@@ -217,6 +231,16 @@ def serving_page_plan(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
     # max band is the HBM fit above; the min band keeps one full-length
     # sequence admissible so the service never scales to zero.
     min_slots = 1 if max_seqs else 0
+    # ---- per-replica split (the fabric's reservation floor) ---------------
+    # each replica must admit >= 1 full-length stream: pages_per_seq pages
+    # of KV plus its pool's sink page
+    slots_per_replica = max(max_seqs // replicas, min_slots)
+    pages_per_replica = max(num_pages // replicas,
+                            slots_per_replica * pages_per_seq + 1
+                            if slots_per_replica else 0)
+    # largest k whose split stays inside the HBM budget: every replica
+    # pays its own sink page on top of one full-length seq's reservation
+    max_replicas = num_pages // (pages_per_seq + 1) if max_seqs else 0
     return {
         "page_size": page_size,
         "num_pages": num_pages,
@@ -229,6 +253,10 @@ def serving_page_plan(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
         "max_slots": max_seqs,
         "min_pages": min(pages_per_seq + 1, num_pages),
         "max_pages": num_pages,
+        "replicas": replicas,
+        "slots_per_replica": slots_per_replica,
+        "pages_per_replica": pages_per_replica,
+        "max_replicas": max_replicas,
     }
 
 

@@ -49,14 +49,38 @@ class EventLog:
     @classmethod
     def from_jsonl(cls, path: str) -> "EventLog":
         """Replay an exported log: every assertion helper (``assert_order``,
-        ``actions`` …) works on the loaded copy exactly as on the live one."""
+        ``actions`` …) works on the loaded copy exactly as on the live one.
+
+        Malformed input raises ``ValueError`` naming the offending line
+        number (1-based), so a truncated or hand-edited export fails loud
+        instead of replaying a silently wrong event stream.
+        """
         log = cls()
         with open(path) as f:
-            for line in f:
+            for lineno, line in enumerate(f, start=1):
                 line = line.strip()
                 if not line:
                     continue
-                d = json.loads(line)
+                try:
+                    d = json.loads(line)
+                except json.JSONDecodeError as e:
+                    raise ValueError(
+                        f"{path}: line {lineno} is not valid JSON "
+                        f"({e.msg} at column {e.colno})") from e
+                if not isinstance(d, dict):
+                    raise ValueError(
+                        f"{path}: line {lineno} holds a JSON "
+                        f"{type(d).__name__}, not an event object")
+                missing = [k for k in ("t", "actor", "action", "detail")
+                           if k not in d]
+                if missing:
+                    raise ValueError(
+                        f"{path}: line {lineno} is missing event field(s) "
+                        f"{missing} (has {sorted(d)})")
+                if not isinstance(d["detail"], dict):
+                    raise ValueError(
+                        f"{path}: line {lineno} has a non-object 'detail' "
+                        f"({type(d['detail']).__name__})")
                 log.events.append(Event(d["t"], d["actor"], d["action"],
                                         dict(d["detail"])))
         return log

@@ -137,8 +137,8 @@ class AmbariServer:
 
     # ---------------------------------------------------------- serving --
     def provision_serving(self, model_cfg, shape, mesh=None,
-                          config_overrides: Optional[Dict[str, Any]] = None
-                          ) -> ServiceInstance:
+                          config_overrides: Optional[Dict[str, Any]] = None,
+                          replicas: int = 1) -> ServiceInstance:
         """Install the continuous-batching serving engine as a service.
 
         The framework analogue of installing Impala's backing service: the
@@ -147,9 +147,15 @@ class AmbariServer:
         suggests a service configuration from cluster facts, and the user
         may override any knob before start. ``model_cfg``/``shape`` are the
         arch + input-shape cell being served.
+
+        ``replicas=k`` provisions the replicated fabric
+        (``repro.serving.router``): the plan carries the per-replica
+        slot/page split and ``replica_placement`` pins each replica to a
+        cluster node (round-robin over the directory's slaves — the fabric
+        router and fleet autoscaler key drain/re-route on these hostnames).
         """
         from repro.core.blueprint import serving_page_plan
-        pool = serving_page_plan(model_cfg, shape, mesh)
+        pool = serving_page_plan(model_cfg, shape, mesh, replicas=replicas)
         if pool is None:
             raise ValueError(
                 f"{model_cfg.name} is not paged-servable (MLA/enc-dec/"
@@ -164,6 +170,10 @@ class AmbariServer:
         cfg.update(pool)
         cfg["arch"] = model_cfg.name
         cfg["shape"] = shape.name
+        slaves = self.cluster.directory.slaves()
+        cfg["replica_placement"] = [
+            slaves[i % len(slaves)].hostname if slaves else None
+            for i in range(replicas)]
         cfg.update(config_overrides or {})
         svc = ServiceInstance(name="serve", port=cfg.get("port"),
                               placement=cfg["placement"],
@@ -172,7 +182,8 @@ class AmbariServer:
         self.cluster.log.emit(self.cloud.clock, "ambari", "install_service",
                               service="serve", placement=len(cfg["placement"]),
                               num_pages=pool["num_pages"],
-                              page_size=pool["page_size"])
+                              page_size=pool["page_size"],
+                              replicas=replicas)
         return svc
 
     def start(self, name: str) -> ServiceInstance:

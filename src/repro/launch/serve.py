@@ -17,6 +17,16 @@ Two engines, selectable with ``--engine``:
   page pool with load; ``--events-out run.jsonl`` exports the scale
   decisions for replay (``EventLog.from_jsonl``).
 
+``--replicas k`` (paged only) serves through the replicated fabric
+instead: a ``ServingRouter`` front-end spreads the workload over k
+scheduler replicas (``--router`` picks the routing policy), and
+``--autoscale`` then runs the *fleet* control plane
+(``repro.autoscale.FleetController``): start at one replica, add/drain
+whole replicas with fleet queue depth.
+
+``--seed`` drives both parameter init and workload generation, so
+run-to-run variation studies are one flag.
+
 Both paths run the arch's reduced config on CPU; the full-config serve
 cells (decode_32k / long_500k) are lowered and analysed by the dry-run.
 """
@@ -38,7 +48,7 @@ from repro.serving.scheduler import ContinuousBatchingScheduler, supports_paged
 
 
 def run_static(cfg, params, args) -> dict:
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(args.seed)
     B, S = args.batch, args.prompt_len
     batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
     if cfg.rope_variant == "mrope":
@@ -67,6 +77,58 @@ def run_static(cfg, params, args) -> dict:
         "decode_tok_per_s": round(B * args.gen / t_dec, 1),
         "generated": [[int(t) for t in row[:8]] for row in toks],
     }
+
+
+def run_fleet(cfg, params, args) -> dict:
+    """Replicated fabric: k scheduler replicas behind one router."""
+    from repro.serving.router import ServingRouter
+    if not supports_paged(cfg):
+        raise SystemExit(f"{cfg.name}: use --engine static (MLA/enc-dec)")
+    rng = np.random.RandomState(args.seed)
+    max_seq = args.prompt_len + args.gen + 8
+    start = 1 if args.autoscale else args.replicas
+    router = ServingRouter(cfg, params, replicas=start,
+                           max_slots=args.batch, page_size=args.page_size,
+                           max_seq_len=max_seq, route_policy=args.router)
+    ctl = None
+    if args.autoscale:
+        from repro.autoscale import FleetController
+        ctl = FleetController(router, min_replicas=1,
+                              max_replicas=args.replicas, eval_interval=2)
+    for i in range(args.requests):
+        plen = int(rng.randint(max(args.prompt_len // 2, 1),
+                               args.prompt_len + 1))
+        gen = int(rng.randint(max(args.gen // 2, 1), args.gen + 1))
+        prompt = rng.randint(0, cfg.vocab_size, size=plen)
+        router.submit(prompt, gen, arrival_step=i // 2)
+
+    t0 = time.time()
+    done = ctl.run() if ctl else router.run()
+    wall = time.time() - t0
+    fleet = router.fleet_stats()
+    lat = np.asarray([r.finish_step - r.arrival_step for r in done], float)
+    out = {
+        "engine": "fleet",
+        "arch": cfg.name,
+        "replicas": args.replicas,
+        "router": args.router,
+        "requests": len(done),
+        "tokens_out": fleet["tokens_out"],
+        "tok_per_s": round(fleet["tokens_out"] / wall, 1),
+        "fleet_ticks": fleet["fleet_ticks"],
+        "p50_latency_ticks": float(np.percentile(lat, 50)),
+        "p99_latency_ticks": float(np.percentile(lat, 99)),
+        "spillovers": fleet["spillovers"],
+        "reroutes": fleet["reroutes"],
+        "generated": [r.out_tokens[:8] for r in done[:4]],
+    }
+    if fleet.get("reserved_page_imbalance") is not None:
+        out["reserved_page_imbalance"] = fleet["reserved_page_imbalance"]
+    if ctl is not None:
+        out["autoscale"] = ctl.summary()
+        if args.events_out:
+            out["events_written"] = ctl.log.write_jsonl(args.events_out)
+    return out
 
 
 def run_paged(cfg, params, args) -> dict:
@@ -132,10 +194,19 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8,
                     help="paged engine: workload size")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="paged engine: serve through the replicated "
+                    "fabric with this many scheduler replicas (with "
+                    "--autoscale this is the fleet ceiling)")
+    ap.add_argument("--router", default="least-pages",
+                    choices=("least-pages", "round-robin"),
+                    help="fabric routing policy (--replicas > 1)")
     ap.add_argument("--autoscale", action="store_true",
                     help="paged engine: start at 1 slot and let the "
                     "autoscale control plane move capacity inside "
-                    "[1, --batch] (see docs/autoscaling.md)")
+                    "[1, --batch]; with --replicas > 1 the fleet "
+                    "controller moves whole replicas instead (see "
+                    "docs/autoscaling.md)")
     ap.add_argument("--events-out", default=None,
                     help="write the run's event log (scale decisions, "
                     "lifecycle ops) as JSON lines for replay")
@@ -146,11 +217,21 @@ def main() -> None:
     if args.events_out and not args.autoscale:
         ap.error("--events-out requires --autoscale (the autoscale control "
                  "loop is what emits events on this path)")
+    if args.replicas > 1 and args.engine != "paged":
+        ap.error("--replicas requires --engine paged (the fabric routes "
+                 "over paged schedulers)")
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
 
     cfg = get_reduced(args.arch)
-    params = M.init(cfg, jax.random.PRNGKey(0))
-    out = (run_paged if args.engine == "paged" else run_static)(
-        cfg, params, args)
+    params = M.init(cfg, jax.random.PRNGKey(args.seed))
+    if args.engine != "paged":
+        runner = run_static
+    elif args.replicas > 1:
+        runner = run_fleet
+    else:
+        runner = run_paged
+    out = runner(cfg, params, args)
     print(json.dumps(out))
 
 

@@ -17,7 +17,8 @@ docs/serving.md).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+import functools
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +27,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.models.schema import init_params
+from repro.serving.request import Request
 
 _SEQ_LEAVES = {"k", "v", "c_kv", "k_pe", "k_scale", "v_scale"}
 _SEQ_AXIS_FROM_END = {"k": 3, "v": 3, "c_kv": 2, "k_pe": 2,
@@ -107,3 +109,59 @@ def greedy_decode(cfg: ModelConfig, params, cache, first_token: jnp.ndarray,
     (_, cur_len, cache), toks = jax.lax.scan(
         body, (first_token, cur_len, cache), None, length=n_steps)
     return jnp.moveaxis(toks[..., 0], 0, 1), cache, cur_len
+
+
+# ---------------------------------------------------------------------------
+# request-level serving (shared Request lifecycle with the paged scheduler)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "capacity"))
+def _jit_prefill(cfg, params, batch, capacity):
+    return prefill(cfg, params, batch, capacity)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n_steps"))
+def _jit_decode(cfg, params, cache, first, cur, n_steps):
+    return greedy_decode(cfg, params, cache, first, cur, n_steps)
+
+
+def serve_requests(cfg: ModelConfig, params, requests: List[Request],
+                   batch_width: int) -> List[Request]:
+    """Serve shared ``Request`` objects the only way a fixed-batch engine
+    can: groups of ``batch_width`` in submission order, every prompt padded
+    to the group max, decoded until the group's *longest* generation
+    finishes. Fills the same ``out_tokens``/``admit_step``/``finish_step``
+    bookkeeping the continuous-batching scheduler does, on a virtual clock
+    of one tick per decode step (groups are serial, so group n+1's admit
+    waits for group n's longest member — the head-of-line blocking being
+    measured when this engine is the baseline).
+
+    Caveat: a naive fixed-batch server conditions a short prompt on its
+    right padding (the greedy token is read at the group-max position), so
+    ``out_tokens`` for padded members reflect that baseline behaviour —
+    this is a throughput/latency baseline, not a token oracle; the paged
+    scheduler is the token-exact path.
+    """
+    clock = 0
+    for i in range(0, len(requests), batch_width):
+        group = requests[i:i + batch_width]
+        B = len(group)
+        plen = max(r.plen for r in group)
+        gen = max(r.max_new_tokens for r in group)
+        toks = np.zeros((B, plen), np.int32)
+        for j, r in enumerate(group):
+            toks[j, :r.plen] = r.prompt
+        lg, cache, cur = _jit_prefill(cfg, params,
+                                      {"tokens": jnp.asarray(toks)},
+                                      plen + gen + 1)
+        first = jnp.argmax(lg[:, -1, :cfg.vocab_size], -1).astype(
+            jnp.int32)[:, None]
+        out, _, _ = _jit_decode(cfg, params, cache, first, cur, gen - 1)
+        out = np.asarray(out)
+        for j, r in enumerate(group):
+            r.admit_step = clock
+            r.out_tokens = ([int(first[j, 0])]
+                            + [int(t) for t in out[j]])[:r.max_new_tokens]
+            r.finish_step = clock + r.max_new_tokens
+        clock += gen                      # group decodes until longest done
+    return requests

@@ -1,0 +1,132 @@
+"""A serving replica: one scheduler + one page pool, placed on one node.
+
+The fabric router (``repro.serving.router``) spreads requests over a fleet
+of these. The wrapper is deliberately thin — all decode/admission logic
+stays in ``ContinuousBatchingScheduler`` — and adds only what the fleet
+needs to reason about a member:
+
+* **placement** — the cluster hostname this replica's "serve" service runs
+  on (``AmbariServer.provision_serving`` + ``NodeDirectory`` assign it;
+  ``None`` for an unplaced, in-process fabric);
+* **load** — ``outstanding_pages`` is the routing signal: worst-case pages
+  reserved by admitted streams plus the worst-case pages of everything in
+  the replica's own queue, so routing sees committed-but-not-yet-admitted
+  work too;
+* **lifecycle** — ``draining`` stops new routing while admitted/queued
+  streams finish (graceful scale-in); ``failed`` marks a dead replica
+  (heartbeat DEAD / spot preemption) whose unfinished streams the router
+  re-prefills elsewhere.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.serving.request import Request, worst_case_pages
+from repro.serving.scheduler import ContinuousBatchingScheduler
+
+
+class ServingReplica:
+    def __init__(self, replica_id: int,
+                 sched: ContinuousBatchingScheduler, *,
+                 hostname: Optional[str] = None):
+        self.replica_id = replica_id
+        self.sched = sched
+        self.hostname = hostname
+        self.draining = False
+        self.failed = False
+
+    @classmethod
+    def build(cls, cfg, params, replica_id: int, *, max_slots: int = 4,
+              page_size: int = 16, num_pages: Optional[int] = None,
+              max_seq_len: int = 512,
+              hostname: Optional[str] = None) -> "ServingReplica":
+        sched = ContinuousBatchingScheduler(
+            cfg, params, max_slots=max_slots, page_size=page_size,
+            num_pages=num_pages, max_seq_len=max_seq_len)
+        return cls(replica_id, sched, hostname=hostname)
+
+    # -------------------------------------------------------------- state --
+    @property
+    def live(self) -> bool:
+        """Accepting new routed requests."""
+        return not (self.draining or self.failed)
+
+    @property
+    def num_unfinished(self) -> int:
+        return self.sched.num_active + len(self.sched.waiting)
+
+    @property
+    def idle(self) -> bool:
+        return self.num_unfinished == 0
+
+    @property
+    def reserved_pages(self) -> int:
+        return self.sched.reserved_pages
+
+    @property
+    def outstanding_pages(self) -> int:
+        """Routing load signal: reservations held by admitted streams plus
+        the worst-case reservations of this replica's queued streams."""
+        ps = self.sched.page_size
+        queued = sum(worst_case_pages(r, ps) for r in self.sched.waiting)
+        return self.sched.reserved_pages + queued
+
+    def fits(self, req: Request) -> bool:
+        """Could this replica *ever* admit the request (spill-over check)?"""
+        if req.plen + req.max_new_tokens > self.sched.max_seq_len:
+            return False
+        cap = self.sched.alloc.capacity
+        if self.sched.capacity_hint is not None:
+            cap = max(cap, self.sched.capacity_hint - 1)
+        return worst_case_pages(req, self.sched.page_size) <= cap
+
+    # ---------------------------------------------------------- lifecycle --
+    def accept(self, req: Request) -> None:
+        req.replica = self.replica_id
+        # routed requests are already due on the fleet clock; gate them on
+        # the replica's own clock so admission may happen this very tick
+        req.arrival_step = min(req.arrival_step, self.sched.step_idx)
+        self.sched.submit_request(req)
+
+    def step(self, max_fuse: int = 16) -> List[Request]:
+        return self.sched.step(max_fuse=max_fuse)
+
+    def drain(self) -> None:
+        """Stop routing to this replica; admitted/queued streams finish."""
+        self.draining = True
+
+    def undrain(self) -> None:
+        if not self.failed:
+            self.draining = False
+
+    def fail(self) -> List[Request]:
+        """Mark dead and surrender every unfinished stream for re-routing.
+
+        The device state is considered lost: queued streams come back
+        untouched, admitted streams come back with the tokens they already
+        emitted (the router re-prefills ``prompt + out_tokens`` elsewhere).
+        """
+        self.failed = True
+        self.draining = True
+        lost: List[Request] = list(self.sched.waiting)
+        self.sched.waiting.clear()
+        # host-side bookkeeping is still ours to zero out (the simulated
+        # node is gone; the scheduler object just stops being stepped)
+        for slot, req in enumerate(self.sched.slot_req):
+            if req is not None:
+                lost.append(req)
+                self.sched.alloc.free(self.sched.slot_pages[slot])
+                self.sched.slot_pages[slot] = []
+                self.sched.slot_req[slot] = None
+        self.sched.reserved_pages = 0
+        return lost
+
+    def stats(self) -> dict:
+        return dict(self.sched.stats)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        host = self.hostname or "unplaced"
+        return (f"ServingReplica({self.replica_id}@{host}, "
+                f"active={self.sched.num_active}, "
+                f"queued={len(self.sched.waiting)}, "
+                f"reserved={self.sched.reserved_pages})")

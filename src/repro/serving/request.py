@@ -1,0 +1,92 @@
+"""Request/stream lifecycle shared by every serving engine.
+
+A ``Request`` is one generation stream: a prompt, a token budget, and the
+bookkeeping both engines fill in as the stream moves through its states::
+
+    WAITING ──admit──► ACTIVE ──budget spent──► FINISHED
+      (queued; arrival     (prefilled; decoding    (finish_step recorded,
+       gate not yet due,    greedily, one token     pages freed by the
+       or no capacity)      per scheduler tick)     owning engine)
+
+The dataclass lives here — not in ``scheduler.py`` — because three layers
+share it: the continuous-batching scheduler admits/decodes/evicts single
+requests, the static engine (``repro.serving.engine.serve_requests``)
+serves whole groups of them, and the replicated-fabric router
+(``repro.serving.router``) owns the fleet arrival queue and moves requests
+*between* schedulers when a replica drains or dies. Clock fields
+(``arrival_step``/``admit_step``/``finish_step``) are ticks on whichever
+clock the owning engine runs; the router overwrites them with fleet-clock
+values so latency is comparable across replicas added at different times.
+
+Greedy-token bookkeeping: ``out_tokens`` accumulates the argmax token per
+step, the prefill's last-position token included, so ``done`` is simply
+``len(out_tokens) >= max_new_tokens``. On a re-route (replica death) the
+router re-prefills ``prompt + out_tokens`` elsewhere and appends the
+continuation's tokens here — token-identical for dense/SSM archs, where a
+greedy continuation depends only on its prefix.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+import numpy as np
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    ACTIVE = "active"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                    # (plen,) int32
+    max_new_tokens: int
+    arrival_step: int = 0                 # earliest tick it may be admitted
+    # filled in by the serving engine
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    admit_step: Optional[int] = None
+    finish_step: Optional[int] = None
+    # filled in by the fabric router (single-engine runs leave the defaults)
+    replica: Optional[int] = None         # replica currently decoding this
+    reroutes: int = 0                     # re-prefills after a replica loss
+
+    @property
+    def plen(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def done(self) -> bool:
+        return len(self.out_tokens) >= self.max_new_tokens
+
+    @property
+    def state(self) -> RequestState:
+        if self.finish_step is not None or self.done:
+            return RequestState.FINISHED
+        if self.admit_step is not None:
+            return RequestState.ACTIVE
+        return RequestState.WAITING
+
+    @property
+    def remaining_tokens(self) -> int:
+        return max(self.max_new_tokens - len(self.out_tokens), 0)
+
+
+def make_request(rid: int, prompt, max_new_tokens: int,
+                 arrival_step: int = 0) -> Request:
+    """Validate and build a request (shared by scheduler/router submit)."""
+    prompt = np.asarray(prompt, np.int32).reshape(-1)
+    if max_new_tokens < 1:
+        raise ValueError("max_new_tokens must be >= 1 (the prefill "
+                         "already produces the first token)")
+    return Request(rid=rid, prompt=prompt, max_new_tokens=max_new_tokens,
+                   arrival_step=arrival_step)
+
+
+def worst_case_pages(req: Request, page_size: int) -> int:
+    """Pages admission must reserve so the stream can never OOM mid-flight."""
+    total = req.plen + req.max_new_tokens
+    return -(-total // page_size)

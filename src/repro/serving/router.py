@@ -1,0 +1,318 @@
+"""Fabric router: one front-end over k scheduler replicas on cluster nodes.
+
+PR 1–2 built a continuous-batching scheduler and taught it to resize, but
+one scheduler is one implicit node — the cluster the provisioning layer
+builds never shows up in serving throughput. The router makes "serve" a
+fleet service:
+
+* **arrival queue** — ``submit`` lands requests in one fleet-wide queue
+  gated on the fleet clock; each tick the router routes everything due.
+* **routing** — least-outstanding-reserved-pages: candidates are live
+  replicas ordered by ``(outstanding_pages, replica_id)`` (the id is the
+  deterministic tie-break, so a fleet run is replayable); the first
+  candidate whose pool could ever hold the request wins — a request too
+  big for the least-loaded replica's pool *spills over* to the next.
+* **drain / fail** — ``drain_replica`` stops new routing while the
+  replica's streams finish (graceful scale-in: the fleet autoscaler's
+  scale-in path); ``fail_replica`` (heartbeat DEAD, spot preemption)
+  surrenders unfinished streams, and the router re-prefills each one's
+  ``prompt + emitted tokens`` on a surviving replica. Greedy decoding
+  depends only on the prefix, so the re-routed continuation is
+  token-identical for dense/SSM archs (MoE shares the scheduler's
+  capacity-coupling caveat).
+* **clocks** — replicas keep private scheduler clocks (a replica added at
+  fleet tick 40 starts at 0); the router stamps ``finish_step`` and
+  restores ``arrival_step`` on the fleet clock when it collects a finished
+  request, so latency percentiles are comparable fleet-wide.
+
+Placement is by hostname: ``AmbariServer.provision_serving(replicas=k)``
+picks k nodes from the ``NodeDirectory`` and the fleet autoscaler
+(``repro.autoscale.fleet``) acquires/releases nodes through
+``ClusterLifecycle`` as it adds/removes replicas. ``fail_host`` is the
+heartbeat hook: wire ``monitor.on_dead(router.fail_host)``.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Any, Deque, Dict, List, Optional, Sequence
+
+from repro.configs.base import ModelConfig
+from repro.serving.replica import ServingReplica
+from repro.serving.request import Request, make_request, worst_case_pages
+from repro.serving.scheduler import supports_paged
+
+ROUTE_POLICIES = ("least-pages", "round-robin")
+
+
+class ServingRouter:
+    """Front-end owning the fleet arrival queue and k scheduler replicas.
+
+    Constructor knobs mirror one replica's scheduler (``max_slots``,
+    ``page_size``, ``num_pages``, ``max_seq_len`` are *per replica* — use
+    ``serving_page_plan(..., replicas=k)`` for a coherent split) plus the
+    fleet ones: ``replicas`` initial fleet size, ``placement`` hostnames,
+    ``route_policy`` in ``ROUTE_POLICIES``.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Any, *, replicas: int = 1,
+                 max_slots: int = 4, page_size: int = 16,
+                 num_pages: Optional[int] = None, max_seq_len: int = 512,
+                 placement: Optional[Sequence[Optional[str]]] = None,
+                 route_policy: str = "least-pages"):
+        if not supports_paged(cfg):
+            raise NotImplementedError(
+                f"{cfg.name}: the fabric routes over paged schedulers; "
+                "MLA/enc-dec archs stay on repro.serving.engine")
+        if replicas < 1:
+            raise ValueError("need at least one replica")
+        if route_policy not in ROUTE_POLICIES:
+            raise ValueError(f"route_policy must be one of {ROUTE_POLICIES}")
+        self.cfg = cfg
+        self.params = params
+        self.replica_kw = dict(max_slots=max_slots, page_size=page_size,
+                               num_pages=num_pages, max_seq_len=max_seq_len)
+        self.route_policy = route_policy
+        self.replicas: Dict[int, ServingReplica] = {}
+        self.waiting: Deque[Request] = collections.deque()
+        self.finished: List[Request] = []
+        self.step_idx = 0
+        self._rid = 0
+        self._next_replica = 0
+        self._rr_cursor = 0                  # round-robin route state
+        self._arrival: Dict[int, int] = {}   # rid -> fleet arrival tick
+        # continuation -> original request (re-routes after a replica loss)
+        self._parents: Dict[int, Request] = {}
+        self.stats: Dict[str, int] = {"routed": 0, "spillovers": 0,
+                                      "reroutes": 0, "replicas_added": 0,
+                                      "replicas_removed": 0}
+        # counters of replicas that already left the fleet, so fleet totals
+        # survive drain-remove and failure
+        self._retired_stats: Dict[str, int] = {}
+        # (tick, [reserved_pages per live replica]) when >= 2 are live and
+        # every one has work — the steady-state balance samples
+        self.balance_log: List[tuple] = []
+        placement = list(placement or [])
+        for i in range(replicas):
+            self.add_replica(hostname=placement[i] if i < len(placement)
+                             else None)
+
+    # ----------------------------------------------------------- topology --
+    def add_replica(self, *, hostname: Optional[str] = None,
+                    **overrides: Any) -> ServingReplica:
+        """Add a fabric member (``overrides`` patch the default replica
+        sizing — fleet members become heterogeneous the moment per-replica
+        autoscalers resize them, so routing never assumes symmetry)."""
+        rep = ServingReplica.build(
+            self.cfg, self.params, self._next_replica, hostname=hostname,
+            **{**self.replica_kw, **overrides})
+        self.replicas[rep.replica_id] = rep
+        self._next_replica += 1
+        self.stats["replicas_added"] += 1
+        return rep
+
+    def drain_replica(self, replica_id: int) -> ServingReplica:
+        rep = self.replicas[replica_id]
+        rep.drain()
+        return rep
+
+    def undrain_replica(self, replica_id: int) -> ServingReplica:
+        rep = self.replicas[replica_id]
+        rep.undrain()
+        return rep
+
+    def remove_replica(self, replica_id: int) -> Optional[str]:
+        """Remove a drained-and-empty (or failed) replica; returns its
+        hostname so the caller can release the node."""
+        rep = self.replicas[replica_id]
+        if not rep.failed and not rep.idle:
+            raise RuntimeError(
+                f"replica {replica_id} still holds {rep.num_unfinished} "
+                "unfinished requests; drain it first")
+        self._retire_stats(rep)
+        del self.replicas[replica_id]
+        self.stats["replicas_removed"] += 1
+        return rep.hostname
+
+    def _retire_stats(self, rep: ServingReplica) -> None:
+        for k, v in rep.stats().items():
+            self._retired_stats[k] = self._retired_stats.get(k, 0) + v
+
+    def fail_replica(self, replica_id: int) -> List[Request]:
+        """Replica death (heartbeat DEAD / spot preemption): surrender its
+        unfinished streams and queue token-identical continuations."""
+        rep = self.replicas[replica_id]
+        if rep.failed:
+            return []
+        lost = rep.fail()
+        rerouted = []
+        for req in lost:
+            rerouted.append(self._requeue(req))
+        self.stats["reroutes"] += len(rerouted)
+        self._retire_stats(rep)
+        del self.replicas[replica_id]
+        self.stats["replicas_removed"] += 1
+        return rerouted
+
+    def fail_host(self, hostname: str) -> List[Request]:
+        """Heartbeat hook: fail every replica placed on ``hostname``."""
+        out = []
+        for rid in [r.replica_id for r in self.replicas.values()
+                    if r.hostname == hostname]:
+            out.extend(self.fail_replica(rid))
+        return out
+
+    def _requeue(self, req: Request) -> Request:
+        """Queue the continuation of a lost stream at the *front* (it has
+        already waited once; re-prefill as soon as capacity exists)."""
+        orig = self._parents.pop(req.rid, req)   # chain continuations
+        orig.replica = None
+        orig.reroutes += 1
+        if req is not orig:
+            orig.out_tokens.extend(req.out_tokens)
+        if orig.remaining_tokens == 0:
+            # lost after its last token was emitted: it is simply finished
+            self._collect(orig)
+            return orig
+        cont = make_request(self._rid, list(orig.prompt) + orig.out_tokens,
+                            orig.remaining_tokens,
+                            arrival_step=self.step_idx)
+        self._rid += 1
+        self._parents[cont.rid] = orig
+        self.waiting.appendleft(cont)
+        return cont
+
+    # --------------------------------------------------------- submission --
+    def submit(self, prompt, max_new_tokens: int,
+               arrival_step: int = 0) -> Request:
+        req = make_request(self._rid, prompt, max_new_tokens, arrival_step)
+        self._rid += 1
+        if not any(rep.fits(req) for rep in self.replicas.values()):
+            raise ValueError(
+                f"request needs {req.plen + req.max_new_tokens} positions / "
+                f"{worst_case_pages(req, self.replica_kw['page_size'])} "
+                f"pages — no replica in the fleet could ever admit it")
+        self._arrival[req.rid] = arrival_step
+        self.waiting.append(req)
+        return req
+
+    # ------------------------------------------------------------ routing --
+    def _live(self) -> List[ServingReplica]:
+        return sorted((r for r in self.replicas.values() if r.live),
+                      key=lambda r: r.replica_id)
+
+    def _candidates(self, live: List[ServingReplica]) -> List[ServingReplica]:
+        if self.route_policy == "round-robin":
+            k = len(live)
+            order = [live[(self._rr_cursor + i) % k] for i in range(k)]
+            self._rr_cursor = (self._rr_cursor + 1) % max(k, 1)
+            return order
+        return sorted(live, key=lambda r: (r.outstanding_pages,
+                                           r.replica_id))
+
+    def route_due(self) -> int:
+        """Assign every due waiting request to a replica; returns count."""
+        routed = 0
+        deferred: List[Request] = []
+        while self.waiting:
+            if self.waiting[0].arrival_step > self.step_idx:
+                break
+            req = self.waiting.popleft()
+            live = self._live()
+            placed = False
+            for i, rep in enumerate(self._candidates(live)):
+                if rep.fits(req):
+                    if i > 0:
+                        self.stats["spillovers"] += 1
+                    rep.accept(req)
+                    routed += 1
+                    placed = True
+                    break
+            if not placed:
+                # no live replica can ever hold it right now (e.g. every
+                # fleet member is draining): hold at the front until the
+                # fleet changes shape
+                deferred.append(req)
+        for req in reversed(deferred):
+            self.waiting.appendleft(req)
+        self.stats["routed"] += routed
+        return routed
+
+    # --------------------------------------------------------------- step --
+    @property
+    def num_unfinished(self) -> int:
+        return (len(self.waiting)
+                + sum(r.num_unfinished for r in self.replicas.values()))
+
+    @property
+    def pending_due(self) -> int:
+        return sum(r.arrival_step <= self.step_idx for r in self.waiting)
+
+    def _collect(self, req: Request) -> None:
+        req.finish_step = self.step_idx
+        req.arrival_step = self._arrival.pop(req.rid, req.arrival_step)
+        self.finished.append(req)
+
+    def step(self, max_fuse: int = 16) -> List[Request]:
+        """One fleet tick: route due arrivals, step every replica once,
+        collect finishes (joining re-routed continuations to their
+        originals), advance the fleet clock."""
+        self.route_due()
+        done_now: List[Request] = []
+        for rep in sorted(self.replicas.values(),
+                          key=lambda r: r.replica_id):
+            if rep.failed:
+                continue
+            for req in rep.step(max_fuse=max_fuse):
+                orig = self._parents.pop(req.rid, None)
+                if orig is not None:
+                    orig.out_tokens.extend(req.out_tokens)
+                    req = orig
+                self._collect(req)
+                done_now.append(req)
+        if len(self.replicas) >= 2:
+            live = self._live()
+            if len(live) >= 2 and all(r.sched.num_active > 0 for r in live):
+                self.balance_log.append(
+                    (self.step_idx, [r.reserved_pages for r in live]))
+        self.step_idx += 1
+        return done_now
+
+    def run(self, max_steps: int = 100_000,
+            max_fuse: int = 16) -> List[Request]:
+        while self.num_unfinished and max_steps:
+            self.step(max_fuse=max_fuse)
+            max_steps -= 1
+        if self.num_unfinished:
+            raise RuntimeError(
+                f"router run() exhausted max_steps with "
+                f"{self.num_unfinished} unfinished requests")
+        return self.finished
+
+    # ------------------------------------------------------------ metrics --
+    def imbalance(self) -> Optional[float]:
+        """Mean steady-state reserved-page imbalance (max-min over mean)
+        across the balance samples; None when the fleet never had two busy
+        replicas at once."""
+        if not self.balance_log:
+            return None
+        vals = []
+        for _, pages in self.balance_log:
+            mean = sum(pages) / len(pages)
+            if mean > 0:
+                vals.append((max(pages) - min(pages)) / mean)
+        return sum(vals) / len(vals) if vals else None
+
+    def fleet_stats(self) -> Dict[str, Any]:
+        per_replica = {rid: rep.stats() for rid, rep in
+                       sorted(self.replicas.items())}
+        out: Dict[str, Any] = dict(self.stats)
+        out["fleet_ticks"] = self.step_idx
+        out["live_replicas"] = len(self._live())
+        for key in ("tokens_out", "decode_steps", "prefills"):
+            out[key] = (sum(s[key] for s in per_replica.values())
+                        + self._retired_stats.get(key, 0))
+        imb = self.imbalance()
+        if imb is not None:
+            out["reserved_page_imbalance"] = round(imb, 3)
+        out["per_replica"] = per_replica
+        return out

@@ -29,11 +29,17 @@ capacity bound (exactly like the dense engine's batch), so concurrent
 requests can influence each other's routing when capacity binds — the
 late-join byte-determinism guarantee is for dense/SSM archs. See
 docs/serving.md for the API walk-through and tuning knobs.
+
+The request dataclass and its lifecycle live in ``repro.serving.request``
+(shared with the static engine and the fabric router); this module is the
+single-scheduler core only. One scheduler drives one page pool — a fleet
+of them behind ``repro.serving.router.ServingRouter`` is the replicated
+serving fabric, with each scheduler wrapped as a
+``repro.serving.replica.ServingReplica`` placed on a cluster node.
 """
 from __future__ import annotations
 
 import collections
-import dataclasses
 import functools
 from typing import Any, Deque, Dict, List, Optional, Sequence
 
@@ -45,28 +51,12 @@ from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.models.transformer import lm_forward
 from repro.serving import paged_cache as PC
+from repro.serving.request import Request, make_request
 
 DEFAULT_BUCKETS = (8, 16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512)
 
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray                    # (plen,) int32
-    max_new_tokens: int
-    arrival_step: int = 0                 # earliest tick it may be admitted
-    # filled in by the scheduler
-    out_tokens: List[int] = dataclasses.field(default_factory=list)
-    admit_step: Optional[int] = None
-    finish_step: Optional[int] = None
-
-    @property
-    def plen(self) -> int:
-        return int(self.prompt.shape[0])
-
-    @property
-    def done(self) -> bool:
-        return len(self.out_tokens) >= self.max_new_tokens
+__all__ = ["ContinuousBatchingScheduler", "DEFAULT_BUCKETS", "Request",
+           "supports_paged"]
 
 
 def supports_paged(cfg: ModelConfig) -> bool:
@@ -199,11 +189,15 @@ class ContinuousBatchingScheduler:
     # ---------------------------------------------------------- submission --
     def submit(self, prompt, max_new_tokens: int,
                arrival_step: int = 0) -> Request:
-        prompt = np.asarray(prompt, np.int32).reshape(-1)
-        if max_new_tokens < 1:
-            raise ValueError("max_new_tokens must be >= 1 (the prefill "
-                             "already produces the first token)")
-        total = prompt.shape[0] + max_new_tokens
+        req = make_request(self._rid, prompt, max_new_tokens, arrival_step)
+        self._rid += 1
+        return self.submit_request(req)
+
+    def submit_request(self, req: Request) -> Request:
+        """Enqueue a pre-built request (the fabric router's entry point: the
+        router owns rid assignment, so the same object travels through
+        whichever replica scheduler ends up decoding it)."""
+        total = req.plen + req.max_new_tokens
         if total > self.max_seq_len:
             raise ValueError(f"request needs {total} positions > "
                              f"max_seq_len {self.max_seq_len}")
@@ -215,10 +209,6 @@ class ContinuousBatchingScheduler:
             raise ValueError(
                 f"request reserves {worst} pages but the pool only holds "
                 f"{cap} — it could never be admitted")
-        req = Request(rid=self._rid, prompt=prompt,
-                      max_new_tokens=max_new_tokens,
-                      arrival_step=arrival_step)
-        self._rid += 1
         self.waiting.append(req)
         return req
 

@@ -1,0 +1,109 @@
+"""PageAllocator live-resize invariants (hypothesis stateful testing).
+
+The allocator is the serving engine's memory-safety keystone: admission
+reservations, live grow, and drain-before-shrink all assume that at every
+point in *any* operation sequence the page-id space partitions cleanly
+into {free} ∪ {owned} ∪ {retired-by-pending-shrink} with the sink page in
+none of them. These properties drive random interleavings of
+alloc / free / grow / request_shrink / complete_shrink and check the
+partition (free + used + retired == pool size − sink) plus
+no-double-ownership after every step — the state-machine analogue of the
+hand-written sequences in tests/test_autoscale.py.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import settings, strategies as st
+from hypothesis.stateful import (RuleBasedStateMachine, invariant,
+                                 precondition, rule)
+
+from repro.serving.paged_cache import SINK_PAGE, PageAllocator
+
+
+class AllocatorMachine(RuleBasedStateMachine):
+    def __init__(self):
+        super().__init__()
+        self.alloc = PageAllocator(8)
+        self.owned = {}                    # page -> owner tag (shadow model)
+        self.next_owner = 0
+
+    # ------------------------------------------------------------- rules --
+    @rule(n=st.integers(min_value=1, max_value=6))
+    def alloc_pages(self, n):
+        if self.alloc.can_alloc(n):
+            pages = self.alloc.alloc(n, owner=self.next_owner)
+            assert len(set(pages)) == n, "duplicate page in one alloc"
+            assert SINK_PAGE not in pages, "sink page handed out"
+            for p in pages:
+                assert p not in self.owned, f"page {p} double-owned"
+                self.owned[p] = self.next_owner
+            self.next_owner += 1
+        else:
+            with pytest.raises(MemoryError):
+                self.alloc.alloc(n)
+
+    @precondition(lambda self: self.owned)
+    @rule(data=st.data())
+    def free_one_owner(self, data):
+        owner = data.draw(st.sampled_from(
+            sorted(set(self.owned.values()))), label="owner")
+        pages = [p for p, o in self.owned.items() if o == owner]
+        self.alloc.free(pages)
+        for p in pages:
+            del self.owned[p]
+        with pytest.raises(ValueError):
+            self.alloc.free(pages)         # double free always raises
+
+    @rule(k=st.integers(min_value=0, max_value=8))
+    def grow(self, k):
+        self.alloc.grow(self.alloc.num_pages + k)
+        assert not self.alloc.shrink_pending   # grow cancels pending shrinks
+
+    @rule(data=st.data())
+    def request_shrink(self, data):
+        target = data.draw(st.integers(min_value=2,
+                                       max_value=self.alloc.num_pages),
+                           label="target")
+        self.alloc.request_shrink(target)
+        assert self.alloc.effective_pages == min(self.alloc.num_pages, target)
+
+    @precondition(lambda self: self.alloc.shrink_ready())
+    @rule()
+    def complete_shrink(self):
+        new = self.alloc.complete_shrink()
+        assert new == self.alloc.num_pages
+        assert not self.alloc.shrink_pending
+        assert all(p < new for p in self.owned)
+
+    # -------------------------------------------------------- invariants --
+    @invariant()
+    def partition_covers_pool(self):
+        a = self.alloc
+        free = set(a._free)
+        owned = set(a._owner)
+        every = set(range(1, a.num_pages))
+        retired = every - free - owned
+        # free + used + retired == pool size (sink excluded from all three)
+        assert len(free) + len(owned) + len(retired) == a.num_pages - 1
+        assert len(a._free) == len(free), "duplicate ids on the free list"
+        assert not (free & owned), "page both free and owned"
+        assert SINK_PAGE not in free and SINK_PAGE not in owned
+        # retired pages exist only under a pending shrink, above its target
+        if retired:
+            assert a.shrink_pending
+            assert all(p >= a._shrink_target for p in retired)
+        # free pages below a pending shrink target only
+        if a.shrink_pending:
+            assert all(p < a._shrink_target for p in free)
+
+    @invariant()
+    def shadow_model_agrees(self):
+        assert set(self.alloc._owner) == set(self.owned)
+        assert self.alloc.num_allocated == len(self.owned)
+        assert self.alloc.capacity >= 0
+
+
+TestAllocatorProps = AllocatorMachine.TestCase
+TestAllocatorProps.settings = settings(max_examples=60,
+                                       stateful_step_count=40,
+                                       deadline=None)

@@ -1,7 +1,8 @@
 """Elastic autoscaling control plane: live resize token-identity, allocator
 grow/shrink invariants, policy hysteresis, cluster wiring (extend/shrink,
-spot preemption -> warm-spare replacement), event-log replay, and the
-cost-vs-latency acceptance criterion on the bursty trace."""
+spot preemption -> warm-spare replacement), event-log replay, the
+cost-vs-latency acceptance criterion on the bursty trace, and the fleet
+controller's replica axis (grow/drain/shrink over the serving fabric)."""
 import dataclasses
 import pathlib
 import sys
@@ -11,7 +12,8 @@ import numpy as np
 import pytest
 
 from repro.autoscale import (AutoscaleController, CapacityBands,
-                             StepScalingPolicy, TargetTrackingPolicy)
+                             FleetController, StepScalingPolicy,
+                             TargetTrackingPolicy)
 from repro.autoscale.controller import pow2_bucket
 from repro.configs.registry import REDUCED
 from repro.core.cluster import ClusterManager
@@ -286,6 +288,87 @@ def test_serving_page_plan_capacity_bands():
     assert plan["min_pages"] <= plan["max_pages"] == plan["num_pages"]
     bands = CapacityBands.from_plan(plan)
     assert bands.max_slots >= bands.min_slots
+
+
+def test_fleet_policy_grows_and_drains_on_bursty_trace(params):
+    """Acceptance: on the bursty trace the fleet policy grows the fabric
+    from 1 to >= 2 replicas and shrinks back by *draining* (not killing)
+    busy replicas — no request is lost, no stream is re-prefilled."""
+    from repro.serving.router import ServingRouter
+    rng = np.random.RandomState(0)
+    trace = AB.bursty_trace(rng, CFG.vocab_size, requests=24, horizon=60,
+                            n_bursts=1, burst_frac=0.6, p_lo=4, p_hi=10,
+                            g_lo=6, g_hi=14)
+    router = ServingRouter(CFG, params, replicas=1, max_slots=2,
+                           page_size=8, max_seq_len=32)
+    ctl = FleetController(router, min_replicas=1, max_replicas=3,
+                          eval_interval=2)
+    for arrival, prompt, gen in trace:
+        router.submit(prompt, gen, arrival_step=arrival)
+    for i in range(3):                      # quiet tail: trickle arrivals so
+        router.submit(rng.randint(0, CFG.vocab_size, size=6), 6,  # scale-in
+                      arrival_step=120 + 30 * i)    # cooldowns can elapse
+    done = ctl.run()
+    # no request lost, every token budget honoured
+    assert len(done) == len(trace) + 3
+    assert all(len(r.out_tokens) == r.max_new_tokens for r in done)
+    s = ctl.summary()
+    assert s["peak_replicas"] >= 2, s           # burst grew the fleet
+    assert s["scale_in"] >= 1 and s["final_replicas"] == 1, s
+    assert s["reroutes"] == 0                   # drained, never killed
+    # the scale-in path is drain-then-remove, in that order
+    ctl.log.assert_order("scale_out", "add_replica", "scale_in",
+                         "drain_replica", "remove_replica")
+    # at least one drain hit a replica that still had streams in flight
+    drains = [e for e in ctl.log.events if e.action == "drain_replica"]
+    assert any(e.detail["outstanding"] > 0 for e in drains), drains
+
+
+def test_fleet_cluster_wiring_node_per_replica_and_preemption(params):
+    """Fleet scale-out acquires a node per replica via ClusterLifecycle;
+    a spot preemption fails the replica, re-routes its streams onto
+    survivors (token budgets intact), and replaces the node from the
+    warm-spare pool under its stable hostname."""
+    from repro.serving.router import ServingRouter
+    mgr = ClusterManager()
+    ic = mgr.build_cluster(n_slaves=1, spot=True)
+    ic.lifecycle.provision_spares(ic.cluster, 1)
+    monitor = HeartbeatMonitor()
+    for node in ic.cluster.directory.slaves():
+        monitor.register(node.hostname, now=mgr.cloud.clock)
+
+    router = ServingRouter(CFG, params, replicas=1, max_slots=2,
+                           page_size=8, max_seq_len=48,
+                           placement=["slave-0"])
+    ctl = FleetController(router, min_replicas=1, max_replicas=3,
+                          eval_interval=2, lifecycle=ic.lifecycle,
+                          cluster=ic.cluster, monitor=monitor)
+    rng = np.random.RandomState(3)
+    reqs = [router.submit(rng.randint(0, CFG.vocab_size, size=6), 10,
+                          arrival_step=0) for _ in range(10)]
+    preempted = False
+    for _ in range(300):
+        if not router.num_unfinished:
+            break
+        ctl.tick()
+        router.step(max_fuse=2)
+        if not preempted and len(ic.cluster.slaves) > 1:
+            new_host = ic.cluster.directory.slaves()[-1].hostname
+            busy = any(r.hostname == new_host and r.num_unfinished > 0
+                       for r in router.replicas.values())
+            if busy:
+                mgr.cloud.preempt_spot(ic.cluster.slaves[-1].instance_id)
+                preempted = True
+    ctl.tick()
+    assert preempted, "fleet controller never extended the cluster"
+    assert not router.num_unfinished
+    assert all(len(r.out_tokens) == r.max_new_tokens for r in reqs)
+    assert router.stats["reroutes"] >= 1        # preemption re-routed work
+    ic.log.assert_order("extend_cluster", "replica_failed",
+                        "preempt_replaced")
+    # the replacement kept the logical hostname unique in the directory
+    hostnames = [n.hostname for n in ic.cluster.directory.slaves()]
+    assert len(hostnames) == len(set(hostnames))
 
 
 def test_autoscale_bench_cost_criterion(params):

@@ -1,0 +1,82 @@
+"""EventLog JSONL export/replay: type-preserving round-trip and loud,
+line-numbered errors on malformed input."""
+import json
+
+import pytest
+
+from repro.core.events import EventLog
+
+
+def _sample_log() -> EventLog:
+    log = EventLog()
+    log.emit(0.0, "cloud", "run_instances", count=4, spot=True)
+    log.emit(1.5, "master", "extend_cluster",
+             added=["slave-2", "slave-3"], meta={"region": "us-east-1"})
+    log.emit(2.0, "autoscale", "scale_out", resource="replicas", desired=2,
+             delta=1, reason="step-scaling demand=5.000")
+    log.emit(3.25, "autoscale", "drain_replica", replica=1, outstanding=0,
+             hostname=None)
+    return log
+
+
+def test_roundtrip_preserves_timestamps_and_payload_types(tmp_path):
+    log = _sample_log()
+    path = tmp_path / "events.jsonl"
+    n = log.write_jsonl(path)
+    assert n == len(log.events) == 4
+
+    replay = EventLog.from_jsonl(path)
+    assert [e.to_dict() for e in replay.events] == \
+        [e.to_dict() for e in log.events]
+    # types survive, not just values
+    for orig, back in zip(log.events, replay.events):
+        assert type(back.t) is type(orig.t)
+        for k, v in orig.detail.items():
+            assert type(back.detail[k]) is type(v), (k, v)
+    e = replay.events[1]
+    assert isinstance(e.t, float) and e.t == 1.5
+    assert e.detail["added"] == ["slave-2", "slave-3"]
+    assert e.detail["meta"] == {"region": "us-east-1"}
+    assert replay.events[0].detail["spot"] is True
+    assert replay.events[3].detail["hostname"] is None
+    # the helpers work identically on the replayed copy
+    replay.assert_order("run_instances", "scale_out", "drain_replica")
+    assert replay.actions("autoscale") == ["scale_out", "drain_replica"]
+
+
+def test_roundtrip_skips_blank_lines(tmp_path):
+    path = tmp_path / "events.jsonl"
+    path.write_text('{"t": 0.0, "actor": "a", "action": "x", "detail": {}}'
+                    "\n\n  \n")
+    assert len(EventLog.from_jsonl(path).events) == 1
+
+
+def test_malformed_json_names_line_number(tmp_path):
+    log = _sample_log()
+    path = tmp_path / "events.jsonl"
+    log.write_jsonl(path)
+    lines = path.read_text().splitlines()
+    lines[2] = lines[2][:-10]              # truncate mid-object
+    path.write_text("\n".join(lines) + "\n")
+    with pytest.raises(ValueError, match="line 3 is not valid JSON"):
+        EventLog.from_jsonl(path)
+
+
+def test_missing_field_names_line_number(tmp_path):
+    path = tmp_path / "events.jsonl"
+    good = {"t": 0.0, "actor": "a", "action": "x", "detail": {}}
+    bad = {"t": 1.0, "actor": "a", "detail": {}}          # no action
+    path.write_text(json.dumps(good) + "\n" + json.dumps(bad) + "\n")
+    with pytest.raises(ValueError, match=r"line 2.*\['action'\]"):
+        EventLog.from_jsonl(path)
+
+
+def test_non_object_line_and_detail_rejected(tmp_path):
+    path = tmp_path / "events.jsonl"
+    path.write_text("[1, 2, 3]\n")
+    with pytest.raises(ValueError, match="line 1.*list, not an event"):
+        EventLog.from_jsonl(path)
+    path.write_text('{"t": 0.0, "actor": "a", "action": "x", '
+                    '"detail": "oops"}\n')
+    with pytest.raises(ValueError, match="line 1.*non-object 'detail'"):
+        EventLog.from_jsonl(path)

@@ -1,0 +1,312 @@
+"""Replicated serving fabric: router determinism and byte-identity vs the
+single scheduler (including forced replica preemption with prefix
+re-prefill), least-pages routing with spill-over, drain/remove lifecycle,
+heartbeat wiring, per-replica page-plan splits, and the shared Request
+lifecycle through the static engine."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS, REDUCED
+from repro.core.blueprint import serving_page_plan
+from repro.core.heartbeat import HeartbeatMonitor
+from repro.models import model as M
+from repro.serving import engine as E
+from repro.serving.request import (Request, RequestState, make_request,
+                                   worst_case_pages)
+from repro.serving.router import ServingRouter
+from repro.serving.scheduler import ContinuousBatchingScheduler
+
+CFG = dataclasses.replace(REDUCED["qwen3-32b"], dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init(CFG, jax.random.PRNGKey(0))
+
+
+def _trace(rng, lens, gens):
+    prompts = [rng.randint(0, CFG.vocab_size, size=n).astype(np.int32)
+               for n in lens]
+    return list(zip(prompts, gens))
+
+
+def _reference_tokens(cfg, params, trace, max_seq=64):
+    s = ContinuousBatchingScheduler(cfg, params, max_slots=2, page_size=8,
+                                    max_seq_len=max_seq)
+    reqs = [s.submit(p, g, arrival_step=i)
+            for i, (p, g) in enumerate(trace)]
+    s.run()
+    return [r.out_tokens for r in reqs]
+
+
+# ------------------------------------------------------- request lifecycle --
+
+def test_request_states_and_validation():
+    r = make_request(0, [1, 2, 3], 4, arrival_step=2)
+    assert r.state is RequestState.WAITING and r.plen == 3
+    assert r.remaining_tokens == 4
+    assert worst_case_pages(r, 4) == 2          # ceil((3+4)/4)
+    r.admit_step = 3
+    r.out_tokens.append(11)
+    assert r.state is RequestState.ACTIVE and r.remaining_tokens == 3
+    r.out_tokens.extend([12, 13, 14])
+    assert r.done and r.state is RequestState.FINISHED
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        make_request(1, [1], 0)
+
+
+def test_static_engine_shared_request_lifecycle(params):
+    """serve_requests fills the same bookkeeping the scheduler does, on a
+    serial group clock (group n+1 admits after group n's longest)."""
+    rng = np.random.RandomState(0)
+    reqs = [make_request(i, rng.randint(0, CFG.vocab_size, size=5), g)
+            for i, g in enumerate([4, 7, 3, 5])]
+    E.serve_requests(CFG, params, reqs, batch_width=2)
+    assert all(r.state is RequestState.FINISHED for r in reqs)
+    assert all(len(r.out_tokens) == r.max_new_tokens for r in reqs)
+    # group 0 = reqs[0:2] admits at 0, decodes max(4,7)=7 ticks
+    assert reqs[0].admit_step == 0 and reqs[1].admit_step == 0
+    assert reqs[0].finish_step == 4 and reqs[1].finish_step == 7
+    assert reqs[2].admit_step == 7          # head-of-line blocked by group 0
+    assert reqs[3].finish_step == 12
+
+
+# ------------------------------------------------------ fleet token parity --
+
+def test_fleet_tokens_identical_to_single_scheduler(params):
+    """Acceptance: fixed seed, dense arch — the k-replica fabric emits
+    byte-identical tokens per request vs the single-replica scheduler."""
+    rng = np.random.RandomState(0)
+    trace = _trace(rng, (5, 9, 7, 11, 6, 8), (6, 8, 5, 7, 4, 9))
+    want = _reference_tokens(CFG, params, trace)
+
+    router = ServingRouter(CFG, params, replicas=2, max_slots=1,
+                           page_size=8, max_seq_len=64)
+    reqs = [router.submit(p, g, arrival_step=i)
+            for i, (p, g) in enumerate(trace)]
+    done = router.run()
+    assert len(done) == len(trace)
+    assert [r.out_tokens for r in reqs] == want
+    # both replicas actually served traffic
+    stats = router.fleet_stats()["per_replica"]
+    assert all(s["prefills"] > 0 for s in stats.values())
+    # fleet-clock latency bookkeeping is filled in
+    assert all(r.finish_step is not None and
+               r.finish_step >= r.arrival_step for r in reqs)
+
+
+def test_fleet_tokens_identical_after_preemption(params):
+    """Acceptance: one forced replica preemption mid-run; the lost streams
+    re-prefill (prompt + emitted tokens) on survivors, token-identical."""
+    rng = np.random.RandomState(1)
+    trace = _trace(rng, (5, 9, 7, 11), (12, 14, 10, 13))
+    want = _reference_tokens(CFG, params, trace)
+
+    router = ServingRouter(CFG, params, replicas=2, max_slots=1,
+                           page_size=8, max_seq_len=64)
+    reqs = [router.submit(p, g) for p, g in trace]
+    for _ in range(5):
+        router.step(max_fuse=1)             # force mid-flight state
+    victim = max(router.replicas)
+    assert router.replicas[victim].num_unfinished > 0
+    rerouted = router.fail_replica(victim)
+    assert rerouted and router.stats["reroutes"] == len(rerouted)
+    router.add_replica()                    # replacement capacity
+    router.run(max_fuse=1)
+    assert [r.out_tokens for r in reqs] == want
+    assert any(r.reroutes > 0 for r in reqs)
+    for rep in router.replicas.values():    # allocator hygiene fleet-wide
+        assert rep.sched.alloc.num_allocated == 0
+        assert rep.sched.reserved_pages == 0
+
+
+def test_fleet_tokens_identical_after_preemption_ssm_hybrid():
+    """Same preemption re-route property through the SSM dense-state path
+    (jamba hybrid): a re-prefilled prefix folds the SSM state exactly."""
+    cfg = dataclasses.replace(REDUCED["jamba-v0.1-52b"], dtype="float32")
+    p = M.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(2)
+    prompts = [rng.randint(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (4, 6, 5)]
+    gens = [8, 9, 7]
+    trace = list(zip(prompts, gens))
+    want = _reference_tokens(cfg, p, trace, max_seq=32)
+
+    router = ServingRouter(cfg, p, replicas=2, max_slots=1, page_size=8,
+                           max_seq_len=32)
+    reqs = [router.submit(pr, g) for pr, g in trace]
+    for _ in range(3):
+        router.step(max_fuse=1)
+    victim = max(router.replicas)
+    assert router.replicas[victim].num_unfinished > 0
+    router.fail_replica(victim)
+    router.run(max_fuse=1)
+    assert [r.out_tokens for r in reqs] == want
+
+
+# ---------------------------------------------------------------- routing --
+
+def test_least_pages_routing_deterministic_tiebreak(params):
+    router = ServingRouter(CFG, params, replicas=3, max_slots=2,
+                           page_size=8, max_seq_len=64)
+    rng = np.random.RandomState(3)
+    r1 = router.submit(rng.randint(0, CFG.vocab_size, size=8), 8)
+    router.route_due()
+    assert r1.replica == 0                  # all-equal load -> lowest id
+    r2 = router.submit(rng.randint(0, CFG.vocab_size, size=8), 8)
+    router.route_due()
+    assert r2.replica == 1                  # replica 0 now holds reserved
+    r3 = router.submit(rng.randint(0, CFG.vocab_size, size=20), 8)
+    router.route_due()
+    assert r3.replica == 2
+
+
+def test_round_robin_routing(params):
+    router = ServingRouter(CFG, params, replicas=2, max_slots=2,
+                           page_size=8, max_seq_len=64,
+                           route_policy="round-robin")
+    rng = np.random.RandomState(4)
+    reqs = [router.submit(rng.randint(0, CFG.vocab_size, size=4), 2)
+            for _ in range(4)]
+    router.route_due()
+    assert [r.replica for r in reqs] == [0, 1, 0, 1]
+
+
+def test_admission_spillover_to_larger_pool(params):
+    """The least-loaded replica's pool can never hold the request: it must
+    spill to the next candidate rather than queue unservable work."""
+    router = ServingRouter(CFG, params, replicas=1, max_slots=2,
+                           page_size=8, num_pages=4, max_seq_len=64)
+    router.add_replica(num_pages=17)        # heterogeneous fleet member
+    rng = np.random.RandomState(5)
+    big = router.submit(rng.randint(0, CFG.vocab_size, size=40), 16)
+    router.route_due()
+    assert big.replica == 1 and router.stats["spillovers"] == 1
+    # a request no fleet member could ever hold still fails at submit
+    with pytest.raises(ValueError, match="no replica"):
+        router.submit(rng.randint(0, CFG.vocab_size, size=40), 30)
+    router.run()
+    assert len(big.out_tokens) == 16
+
+
+def test_reserved_page_imbalance_under_25_percent(params):
+    """Acceptance: least-pages routing keeps steady-state reserved-page
+    imbalance across replicas <= 25% on a mixed-length trace."""
+    rng = np.random.RandomState(6)
+    router = ServingRouter(CFG, params, replicas=2, max_slots=2,
+                           page_size=8, max_seq_len=64)
+    for i in range(16):
+        plen = int(rng.randint(4, 17))
+        gen = int(rng.randint(6, 15))
+        router.submit(rng.randint(0, CFG.vocab_size, size=plen), gen,
+                      arrival_step=i // 2)
+    router.run(max_fuse=1)
+    imb = router.imbalance()
+    assert imb is not None, "fleet never reached a 2-busy-replica steady state"
+    assert imb <= 0.25, f"steady-state imbalance {imb:.3f} > 25%"
+
+
+# ------------------------------------------------------ lifecycle + nodes --
+
+def test_drain_then_remove_and_busy_remove_rejected(params):
+    rng = np.random.RandomState(7)
+    router = ServingRouter(CFG, params, replicas=2, max_slots=1,
+                           page_size=8, max_seq_len=64,
+                           placement=["slave-0", "slave-1"])
+    reqs = [router.submit(rng.randint(0, CFG.vocab_size, size=5), 6)
+            for _ in range(4)]
+    router.step(max_fuse=1)
+    router.drain_replica(1)
+    with pytest.raises(RuntimeError, match="drain it first"):
+        router.remove_replica(1)
+    router.run(max_fuse=1)                  # drained replica finishes work
+    assert all(r.done for r in reqs)
+    assert router.remove_replica(1) == "slave-1"
+    assert router.stats["reroutes"] == 0    # drain never re-routes
+    # fleet totals survive the removal
+    assert router.fleet_stats()["tokens_out"] == sum(
+        r.max_new_tokens for r in reqs)
+
+
+def test_heartbeat_death_fails_host_replicas(params):
+    """monitor.on_dead -> router.fail_host: replicas on the dead host are
+    failed and their streams finish elsewhere."""
+    rng = np.random.RandomState(8)
+    router = ServingRouter(CFG, params, replicas=2, max_slots=2,
+                           page_size=8, max_seq_len=64,
+                           placement=["slave-0", "slave-1"])
+    monitor = HeartbeatMonitor()
+    monitor.register("slave-0", now=0.0)
+    monitor.register("slave-1", now=0.0)
+    monitor.on_dead(router.fail_host)
+    reqs = [router.submit(rng.randint(0, CFG.vocab_size, size=6), 8)
+            for _ in range(4)]
+    router.step(max_fuse=1)
+    monitor.beat("slave-0", now=100.0)
+    monitor.check(100.0)                    # slave-1 silent past dead_after
+    assert [r.hostname for r in router.replicas.values()] == ["slave-0"]
+    router.run(max_fuse=1)
+    assert all(len(r.out_tokens) == r.max_new_tokens for r in reqs)
+
+
+# ----------------------------------------------- per-replica plan + Ambari --
+
+def test_page_plan_replica_split_all_archs():
+    """Satellite sweep: every paged-servable arch gets a coherent
+    per-replica split — each replica's pool covers its slot budget's
+    worst-case reservations (pages >= reservation floor for min slots)."""
+    mesh = {"model": 8, "data": 4}
+    covered = 0
+    for name, cfg in ARCHS.items():
+        for k in (1, 2, 4):
+            plan = serving_page_plan(cfg, SHAPES["decode_32k"], mesh,
+                                     replicas=k)
+            if plan is None:                 # MLA / enc-dec / pure-SSM
+                assert cfg.attn_impl == "mla" or cfg.is_encdec or all(
+                    cfg.block_kind(i) == "ssm"
+                    for i in range(cfg.n_layers)), name
+                continue
+            covered += 1
+            assert plan["replicas"] == k
+            assert plan["slots_per_replica"] >= plan["min_slots"], name
+            # reservation floor: the pool admits slots_per_replica
+            # full-length sequences, sink page included
+            floor = (plan["slots_per_replica"] * plan["pages_per_seq"] + 1
+                     if plan["slots_per_replica"] else 0)
+            assert plan["pages_per_replica"] >= floor, (name, k, plan)
+            assert plan["pages_per_replica"] >= plan["min_pages"], (name, k)
+            assert plan["max_replicas"] >= plan["min_slots"], name
+            # max_replicas is the largest in-budget fleet: every replica
+            # pays one full-length reservation + its own sink page
+            mr = plan["max_replicas"]
+            assert mr * (plan["pages_per_seq"] + 1) <= plan["num_pages"]
+            assert (mr + 1) * (plan["pages_per_seq"] + 1) > plan["num_pages"]
+    assert covered > 0
+
+
+def test_provision_serving_with_replicas():
+    from repro.core.provisioner import ClusterProvisioner
+    from repro.core.services import AmbariServer
+    from repro.core.simcloud import SimCloud
+    cloud = SimCloud(seed=11)
+    cloud.register_key("AK", "SK")
+    prov = ClusterProvisioner(cloud, region="us-east-1", access_key_id="AK",
+                              secret_key="SK")
+    cluster = prov.provision(n_slaves=2)
+    server = AmbariServer(cloud, cluster)
+    svc = server.provision_serving(ARCHS["qwen3-32b"], SHAPES["decode_32k"],
+                                   {"model": 8, "data": 4}, replicas=3)
+    cfgd = svc.config
+    assert cfgd["replicas"] == 3
+    assert cfgd["replica_placement"] == ["slave-0", "slave-1", "slave-0"]
+    assert cfgd["pages_per_replica"] >= cfgd["pages_per_seq"] + 1
+    assert cfgd["slots_per_replica"] >= 1
+    # the install event records the fleet width
+    evt = [e for e in cluster.log.events
+           if e.action == "install_service" and
+           e.detail.get("service") == "serve"][-1]
+    assert evt.detail["replicas"] == 3
