@@ -104,6 +104,9 @@ class FleetController:
         return [r for r in self.router.replicas.values()
                 if r.draining and not r.failed]
 
+    def _hit_rate(self) -> float:
+        return self.router.prefix_hit_rate()
+
     # ---------------------------------------------------- inner controllers --
     def _attach_inner(self, rep: ServingReplica) -> None:
         if self.replica_bands is None:
@@ -127,6 +130,12 @@ class FleetController:
             "fleet_demand": float(demand),
             "demand_per_replica": demand / max(len(live), 1),
             "fleet_queue": float(self.router.pending_due),
+            # prefix-cache hit rate scales each replica's effective
+            # capacity: a hit skips the shared prefill and shares pages, so
+            # at a given hit rate the same fleet absorbs more demand before
+            # the ladder trips — see docs/autoscaling.md for retuning the
+            # demand thresholds under shared-prefix traffic
+            "fleet_hit_rate": self._hit_rate(),
         }
         self.bus.record(self.now, sample)
         if self.router.step_idx >= self._next_eval:
@@ -281,4 +290,5 @@ class FleetController:
                                  default=len(self.router.replicas)),
             "final_replicas": len(self._live()),
             "reroutes": self.router.stats["reroutes"],
+            "prefix_hit_rate": round(self._hit_rate(), 3),
         }

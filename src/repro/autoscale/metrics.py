@@ -35,12 +35,17 @@ def sample_scheduler(sched) -> Dict[str, float]:
         "slots": float(sched.target_slots),
         "slot_occupancy": sched.num_active / max(sched.target_slots, 1),
         "demand": float(sched.num_active + due),
-        "pages_used": float(sched.pages_in_use),
+        # physical occupancy: with the shared-prefix cache a page may back
+        # several sequences, so this counts each page once — the signal the
+        # page autoscaler should track (pressure on the real pool)
+        "pages_used": float(sched.pages_allocated),
         "pages_total": float(pages_total),
-        "page_occupancy": sched.pages_in_use / pages_total,
+        "page_occupancy": sched.pages_allocated / pages_total,
         "reserved_pages": float(sched.reserved_pages),
         "tokens_out": float(sched.stats["tokens_out"]),
         "admit_blocked": float(sched.stats["admit_blocked"]),
+        "prefix_hits": float(sched.stats["prefix_hits"]),
+        "cached_tokens": float(sched.stats["cached_tokens"]),
     }
 
 

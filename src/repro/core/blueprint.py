@@ -183,8 +183,9 @@ def optimized_cfg_overrides(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, A
 
 
 def serving_page_plan(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
-                      page_size: int = 16,
-                      replicas: int = 1) -> Optional[Dict[str, Any]]:
+                      page_size: int = 16, replicas: int = 1,
+                      shared_prefix_len: int = 0,
+                      users_per_prefix: int = 1) -> Optional[Dict[str, Any]]:
     """Size the paged-KV page pool for the continuous-batching scheduler.
 
     The Ambari-style suggested config for the "serve" service
@@ -241,7 +242,7 @@ def serving_page_plan(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
     # largest k whose split stays inside the HBM budget: every replica
     # pays its own sink page on top of one full-length seq's reservation
     max_replicas = num_pages // (pages_per_seq + 1) if max_seqs else 0
-    return {
+    plan = {
         "page_size": page_size,
         "num_pages": num_pages,
         "pages_per_seq": pages_per_seq,
@@ -258,6 +259,28 @@ def serving_page_plan(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
         "pages_per_replica": pages_per_replica,
         "max_replicas": max_replicas,
     }
+    # ---- shared-prefix capacity model (copy-on-write page cache) ----------
+    # with N-way prefix sharing a sequence's *marginal* footprint is its
+    # uncached suffix plus an amortised 1/N share of the prefix chain —
+    # that is what sets concurrency once the scheduler's prefix cache is on
+    # (repro.serving.paged_cache.PrefixIndex), and what the fleet router's
+    # prefix-affinity policy tries to preserve across replicas
+    if shared_prefix_len > 0:
+        if users_per_prefix < 1:
+            raise ValueError("users_per_prefix must be >= 1")
+        prefix_pages = min(-(-shared_prefix_len // page_size), pages_per_seq)
+        eff = (pages_per_seq - prefix_pages
+               + prefix_pages / users_per_prefix)
+        max_shared = int(max(num_pages - 1, 0) // max(eff, 1e-9))
+        plan["shared_prefix"] = {
+            "prefix_len": shared_prefix_len,
+            "users_per_prefix": users_per_prefix,
+            "prefix_pages": prefix_pages,
+            "pages_per_seq_effective": round(eff, 2),
+            "max_concurrent_seqs": max_shared,
+            "page_savings_frac": round(1 - eff / max(pages_per_seq, 1), 3),
+        }
+    return plan
 
 
 def _cache_bytes(cfg: ModelConfig, shape: ShapeConfig) -> int:

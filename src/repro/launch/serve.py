@@ -79,27 +79,89 @@ def run_static(cfg, params, args) -> dict:
     }
 
 
+def persona_workload(vocab_size, rng, personas, users, persona_len,
+                     user_lo, user_hi, gen_lo, gen_hi):
+    """Canonical persona trace: ``personas`` shared system prompts of
+    ``persona_len`` tokens, each carried by ``users`` requests that differ
+    only in a short user suffix — the fleet-chat shape where re-prefilling
+    the persona dominates both prefill FLOPs and page-pool footprint.
+    Requests are grouped by persona (one persona's users arrive as a
+    burst), so a persona's pages stay live across its users' admissions.
+    Shared by the launcher's ``--shared-prefix`` mode and
+    ``benchmarks/serve_bench.py`` so both tools measure the same traffic.
+    """
+    out = []
+    for _ in range(personas):
+        persona = rng.randint(0, vocab_size, size=persona_len)
+        for _ in range(users):
+            ulen = int(rng.randint(user_lo, user_hi + 1))
+            user = rng.randint(0, vocab_size, size=ulen)
+            gen = int(rng.randint(gen_lo, gen_hi + 1))
+            out.append((np.concatenate([persona, user]).astype(np.int32),
+                        gen))
+    return out
+
+
+def make_workload(cfg, rng, args):
+    """(prompt, gen) pairs submitted at ``i // 2`` arrivals.
+
+    Default: independent mixed-length prompts. ``--shared-prefix`` builds
+    the persona trace instead (``persona_workload``) so concurrent streams
+    share their dominant prefix and admission can skip its prefill.
+    """
+    if args.shared_prefix:
+        user_hi = max(args.user_len, 2)
+        out = persona_workload(cfg.vocab_size, rng, args.personas,
+                               args.users_per_persona, args.persona_len,
+                               max(user_hi // 2, 1), user_hi,
+                               max(args.gen // 2, 1), args.gen)
+        # an explicit --requests caps the trace (personas x users otherwise)
+        if args.requests is not None:
+            out = out[:args.requests]
+        return out
+    out = []
+    for _ in range(args.requests if args.requests is not None else 8):
+        plen = int(rng.randint(max(args.prompt_len // 2, 1),
+                               args.prompt_len + 1))
+        gen = int(rng.randint(max(args.gen // 2, 1), args.gen + 1))
+        out.append((rng.randint(0, cfg.vocab_size, size=plen), gen))
+    return out
+
+
+def _max_seq(args) -> int:
+    if args.shared_prefix:
+        return args.persona_len + max(args.user_len, 2) + args.gen + 8
+    return args.prompt_len + args.gen + 8
+
+
+def _prefix_stats(stats: dict) -> dict:
+    out = {"prefix_hits": stats.get("prefix_hits", 0),
+           "cached_tokens": stats.get("cached_tokens", 0),
+           "cow_forks": stats.get("cow_forks", 0)}
+    if stats.get("prefills"):
+        out["prefix_hit_rate"] = round(out["prefix_hits"]
+                                       / stats["prefills"], 3)
+    return out
+
+
 def run_fleet(cfg, params, args) -> dict:
     """Replicated fabric: k scheduler replicas behind one router."""
     from repro.serving.router import ServingRouter
     if not supports_paged(cfg):
         raise SystemExit(f"{cfg.name}: use --engine static (MLA/enc-dec)")
     rng = np.random.RandomState(args.seed)
-    max_seq = args.prompt_len + args.gen + 8
+    max_seq = _max_seq(args)
     start = 1 if args.autoscale else args.replicas
     router = ServingRouter(cfg, params, replicas=start,
                            max_slots=args.batch, page_size=args.page_size,
-                           max_seq_len=max_seq, route_policy=args.router)
+                           max_seq_len=max_seq, route_policy=args.router,
+                           prefix_cache=args.prefix_cache)
     ctl = None
     if args.autoscale:
         from repro.autoscale import FleetController
         ctl = FleetController(router, min_replicas=1,
                               max_replicas=args.replicas, eval_interval=2)
-    for i in range(args.requests):
-        plen = int(rng.randint(max(args.prompt_len // 2, 1),
-                               args.prompt_len + 1))
-        gen = int(rng.randint(max(args.gen // 2, 1), args.gen + 1))
-        prompt = rng.randint(0, cfg.vocab_size, size=plen)
+    for i, (prompt, gen) in enumerate(make_workload(cfg, rng, args)):
         router.submit(prompt, gen, arrival_step=i // 2)
 
     t0 = time.time()
@@ -122,6 +184,7 @@ def run_fleet(cfg, params, args) -> dict:
         "reroutes": fleet["reroutes"],
         "generated": [r.out_tokens[:8] for r in done[:4]],
     }
+    out.update(_prefix_stats(fleet))
     if fleet.get("reserved_page_imbalance") is not None:
         out["reserved_page_imbalance"] = fleet["reserved_page_imbalance"]
     if ctl is not None:
@@ -135,13 +198,13 @@ def run_paged(cfg, params, args) -> dict:
     if not supports_paged(cfg):
         raise SystemExit(f"{cfg.name}: use --engine static (MLA/enc-dec)")
     rng = np.random.RandomState(args.seed)
-    max_seq = args.prompt_len + args.gen + 8
+    max_seq = _max_seq(args)
     n_pg = PC.pages_for_len(max_seq, args.page_size)
     start_slots = 1 if args.autoscale else args.batch
     sched = ContinuousBatchingScheduler(
         cfg, params, max_slots=start_slots, page_size=args.page_size,
         num_pages=start_slots * n_pg + 1 if args.autoscale else None,
-        max_seq_len=max_seq)
+        max_seq_len=max_seq, prefix_cache=args.prefix_cache)
     ctl = None
     if args.autoscale:
         from repro.autoscale import AutoscaleController, CapacityBands
@@ -149,11 +212,7 @@ def run_paged(cfg, params, args) -> dict:
                               min_pages=n_pg + 1,
                               max_pages=args.batch * n_pg + 1)
         ctl = AutoscaleController(sched, bands, eval_interval=2)
-    for i in range(args.requests):
-        plen = int(rng.randint(max(args.prompt_len // 2, 1),
-                               args.prompt_len + 1))
-        gen = int(rng.randint(max(args.gen // 2, 1), args.gen + 1))
-        prompt = rng.randint(0, cfg.vocab_size, size=plen)
+    for i, (prompt, gen) in enumerate(make_workload(cfg, rng, args)):
         sched.submit(prompt, gen, arrival_step=i // 2)
 
     t0 = time.time()
@@ -173,8 +232,10 @@ def run_paged(cfg, params, args) -> dict:
             (toks - sched.stats["prefills"])
             / max(ctl.slot_ticks if ctl is not None
                   else sched.stats["decode_steps"] * args.batch, 1), 3),
+        "peak_pages": sched.stats["peak_pages"],
         "generated": [r.out_tokens[:8] for r in done[:4]],
     }
+    out.update(_prefix_stats(sched.stats))
     if ctl is not None:
         out["autoscale"] = ctl.summary()
         if args.events_out:
@@ -191,16 +252,38 @@ def main() -> None:
                     help="static batch / paged decode slots")
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--requests", type=int, default=8,
-                    help="paged engine: workload size")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="paged engine: workload size (default 8; with "
+                    "--shared-prefix the default is personas x "
+                    "users-per-persona and an explicit value caps it)")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--replicas", type=int, default=1,
                     help="paged engine: serve through the replicated "
                     "fabric with this many scheduler replicas (with "
                     "--autoscale this is the fleet ceiling)")
     ap.add_argument("--router", default="least-pages",
-                    choices=("least-pages", "round-robin"),
-                    help="fabric routing policy (--replicas > 1)")
+                    choices=("least-pages", "round-robin",
+                             "prefix-affinity"),
+                    help="fabric routing policy (--replicas > 1); "
+                    "prefix-affinity sends a request to the replica whose "
+                    "page pool caches its longest prompt prefix")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="paged engine: serve a persona workload "
+                    "(--personas system prompts x --users-per-persona "
+                    "suffixes) so the copy-on-write prefix cache shares "
+                    "each persona's pages and skips its prefill")
+    ap.add_argument("--personas", type=int, default=4,
+                    help="--shared-prefix: distinct shared system prompts")
+    ap.add_argument("--users-per-persona", type=int, default=8,
+                    help="--shared-prefix: concurrent users per persona")
+    ap.add_argument("--persona-len", type=int, default=64,
+                    help="--shared-prefix: tokens per persona prompt")
+    ap.add_argument("--user-len", type=int, default=16,
+                    help="--shared-prefix: max tokens per user suffix")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false", default=None,
+                    help="disable shared-prefix admission (the no-sharing "
+                    "baseline; default: on except MoE archs)")
     ap.add_argument("--autoscale", action="store_true",
                     help="paged engine: start at 1 slot and let the "
                     "autoscale control plane move capacity inside "
@@ -220,6 +303,9 @@ def main() -> None:
     if args.replicas > 1 and args.engine != "paged":
         ap.error("--replicas requires --engine paged (the fabric routes "
                  "over paged schedulers)")
+    if args.shared_prefix and args.engine != "paged":
+        ap.error("--shared-prefix requires --engine paged (only the paged "
+                 "cache can share prefix pages)")
     if args.replicas < 1:
         ap.error("--replicas must be >= 1")
 

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -113,7 +114,13 @@ def init_params(schema: Any, key: jax.Array, dtype: Optional[str] = None) -> Any
     """Materialise concrete parameters (smoke tests / examples only)."""
 
     def init_one(path, spec: ParamSpec):
-        k = jax.random.fold_in(key, hash("/".join(path)) % (2**31))
+        # crc32, not builtin hash(): str hashing is salted per process
+        # (PYTHONHASHSEED), which made every process draw *different*
+        # parameters from the same PRNG key — the source of cross-process
+        # flakiness in the fp32 token-identity tests, and a lie in every
+        # "--seed drives parameter init" claim. crc32 is stable everywhere.
+        k = jax.random.fold_in(key,
+                               zlib.crc32("/".join(path).encode()) % (2**31))
         dt = jnp.dtype(dtype or spec.dtype)
         if spec.init == "zeros":
             return jnp.zeros(spec.shape, dt)

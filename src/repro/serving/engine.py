@@ -163,5 +163,11 @@ def serve_requests(cfg: ModelConfig, params, requests: List[Request],
             r.out_tokens = ([int(first[j, 0])]
                             + [int(t) for t in out[j]])[:r.max_new_tokens]
             r.finish_step = clock + r.max_new_tokens
+            # same hit/miss bookkeeping the paged scheduler fills in: a
+            # fixed-batch engine re-prefills every prompt in full, so every
+            # request is a miss — keeping the field comparable lets
+            # paged-vs-static token-identity checks run on shared-prefix
+            # workloads without special-casing the baseline
+            r.cached_tokens = 0
         clock += gen                      # group decodes until longest done
     return requests

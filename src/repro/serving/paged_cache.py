@@ -25,9 +25,17 @@ Layout invariants
 SSM layers need no paging (their state is O(1) per sequence); they keep a
 dense ``(max_slots, ...)`` state row per scheduler slot in the same cache
 pytree, so hybrid archs (jamba, mamba2) flow through the same decode step.
+
+Shared prefixes: pages carry refcounts, ``PrefixIndex`` maps token-hash
+chains of in-flight prompts to the pages holding their K/V, and
+``copy_page`` is the copy-on-write fork for a sequence diverging inside a
+shared page — see docs/serving.md "Shared prefixes" for the state diagram
+and the admission contract built on top in ``repro.serving.scheduler``.
 """
 from __future__ import annotations
 
+import dataclasses
+import hashlib
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -51,18 +59,27 @@ def pages_for_len(n_tokens: int, page_size: int) -> int:
 
 
 class PageAllocator:
-    """Host-side free-list allocator over the shared page-id space.
+    """Host-side refcounted free-list allocator over the shared page-id space.
 
     One allocator serves every layer: layer pools are shaped identically, so
     page id ``p`` addresses the same slot in each. Page 0 (the sink) is
     never handed out.
+
+    Pages are *refcounted* so the prefix cache can share one physical page
+    between sequences: ``alloc`` hands out pages at refcount 1, ``share``
+    adds an owner, and ``free`` drops one reference per page — a shared page
+    survives until its last owner releases it. ``on_free`` (when set) fires
+    once per page as its refcount reaches zero, before the page re-enters
+    the free list; the scheduler wires it to prefix-index invalidation.
     """
 
     def __init__(self, num_pages: int):
         assert num_pages >= 2, "need at least one allocatable page + sink"
         self.num_pages = num_pages
         self._free: List[int] = list(range(num_pages - 1, SINK_PAGE, -1))
-        self._owner: Dict[int, Any] = {}
+        self._owner: Dict[int, Any] = {}      # page -> first owner (debug aid)
+        self._ref: Dict[int, int] = {}        # page -> live reference count
+        self.on_free = None                   # callback(page_id) at ref == 0
 
     @property
     def num_free(self) -> int:
@@ -70,7 +87,11 @@ class PageAllocator:
 
     @property
     def num_allocated(self) -> int:
-        return len(self._owner)
+        return len(self._ref)
+
+    def ref(self, page: int) -> int:
+        """Live reference count of ``page`` (0 if free/retired)."""
+        return self._ref.get(page, 0)
 
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
@@ -83,15 +104,48 @@ class PageAllocator:
         out = [self._free.pop() for _ in range(n)]
         for p in out:
             self._owner[p] = owner
+            self._ref[p] = 1
         return out
 
+    def share(self, pages: List[int]) -> None:
+        """Add one reference per page (prefix sharing across sequences)."""
+        for p in pages:
+            if p == SINK_PAGE:
+                raise ValueError("sink page cannot be shared")
+            if p not in self._ref:
+                raise ValueError(f"cannot share unallocated page {p}")
+        for p in pages:
+            self._ref[p] += 1
+
     def free(self, pages: List[int]) -> None:
+        """Drop one reference per page; pages reaching refcount 0 return to
+        the free list (or retire into a pending shrink).
+
+        Raises on the sink page, on a page with no live reference, and on a
+        duplicate page id within one call (one owner releasing the same
+        page twice in a single ``free`` is always a caller bug — with
+        refcounts it would silently steal another owner's reference).
+        Validation runs before any mutation, so a raising call leaves the
+        allocator untouched.
+        """
+        seen = set()
         for p in pages:
             if p == SINK_PAGE:
                 raise ValueError("sink page cannot be freed")
-            if p not in self._owner:
+            if p not in self._ref:
                 raise ValueError(f"double free of page {p}")
-            del self._owner[p]
+            if p in seen:
+                raise ValueError(
+                    f"page {p} appears twice in one free() call")
+            seen.add(p)
+        for p in pages:
+            self._ref[p] -= 1
+            if self._ref[p]:
+                continue                      # surviving sharers
+            del self._ref[p]
+            self._owner.pop(p, None)
+            if self.on_free is not None:
+                self.on_free(p)
             if p < self._shrink_target:
                 self._free.append(p)
             # else: the page is being retired by a pending shrink
@@ -117,7 +171,7 @@ class PageAllocator:
         old_target = min(self._shrink_target, self.num_pages)
         in_free = set(self._free)
         self._free.extend(p for p in range(old_target, self.num_pages)
-                          if p not in self._owner and p not in in_free)
+                          if p not in self._ref and p not in in_free)
         self._shrink_target = 1 << 62
         self._free.extend(range(self.num_pages, new_num_pages))
         self.num_pages = new_num_pages
@@ -132,7 +186,7 @@ class PageAllocator:
         if new_num_pages > old:
             in_free = set(self._free)
             self._free.extend(p for p in range(old, new_num_pages)
-                              if p not in self._owner
+                              if p not in self._ref
                               and p not in in_free)
         # relaxing all the way back to the pool size is a cancellation, not
         # a pending shrink — leave no stale target behind
@@ -141,8 +195,9 @@ class PageAllocator:
         self._free = [p for p in self._free if p < new_num_pages]
 
     def shrink_ready(self) -> bool:
+        # a page with live sharers (ref > 0) always blocks the shrink
         return self.shrink_pending and all(p < self._shrink_target
-                                           for p in self._owner)
+                                           for p in self._ref)
 
     def complete_shrink(self) -> int:
         """Finish a drained shrink; returns the new pool size."""
@@ -160,6 +215,232 @@ class PageAllocator:
     def capacity(self) -> int:
         """Allocatable pages after any pending shrink lands (minus sink)."""
         return self.effective_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# prefix index: token-hash -> page chain (shared-prefix cache)
+# ---------------------------------------------------------------------------
+
+def _digest(tokens: np.ndarray) -> bytes:
+    return hashlib.blake2b(np.ascontiguousarray(tokens, np.int32).tobytes(),
+                           digest_size=16).digest()
+
+
+def _boundary_digests(prompt: np.ndarray, n_full: int,
+                      page_size: int) -> List[bytes]:
+    """``_digest(prompt[:k * page_size])`` for k = 1..n_full, computed in
+    one O(plen) pass: blake2b over concatenated page chunks equals the
+    one-shot hash of the whole prefix, so keys are identical to per-prefix
+    digests without re-hashing O(plen^2 / page_size) bytes per admission."""
+    arr = np.ascontiguousarray(prompt, np.int32)
+    h = hashlib.blake2b(digest_size=16)
+    out = []
+    for k in range(n_full):
+        h.update(arr[k * page_size:(k + 1) * page_size].tobytes())
+        out.append(h.copy().digest())
+    return out
+
+
+@dataclasses.dataclass
+class PrefixHit:
+    """Result of a prefix lookup, pre-capped at ``limit`` tokens.
+
+    ``full_pages`` hold exactly ``len(full_pages) * page_size`` matched
+    tokens and are shared as-is (refcount++). ``tail_page`` (if any) holds
+    ``tail_len`` further matched tokens mid-page; the admitting sequence
+    copy-on-write forks it before writing its own tokens into the same
+    page. ``state`` is the SSM slot state at ``length`` for hybrid archs.
+    """
+    length: int                       # total cached tokens usable
+    full_pages: List[int]
+    tail_page: Optional[int] = None
+    tail_len: int = 0
+    state: Any = None
+
+
+@dataclasses.dataclass(eq=False)          # identity equality: fields hold arrays
+class _Entry:
+    kind: str                         # "full" | "tail" | "exact"
+    key: bytes
+    tokens: np.ndarray                # the exact token prefix this entry maps
+    pages: List[int]                  # page chain backing those tokens
+    state: Any = None                 # SSM slot state at len(tokens) ("exact")
+    dead: bool = False
+
+
+class PrefixIndex:
+    """Token-hash → page-chain index over the *in-flight* page pool.
+
+    Entries reference pages owned by live sequences (the index holds no
+    refcount of its own): the allocator's ``on_free`` hook invalidates
+    every entry touching a page the moment its last owner releases it, so
+    a hit can always be shared safely. Three entry kinds:
+
+    * ``full`` — a full-page-aligned prefix (``k * page_size`` tokens →
+      ``k`` pages), keyed by the token hash. The workhorse for dense archs.
+    * ``tail`` — up to ``page_size - 1`` extra tokens inside the page after
+      a ``full`` boundary; matched by longest-common-prefix so sequences
+      that diverge *inside* a page still share it (COW on the hit side).
+    * ``exact`` — a whole prompt with an SSM state snapshot at its length;
+      hybrid archs can only resume from positions where a state exists, so
+      their hits are exact-entry matches rather than per-page ones.
+
+    A match must cover at least one full page (``page_size`` tokens):
+    shorter overlaps are not worth a fork and keep accidental sharing out
+    of unrelated workloads.
+    """
+
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        self._full: Dict[bytes, _Entry] = {}
+        self._tails: Dict[bytes, List[_Entry]] = {}
+        self._exact: Dict[bytes, _Entry] = {}
+        self._exact_lens: Dict[int, int] = {}     # length -> entry count
+        self._by_page: Dict[int, List[_Entry]] = {}
+
+    def __len__(self) -> int:
+        return len(self._full) + len(self._exact) + sum(
+            len(v) for v in self._tails.values())
+
+    # ----------------------------------------------------------- insert --
+    def _track(self, e: _Entry) -> None:
+        for p in e.pages:
+            self._by_page.setdefault(p, []).append(e)
+
+    def insert(self, prompt: np.ndarray, pages: List[int],
+               state: Any = None) -> None:
+        """Index a freshly prefilled prompt's page chain.
+
+        With ``state`` (hybrid archs) one ``exact`` entry is added at the
+        full prompt length. Without it, one ``full`` entry per page
+        boundary plus a ``tail`` entry for the mid-page remainder; existing
+        entries win ties (they are already shared more broadly).
+        """
+        ps = self.page_size
+        plen = int(prompt.shape[0])
+        if state is not None:
+            key = _digest(prompt)
+            if key in self._exact and not self._exact[key].dead:
+                return
+            e = _Entry("exact", key, np.array(prompt, np.int32),
+                       list(pages[:pages_for_len(plen, ps)]), state=state)
+            self._exact[key] = e
+            self._exact_lens[plen] = self._exact_lens.get(plen, 0) + 1
+            self._track(e)
+            return
+        n_full = plen // ps
+        keys = _boundary_digests(prompt, n_full, ps)
+        for k in range(1, n_full + 1):
+            key = keys[k - 1]
+            if key in self._full and not self._full[key].dead:
+                continue
+            e = _Entry("full", key, np.array(prompt[:k * ps], np.int32),
+                       list(pages[:k]))
+            self._full[key] = e
+            self._track(e)
+        rem = plen % ps
+        if rem and n_full >= 1:
+            key = keys[n_full - 1]
+            tails = self._tails.setdefault(key, [])
+            tail = np.array(prompt[n_full * ps:], np.int32)
+            for t in tails:
+                if not t.dead and t.tokens.shape == tail.shape \
+                        and bool(np.all(t.tokens == tail)):
+                    return
+            e = _Entry("tail", key, tail, [pages[n_full]])
+            tails.append(e)
+            self._track(e)
+
+    # ----------------------------------------------------------- lookup --
+    def lookup(self, prompt: np.ndarray, *, limit: Optional[int] = None,
+               need_state: bool = False) -> Optional[PrefixHit]:
+        """Longest cached prefix of ``prompt``, capped at ``limit`` tokens
+        (callers cap at ``plen - 1`` so a hit always leaves at least one
+        suffix token to produce the first output logits from)."""
+        ps = self.page_size
+        plen = int(prompt.shape[0])
+        limit = plen if limit is None else min(limit, plen)
+        if need_state:
+            for L in sorted(self._exact_lens, reverse=True):
+                if L > limit or L < ps:
+                    continue
+                e = self._exact.get(_digest(prompt[:L]))
+                if e is None or e.dead or not bool(
+                        np.all(e.tokens == prompt[:L])):
+                    continue
+                n_full, rem = L // ps, L % ps
+                return PrefixHit(
+                    length=L, full_pages=list(e.pages[:n_full]),
+                    tail_page=e.pages[n_full] if rem else None,
+                    tail_len=rem, state=e.state)
+            return None
+        keys = _boundary_digests(prompt, limit // ps, ps)
+        for k in range(limit // ps, 0, -1):
+            e = self._full.get(keys[k - 1])
+            if e is None or e.dead or not bool(
+                    np.all(e.tokens == prompt[:k * ps])):
+                continue
+            hit = PrefixHit(length=k * ps, full_pages=list(e.pages))
+            room = limit - k * ps
+            best = 0
+            for t in self._tails.get(e.key, []):
+                if t.dead:
+                    continue
+                n = min(len(t.tokens), room)
+                lcp = int(np.argmin(np.concatenate(
+                    [t.tokens[:n] == prompt[k * ps:k * ps + n], [False]])))
+                if lcp > best:
+                    best, hit.tail_page = lcp, t.pages[0]
+            hit.tail_len = best
+            hit.length += best
+            return hit
+        return None
+
+    def match_len(self, prompt: np.ndarray, *, limit: Optional[int] = None,
+                  need_state: bool = False) -> int:
+        """Length of the longest cached prefix (0 on miss) — the router's
+        prefix-affinity signal; never mutates the index."""
+        hit = self.lookup(prompt, limit=limit, need_state=need_state)
+        return hit.length if hit else 0
+
+    # ------------------------------------------------------- invalidation --
+    def invalidate_page(self, page: int) -> None:
+        """Drop every entry whose chain contains ``page`` (wired to
+        ``PageAllocator.on_free``: the page's last owner just released it,
+        so its contents are about to be recycled)."""
+        for e in self._by_page.pop(page, []):
+            if e.dead:
+                continue
+            e.dead = True
+            if e.kind == "full":
+                if self._full.get(e.key) is e:
+                    del self._full[e.key]
+            elif e.kind == "exact":
+                if self._exact.get(e.key) is e:
+                    del self._exact[e.key]
+                    n = self._exact_lens[len(e.tokens)] - 1
+                    if n:
+                        self._exact_lens[len(e.tokens)] = n
+                    else:
+                        del self._exact_lens[len(e.tokens)]
+            else:
+                tails = self._tails.get(e.key, [])
+                if e in tails:
+                    tails.remove(e)
+                if not tails:
+                    self._tails.pop(e.key, None)
+
+    def clear(self) -> None:
+        for e in list(self._full.values()) + list(self._exact.values()):
+            e.dead = True
+        for tails in self._tails.values():
+            for e in tails:
+                e.dead = True
+        self._full.clear()
+        self._tails.clear()
+        self._exact.clear()
+        self._exact_lens.clear()
+        self._by_page.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -305,6 +586,105 @@ def write_prefill(cfg: ModelConfig, paged: Any, pre: Any, block_row,
                 for k in node}
 
     return walk(paged, pre, False)
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write fork + SSM slot views (shared-prefix machinery)
+# ---------------------------------------------------------------------------
+
+def _is_attn(node: Any) -> bool:
+    return isinstance(node, dict) and "k_pages" in node
+
+
+def _is_ssm(node: Any) -> bool:
+    return isinstance(node, dict) and "h" in node and "conv" in node
+
+
+def copy_page(cache: Any, src, dst) -> Any:
+    """COW fork: copy page ``src``'s contents into page ``dst`` in every
+    attention pool leaf (all layers). Jit with the cache donated — the fork
+    happens between decode ticks, exactly like a prefill insert."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+
+    def walk(node: Any, stacked: bool) -> Any:
+        if _is_attn(node):
+            axis = 1 if stacked else 0
+            out = dict(node)
+            for k in PAGE_LEAVES:
+                if k not in node:
+                    continue
+                leaf = node[k]
+                row = jax.lax.dynamic_index_in_dim(leaf, src, axis=axis)
+                out[k] = jax.lax.dynamic_update_index_in_dim(
+                    leaf, row, dst, axis=axis)
+            return out
+        if _is_ssm(node):
+            return node
+        return {k: walk(node[k], stacked or k == "stack") for k in node}
+
+    return walk(cache, False)
+
+
+def extract_ssm_state(pre: Any) -> Any:
+    """Pull the SSM leaves (batch-1 state at the prefilled length) out of a
+    prefill-produced cache (or of a stepped ``ssm_slot_view``) — the
+    snapshot a hybrid prefix-index entry stores. Returns None when the arch
+    has no SSM layers."""
+    def walk(node: Any) -> Any:
+        if not isinstance(node, dict):
+            return None
+        if _is_ssm(node):
+            return dict(node)
+        out = {k: walk(v) for k, v in node.items()}
+        out = {k: v for k, v in out.items() if v is not None}
+        return out or None
+    return walk(pre)
+
+
+def ssm_slot_view(cache: Any, state: Any) -> Any:
+    """Batch-1 view of the cache for sequential suffix decode: attention
+    pools shared as-is (the block-table row selects pages), SSM leaves
+    replaced by ``state`` (a batch-1 snapshot). ``state=None`` (pure-attn
+    or MoE archs) returns the cache unchanged."""
+    if state is None:
+        return cache
+
+    def walk(node: Any, snode: Any) -> Any:
+        if _is_attn(node):
+            return node
+        if _is_ssm(node):
+            return {k: snode[k].astype(node[k].dtype) for k in node}
+        return {k: walk(node[k], snode.get(k) if snode else None)
+                for k in node}
+
+    return walk(cache, state)
+
+
+def merge_ssm_slot(cache: Any, view: Any, slot) -> Any:
+    """Fold a stepped batch-1 view back: attention pools are taken from the
+    view (they were updated in place), SSM leaves written at ``slot``."""
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def walk(node: Any, vnode: Any, stacked: bool) -> Any:
+        if _is_attn(node):
+            return vnode
+        if _is_ssm(node):
+            out = {}
+            for k in node:
+                val = vnode[k].astype(node[k].dtype)
+                if stacked:
+                    out[k] = jax.vmap(
+                        lambda buf, v: jax.lax.dynamic_update_index_in_dim(
+                            buf, v, slot, axis=0))(node[k], val[:, 0])
+                else:
+                    out[k] = jax.lax.dynamic_update_index_in_dim(
+                        node[k], val[0], slot, axis=0)
+            return out
+        return {k: walk(node[k], vnode[k], stacked or k == "stack")
+                for k in node}
+
+    return walk(cache, view, False)
 
 
 # ---------------------------------------------------------------------------

@@ -38,11 +38,12 @@ class ServingReplica:
     @classmethod
     def build(cls, cfg, params, replica_id: int, *, max_slots: int = 4,
               page_size: int = 16, num_pages: Optional[int] = None,
-              max_seq_len: int = 512,
+              max_seq_len: int = 512, prefix_cache: Optional[bool] = None,
               hostname: Optional[str] = None) -> "ServingReplica":
         sched = ContinuousBatchingScheduler(
             cfg, params, max_slots=max_slots, page_size=page_size,
-            num_pages=num_pages, max_seq_len=max_seq_len)
+            num_pages=num_pages, max_seq_len=max_seq_len,
+            prefix_cache=prefix_cache)
         return cls(replica_id, sched, hostname=hostname)
 
     # -------------------------------------------------------------- state --
@@ -70,6 +71,11 @@ class ServingReplica:
         ps = self.sched.page_size
         queued = sum(worst_case_pages(r, ps) for r in self.sched.waiting)
         return self.sched.reserved_pages + queued
+
+    def prefix_match_len(self, prompt) -> int:
+        """Tokens of ``prompt`` already cached in this replica's page pool —
+        the router's prefix-affinity routing signal."""
+        return self.sched.prefix_match_len(prompt)
 
     def fits(self, req: Request) -> bool:
         """Could this replica *ever* admit the request (spill-over check)?"""
@@ -118,7 +124,10 @@ class ServingReplica:
                 self.sched.alloc.free(self.sched.slot_pages[slot])
                 self.sched.slot_pages[slot] = []
                 self.sched.slot_req[slot] = None
+                self.sched.slot_reserve[slot] = 0
+                self.sched.slot_shared[slot] = 0
         self.sched.reserved_pages = 0
+        self.sched.index.clear()      # the device's cached prefixes died too
         return lost
 
     def stats(self) -> dict:

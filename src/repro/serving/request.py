@@ -50,6 +50,10 @@ class Request:
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     admit_step: Optional[int] = None
     finish_step: Optional[int] = None
+    # prefix-cache bookkeeping: prompt tokens whose prefill was skipped
+    # because a shared prefix already held their K/V (0 on a miss, and
+    # always 0 on the static engine, which cannot share)
+    cached_tokens: int = 0
     # filled in by the fabric router (single-engine runs leave the defaults)
     replica: Optional[int] = None         # replica currently decoding this
     reroutes: int = 0                     # re-prefills after a replica loss

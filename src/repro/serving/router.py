@@ -12,6 +12,12 @@ fleet service:
   deterministic tie-break, so a fleet run is replayable); the first
   candidate whose pool could ever hold the request wins — a request too
   big for the least-loaded replica's pool *spills over* to the next.
+  ``route_policy="prefix-affinity"`` instead orders by longest cached
+  prompt prefix first (then the least-pages key): the replica already
+  holding a request's persona pages admits it with a prefix-cache hit —
+  skipping the shared prefill and sharing the pages — where any other
+  replica would duplicate both. All-miss requests degrade to least-pages,
+  so affinity also spreads *new* prefixes across the fleet.
 * **drain / fail** — ``drain_replica`` stops new routing while the
   replica's streams finish (graceful scale-in: the fleet autoscaler's
   scale-in path); ``fail_replica`` (heartbeat DEAD, spot preemption)
@@ -41,7 +47,7 @@ from repro.serving.replica import ServingReplica
 from repro.serving.request import Request, make_request, worst_case_pages
 from repro.serving.scheduler import supports_paged
 
-ROUTE_POLICIES = ("least-pages", "round-robin")
+ROUTE_POLICIES = ("least-pages", "round-robin", "prefix-affinity")
 
 
 class ServingRouter:
@@ -58,7 +64,8 @@ class ServingRouter:
                  max_slots: int = 4, page_size: int = 16,
                  num_pages: Optional[int] = None, max_seq_len: int = 512,
                  placement: Optional[Sequence[Optional[str]]] = None,
-                 route_policy: str = "least-pages"):
+                 route_policy: str = "least-pages",
+                 prefix_cache: Optional[bool] = None):
         if not supports_paged(cfg):
             raise NotImplementedError(
                 f"{cfg.name}: the fabric routes over paged schedulers; "
@@ -70,7 +77,8 @@ class ServingRouter:
         self.cfg = cfg
         self.params = params
         self.replica_kw = dict(max_slots=max_slots, page_size=page_size,
-                               num_pages=num_pages, max_seq_len=max_seq_len)
+                               num_pages=num_pages, max_seq_len=max_seq_len,
+                               prefix_cache=prefix_cache)
         self.route_policy = route_policy
         self.replicas: Dict[int, ServingReplica] = {}
         self.waiting: Deque[Request] = collections.deque()
@@ -169,6 +177,7 @@ class ServingRouter:
         orig.reroutes += 1
         if req is not orig:
             orig.out_tokens.extend(req.out_tokens)
+            orig.cached_tokens += req.cached_tokens
         if orig.remaining_tokens == 0:
             # lost after its last token was emitted: it is simply finished
             self._collect(orig)
@@ -200,12 +209,23 @@ class ServingRouter:
         return sorted((r for r in self.replicas.values() if r.live),
                       key=lambda r: r.replica_id)
 
-    def _candidates(self, live: List[ServingReplica]) -> List[ServingReplica]:
+    def _candidates(self, live: List[ServingReplica],
+                    req: Request) -> List[ServingReplica]:
         if self.route_policy == "round-robin":
             k = len(live)
             order = [live[(self._rr_cursor + i) % k] for i in range(k)]
             self._rr_cursor = (self._rr_cursor + 1) % max(k, 1)
             return order
+        if self.route_policy == "prefix-affinity":
+            # longest cached prefix first — the replica already holding the
+            # request's prefix pages skips that much prefill and shares the
+            # pages instead of duplicating them. Least-outstanding-pages
+            # breaks affinity ties (including the all-miss case, where this
+            # degrades to the default policy), replica id breaks the rest,
+            # so placement stays deterministic and replayable.
+            return sorted(live, key=lambda r: (
+                -r.prefix_match_len(req.prompt), r.outstanding_pages,
+                r.replica_id))
         return sorted(live, key=lambda r: (r.outstanding_pages,
                                            r.replica_id))
 
@@ -219,7 +239,7 @@ class ServingRouter:
             req = self.waiting.popleft()
             live = self._live()
             placed = False
-            for i, rep in enumerate(self._candidates(live)):
+            for i, rep in enumerate(self._candidates(live, req)):
                 if rep.fits(req):
                     if i > 0:
                         self.stats["spillovers"] += 1
@@ -266,6 +286,7 @@ class ServingRouter:
                 orig = self._parents.pop(req.rid, None)
                 if orig is not None:
                     orig.out_tokens.extend(req.out_tokens)
+                    orig.cached_tokens += req.cached_tokens
                     req = orig
                 self._collect(req)
                 done_now.append(req)
@@ -289,6 +310,17 @@ class ServingRouter:
         return self.finished
 
     # ------------------------------------------------------------ metrics --
+    def prefix_hit_rate(self) -> float:
+        """Fleet-wide prefix-cache hit rate over all prefills so far,
+        retired replicas included — the single definition shared by
+        ``fleet_stats`` and the fleet autoscaler's telemetry."""
+        hits = self._retired_stats.get("prefix_hits", 0)
+        prefills = self._retired_stats.get("prefills", 0)
+        for r in self.replicas.values():
+            hits += r.sched.stats["prefix_hits"]
+            prefills += r.sched.stats["prefills"]
+        return hits / prefills if prefills else 0.0
+
     def imbalance(self) -> Optional[float]:
         """Mean steady-state reserved-page imbalance (max-min over mean)
         across the balance samples; None when the fleet never had two busy
@@ -308,9 +340,11 @@ class ServingRouter:
         out: Dict[str, Any] = dict(self.stats)
         out["fleet_ticks"] = self.step_idx
         out["live_replicas"] = len(self._live())
-        for key in ("tokens_out", "decode_steps", "prefills"):
-            out[key] = (sum(s[key] for s in per_replica.values())
+        for key in ("tokens_out", "decode_steps", "prefills",
+                    "prefix_hits", "cached_tokens", "cow_forks"):
+            out[key] = (sum(s.get(key, 0) for s in per_replica.values())
                         + self._retired_stats.get(key, 0))
+        out["prefix_hit_rate"] = round(self.prefix_hit_rate(), 3)
         imb = self.imbalance()
         if imb is not None:
             out["reserved_page_imbalance"] = round(imb, 3)

@@ -21,6 +21,15 @@ a target arch/shape comes from ``repro.core.blueprint.serving_page_plan``,
 and the provisioning layer exposes it as the "serve" service
 (``repro.core.services.AmbariServer.provision_serving``).
 
+Admission also consults the **shared-prefix cache** (``prefix_cache=True``
+default for non-MoE archs): the longest in-flight prompt prefix already
+holding the request's tokens is shared page-for-page (refcounted; a
+mid-page match is copy-on-write forked), only the uncached suffix is
+prefilled, and the reservation charges only that suffix — fleet chat
+traffic with N personas × M users pays one persona prefill instead of M.
+See docs/serving.md "Shared prefixes" for the COW state diagram and the
+determinism contract.
+
 Works for decoder-only archs without MLA attention; SSM/hybrid and MoE
 archs are supported with exact-length prefill (an SSM state folds padding
 in; MoE routing lets padding compete for expert capacity). One caveat for
@@ -75,7 +84,8 @@ class ContinuousBatchingScheduler:
     def __init__(self, cfg: ModelConfig, params: Any, *, max_slots: int = 4,
                  page_size: int = 16, num_pages: Optional[int] = None,
                  max_seq_len: int = 512,
-                 prefill_buckets: Sequence[int] = DEFAULT_BUCKETS):
+                 prefill_buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 prefix_cache: Optional[bool] = None):
         if not supports_paged(cfg):
             raise NotImplementedError(
                 f"{cfg.name}: paged serving covers decoder-only non-MLA "
@@ -92,19 +102,38 @@ class ContinuousBatchingScheduler:
         # tokens compete for expert capacity — bucket padding would change
         # real tokens' results for either, so such archs prefill exact-length
         # (one compile per distinct prompt length).
-        self.exact_prefill = cfg.n_routed_experts > 0 or any(
-            cfg.block_kind(i) == "ssm" for i in range(cfg.n_layers))
+        self._has_ssm = any(cfg.block_kind(i) == "ssm"
+                            for i in range(cfg.n_layers))
+        self.exact_prefill = cfg.n_routed_experts > 0 or self._has_ssm
         self.buckets = tuple(sorted(b for b in prefill_buckets
                                     if b <= max_seq_len))
+        # shared-prefix cache: admission shares the longest cached prefix's
+        # pages and prefills only the uncached suffix. Hybrid archs can only
+        # resume where an SSM state snapshot exists (exact-entry hits).
+        # Default: on, except for MoE archs — a cached suffix steps through
+        # the decode router one token at a time, grouping expert capacity
+        # differently than the full prefill it replaces, which breaks the
+        # byte-determinism contract the fleet's re-prefill path relies on.
+        # MoE archs may still opt in (prefix_cache=True) where approximate
+        # token identity under capacity pressure is acceptable.
+        if prefix_cache is None:
+            prefix_cache = cfg.n_routed_experts == 0
+        self.prefix_cache = prefix_cache
+        self.index = PC.PrefixIndex(page_size)
 
         self.cache = PC.init_paged_cache(cfg, num_pages, page_size, max_slots)
         self.alloc = PC.PageAllocator(num_pages)
+        self.alloc.on_free = self.index.invalidate_page
         self.block_table = np.full((max_slots, self.n_pg), PC.SINK_PAGE,
                                    np.int32)
         self.seq_lens = np.zeros((max_slots,), np.int32)
         self.last_tokens = np.zeros((max_slots, 1), np.int32)
         self.slot_req: List[Optional[Request]] = [None] * max_slots
         self.slot_pages: List[List[int]] = [[] for _ in range(max_slots)]
+        # per-slot admission bookkeeping: pages charged against the pool
+        # (net of shared prefix pages) and the shared-page count itself
+        self.slot_reserve: List[int] = [0] * max_slots
+        self.slot_shared: List[int] = [0] * max_slots
         self.waiting: Deque[Request] = collections.deque()
         self.finished: List[Request] = []
         self._admit_done: List[Request] = []
@@ -118,7 +147,9 @@ class ContinuousBatchingScheduler:
         self.capacity_hint: Optional[int] = None
         self.stats: Dict[str, int] = {"decode_steps": 0, "tokens_out": 0,
                                       "prefills": 0, "peak_pages": 0,
-                                      "admit_blocked": 0, "resizes": 0}
+                                      "admit_blocked": 0, "resizes": 0,
+                                      "prefix_hits": 0, "prefix_misses": 0,
+                                      "cached_tokens": 0, "cow_forks": 0}
 
         # donate the cache: pools are sized to fill HBM, so the step must
         # update them in place rather than double-buffer (cf. trainer.py)
@@ -126,6 +157,9 @@ class ContinuousBatchingScheduler:
                                   static_argnames=("k",), donate_argnums=(1,))
         self._prefill_fns: Dict[int, Any] = {}
         self._insert_fns: Dict[int, Any] = {}
+        self._suffix_fns: Dict[int, Any] = {}
+        self._seq_suffix_fns: Dict[int, Any] = {}
+        self._cow_fn = jax.jit(PC.copy_page, donate_argnums=(0,))
         self._rid = 0
 
     # ------------------------------------------------------------ jit fns --
@@ -186,6 +220,68 @@ class ContinuousBatchingScheduler:
             self._insert_fns[n] = jax.jit(fn, donate_argnums=(0,))
         return self._insert_fns[n]
 
+    def _suffix_fn(self, n: int):
+        """Batched suffix prefill at padded length ``n`` (dense archs).
+
+        The uncached suffix's tokens run as ``n`` parallel rows of one
+        paged decode step: row ``i`` carries position ``start + i``, every
+        row shares the sequence's block-table row, and all rows' K/V are
+        scattered into the pages *before* attention — so row ``i`` attends
+        the shared prefix pages plus suffix positions ``<= i``, which is
+        exactly causal prefill continued from ``start``. Padding rows are
+        routed to the sink page (position 0) and discarded; logits are read
+        at the live suffix's last row.
+        """
+        if n not in self._suffix_fns:
+            cfg = self.cfg
+
+            def fn(params, cache, tokens, start, s_live, row):
+                i = jnp.arange(n, dtype=jnp.int32)
+                live = i < s_live
+                lens = jnp.where(live, start + i, 0).astype(jnp.int32)
+                bt = jnp.where(live[:, None], row[None, :],
+                               PC.SINK_PAGE).astype(jnp.int32)
+                lg, cache = M.paged_decode_step(cfg, params, cache,
+                                                tokens[:, None], lens, bt)
+                last = jax.lax.dynamic_slice_in_dim(lg[:, -1, :],
+                                                    s_live - 1, 1, axis=0)
+                tok = jnp.argmax(last[0, :cfg.vocab_size]).astype(jnp.int32)
+                return tok, cache
+
+            self._suffix_fns[n] = jax.jit(fn, donate_argnums=(1,))
+        return self._suffix_fns[n]
+
+    def _seq_suffix_fn(self, s: int):
+        """Sequential suffix continuation at exact length ``s`` (SSM and
+        MoE archs). A lax.scan of batch-1 paged decode steps threads the
+        SSM slot state token by token from the cached snapshot (``state``;
+        None for pure-MoE archs, whose suffix still must step one token at
+        a time so expert capacity groups match decode's) and writes each
+        suffix token's K/V into the sequence's pages."""
+        if s not in self._seq_suffix_fns:
+            cfg = self.cfg
+
+            def fn(params, cache, state, tokens, start, row, slot):
+                view = PC.ssm_slot_view(cache, state)
+                bt = row[None, :].astype(jnp.int32)
+
+                def body(carry, tok):
+                    cl, vw = carry
+                    lg, vw = M.paged_decode_step(cfg, params, vw,
+                                                 tok[None, None],
+                                                 cl[None], bt)
+                    return (cl + 1, vw), lg[0, -1]
+
+                (_, view), lgs = jax.lax.scan(
+                    body, (jnp.asarray(start, jnp.int32), view), tokens)
+                tok = jnp.argmax(lgs[-1, :cfg.vocab_size]).astype(jnp.int32)
+                if state is None:
+                    return tok, view
+                return tok, PC.merge_ssm_slot(cache, view, slot)
+
+            self._seq_suffix_fns[s] = jax.jit(fn, donate_argnums=(1,))
+        return self._seq_suffix_fns[s]
+
     # ---------------------------------------------------------- submission --
     def submit(self, prompt, max_new_tokens: int,
                arrival_step: int = 0) -> Request:
@@ -225,18 +321,47 @@ class ContinuousBatchingScheduler:
                 self.stats["admit_blocked"] += 1
                 break
             req = self.waiting[0]
+            hit = self._prefix_lookup(req)
+            # worst-case reservation charges only the uncached suffix: the
+            # shared full pages are already allocated and survive (via their
+            # refcount) until this stream releases them
             need = PC.pages_for_len(req.plen + req.max_new_tokens,
                                     self.page_size)
+            if hit is not None:
+                need -= len(hit.full_pages)
             if self.alloc.num_free - (self.reserved_pages
                                       - self.pages_in_use) < need:
                 self.stats["admit_blocked"] += 1
                 break                       # reservation would overcommit
             self.waiting.popleft()
-            self._admit(req, free[0], need)
+            self._admit(req, free[0], need, hit)
+
+    def _prefix_lookup(self, req: Request):
+        if not self.prefix_cache:
+            return None
+        return self.index.lookup(req.prompt, limit=req.plen - 1,
+                                 need_state=self._has_ssm)
+
+    def prefix_match_len(self, prompt) -> int:
+        """Tokens of ``prompt`` this scheduler's prefix cache could serve —
+        the router's prefix-affinity signal (read-only)."""
+        if not self.prefix_cache:
+            return 0
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        return self.index.match_len(prompt, limit=prompt.shape[0] - 1,
+                                    need_state=self._has_ssm)
 
     @property
     def pages_in_use(self) -> int:
-        return sum(len(p) for p in self.slot_pages)
+        """Pages charged privately to live slots (net of shared prefix
+        pages) — the in-use term of the admission ledger. Physical
+        occupancy, which sharing makes smaller, is ``pages_allocated``."""
+        return sum(len(p) for p in self.slot_pages) - sum(self.slot_shared)
+
+    @property
+    def pages_allocated(self) -> int:
+        """Physical pages held (each shared page counted once)."""
+        return self.alloc.num_allocated
 
     def _bucket(self, plen: int) -> int:
         if self.exact_prefill:
@@ -246,7 +371,31 @@ class ContinuousBatchingScheduler:
                 return b
         return self.max_seq_len
 
-    def _admit(self, req: Request, slot: int, reserve: int) -> None:
+    def _admit(self, req: Request, slot: int, reserve: int,
+               hit=None) -> None:
+        plen = req.plen
+        if hit is None:
+            first, pages, shared, row = self._admit_full(req, slot)
+        else:
+            first, pages, shared, row = self._admit_shared(req, slot, hit)
+        self.reserved_pages += reserve
+        self.block_table[slot] = row
+        self.seq_lens[slot] = plen
+        self.last_tokens[slot, 0] = first
+        self.slot_req[slot] = req
+        self.slot_pages[slot] = pages
+        self.slot_reserve[slot] = reserve
+        self.slot_shared[slot] = shared
+        req.admit_step = self.step_idx
+        req.out_tokens.append(first)
+        self.stats["prefills"] += 1
+        self.stats["tokens_out"] += 1
+        if req.done:                        # max_new_tokens == 1
+            self._finish(slot)
+            self._admit_done.append(req)
+
+    def _admit_full(self, req: Request, slot: int):
+        """Prefix-cache miss (or caching off): full bucketed prefill."""
         plen = req.plen
         n = self._bucket(plen)
         tokens = np.zeros((1, n), np.int32)
@@ -255,32 +404,66 @@ class ContinuousBatchingScheduler:
                                          jnp.asarray(plen, jnp.int32))
         pages = self.alloc.alloc(PC.pages_for_len(plen + 1, self.page_size),
                                  owner=req.rid)
-        self.reserved_pages += reserve
         row = np.full((self.n_pg,), PC.SINK_PAGE, np.int32)
         row[:len(pages)] = pages
         self.cache = self._insert_fn(n)(self.cache, pre, jnp.asarray(row),
                                         jnp.asarray(slot, jnp.int32),
                                         jnp.asarray(plen, jnp.int32))
-        self.block_table[slot] = row
-        self.seq_lens[slot] = plen
-        self.last_tokens[slot, 0] = int(first)
-        self.slot_req[slot] = req
-        self.slot_pages[slot] = pages
-        req.admit_step = self.step_idx
-        req.out_tokens.append(int(first))
-        self.stats["prefills"] += 1
-        self.stats["tokens_out"] += 1
-        if req.done:                        # max_new_tokens == 1
-            self._finish(slot)
-            self._admit_done.append(req)
+        if self.prefix_cache:
+            state = PC.extract_ssm_state(pre) if self._has_ssm else None
+            self.index.insert(req.prompt, pages, state=state)
+            self.stats["prefix_misses"] += 1
+        return int(first), pages, 0, row
+
+    def _admit_shared(self, req: Request, slot: int, hit):
+        """Prefix-cache hit: share the matched full pages, COW-fork the
+        partially-matched page, and prefill only the uncached suffix."""
+        plen, L = req.plen, hit.length
+        shared = list(hit.full_pages)
+        self.alloc.share(shared)
+        own = self.alloc.alloc(
+            PC.pages_for_len(plen + 1, self.page_size) - len(shared),
+            owner=req.rid)
+        if hit.tail_len:
+            # the sequence diverges (or continues) inside the matched page:
+            # fork a private copy before writing its own tokens there
+            self.cache = self._cow_fn(self.cache, hit.tail_page, own[0])
+            self.stats["cow_forks"] += 1
+        pages = shared + own
+        row = np.full((self.n_pg,), PC.SINK_PAGE, np.int32)
+        row[:len(pages)] = pages
+        suffix = np.asarray(req.prompt[L:], np.int32)
+        s = suffix.shape[0]
+        if self.exact_prefill:
+            first, self.cache = self._seq_suffix_fn(s)(
+                self.params, self.cache, hit.state, jnp.asarray(suffix),
+                jnp.asarray(L, jnp.int32), jnp.asarray(row),
+                jnp.asarray(slot, jnp.int32))
+        else:
+            n = self._bucket(s)
+            toks = np.zeros((n,), np.int32)
+            toks[:s] = suffix
+            first, self.cache = self._suffix_fn(n)(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(L, jnp.int32), jnp.asarray(s, jnp.int32),
+                jnp.asarray(row))
+        if not self._has_ssm:
+            # extend the index with this prompt's own (longer) chain; hybrid
+            # entries need a state snapshot, which only full prefills have
+            self.index.insert(req.prompt, pages)
+        req.cached_tokens = L
+        self.stats["prefix_hits"] += 1
+        self.stats["cached_tokens"] += L
+        return int(first), pages, len(shared), row
 
     # -------------------------------------------------------------- finish --
     def _finish(self, slot: int) -> None:
         req = self.slot_req[slot]
         req.finish_step = self.step_idx
         self.alloc.free(self.slot_pages[slot])
-        self.reserved_pages -= PC.pages_for_len(
-            req.plen + req.max_new_tokens, self.page_size)
+        self.reserved_pages -= self.slot_reserve[slot]
+        self.slot_reserve[slot] = 0
+        self.slot_shared[slot] = 0
         self.slot_pages[slot] = []
         self.slot_req[slot] = None
         self.block_table[slot] = PC.SINK_PAGE
@@ -335,8 +518,12 @@ class ContinuousBatchingScheduler:
                 self._grow_slots(max_slots)
             self.target_slots = max_slots
         if num_pages is not None:
-            # reservation-aware floor (+1 for the sink page)
-            num_pages = max(num_pages, self.reserved_pages + 1, 2)
+            # reservation-aware floor (+1 for the sink page): the pool must
+            # cover every physically held page plus every outstanding
+            # admission reservation's future growth
+            num_pages = max(num_pages,
+                            self.alloc.num_allocated + self.reserved_pages
+                            - self.pages_in_use + 1, 2)
             if num_pages > self.alloc.num_pages:
                 self.cache = PC.resize_cache_pages(self.cache, num_pages)
                 self.alloc.grow(num_pages)
@@ -356,6 +543,8 @@ class ContinuousBatchingScheduler:
             [self.last_tokens, np.zeros((pad, 1), np.int32)])
         self.slot_req.extend([None] * pad)
         self.slot_pages.extend([] for _ in range(pad))
+        self.slot_reserve.extend([0] * pad)
+        self.slot_shared.extend([0] * pad)
         self.cache = PC.resize_cache_slots(self.cache, new)
         self.max_slots = new
 
@@ -368,6 +557,8 @@ class ContinuousBatchingScheduler:
             self.last_tokens = self.last_tokens[:n]
             del self.slot_req[n:]
             del self.slot_pages[n:]
+            del self.slot_reserve[n:]
+            del self.slot_shared[n:]
             self.cache = PC.resize_cache_slots(self.cache, n)
             self.max_slots = n
         if self.alloc.shrink_ready():
@@ -418,7 +609,7 @@ class ContinuousBatchingScheduler:
         k = 1 << (k.bit_length() - 1)       # pow2 buckets bound compiles
         self._grow_pages(k)
         self.stats["peak_pages"] = max(self.stats["peak_pages"],
-                                       self.pages_in_use)
+                                       self.alloc.num_allocated)
         outs, self.cache = self._decode_fn(
             self.params, self.cache, jnp.asarray(self.last_tokens),
             jnp.asarray(self.seq_lens), jnp.asarray(self.block_table), k=k)

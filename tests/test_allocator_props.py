@@ -1,14 +1,22 @@
-"""PageAllocator live-resize invariants (hypothesis stateful testing).
+"""PageAllocator live-resize + refcount invariants (hypothesis stateful).
 
 The allocator is the serving engine's memory-safety keystone: admission
-reservations, live grow, and drain-before-shrink all assume that at every
-point in *any* operation sequence the page-id space partitions cleanly
-into {free} ∪ {owned} ∪ {retired-by-pending-shrink} with the sink page in
-none of them. These properties drive random interleavings of
-alloc / free / grow / request_shrink / complete_shrink and check the
-partition (free + used + retired == pool size − sink) plus
-no-double-ownership after every step — the state-machine analogue of the
-hand-written sequences in tests/test_autoscale.py.
+reservations, live grow, drain-before-shrink, and now prefix sharing all
+assume that at every point in *any* operation sequence the page-id space
+partitions cleanly into {free} ∪ {allocated (ref > 0)} ∪
+{retired-by-pending-shrink} with the sink page in none of them. These
+properties drive random interleavings of alloc / share / free / COW-fork /
+grow / request_shrink / complete_shrink and check, after every step:
+
+* the partition (free + allocated + retired == pool size − sink);
+* a page with live sharers (ref > 0) is never on the free list and is
+  never reclaimed by a shrink;
+* a COW fork conserves ``num_free + num_allocated`` (the fork allocates
+  one page and drops one reference — pool accounting must not leak);
+* duplicate page ids in one ``free`` call always raise, mutating nothing.
+
+The state-machine analogue of the hand-written sequences in
+tests/test_autoscale.py and tests/test_prefix_cache.py.
 """
 import pytest
 
@@ -24,7 +32,7 @@ class AllocatorMachine(RuleBasedStateMachine):
     def __init__(self):
         super().__init__()
         self.alloc = PageAllocator(8)
-        self.owned = {}                    # page -> owner tag (shadow model)
+        self.refs = {}                     # page -> refcount (shadow model)
         self.next_owner = 0
 
     # ------------------------------------------------------------- rules --
@@ -35,24 +43,62 @@ class AllocatorMachine(RuleBasedStateMachine):
             assert len(set(pages)) == n, "duplicate page in one alloc"
             assert SINK_PAGE not in pages, "sink page handed out"
             for p in pages:
-                assert p not in self.owned, f"page {p} double-owned"
-                self.owned[p] = self.next_owner
+                assert p not in self.refs, f"page {p} double-allocated"
+                self.refs[p] = 1
             self.next_owner += 1
         else:
             with pytest.raises(MemoryError):
                 self.alloc.alloc(n)
 
-    @precondition(lambda self: self.owned)
+    @precondition(lambda self: self.refs)
     @rule(data=st.data())
-    def free_one_owner(self, data):
-        owner = data.draw(st.sampled_from(
-            sorted(set(self.owned.values()))), label="owner")
-        pages = [p for p, o in self.owned.items() if o == owner]
+    def share_pages(self, data):
+        pages = data.draw(st.lists(st.sampled_from(sorted(self.refs)),
+                                   min_size=1, unique=True), label="share")
+        self.alloc.share(pages)
+        for p in pages:
+            self.refs[p] += 1
+
+    @precondition(lambda self: self.refs)
+    @rule(data=st.data())
+    def free_pages(self, data):
+        pages = data.draw(st.lists(st.sampled_from(sorted(self.refs)),
+                                   min_size=1, unique=True), label="free")
         self.alloc.free(pages)
         for p in pages:
-            del self.owned[p]
+            self.refs[p] -= 1
+            if not self.refs[p]:
+                del self.refs[p]
+
+    @precondition(lambda self: self.refs)
+    @rule(data=st.data())
+    def duplicate_free_raises(self, data):
+        p = data.draw(st.sampled_from(sorted(self.refs)), label="dup")
+        before = (self.alloc.num_free, self.alloc.num_allocated,
+                  self.alloc.ref(p))
         with pytest.raises(ValueError):
-            self.alloc.free(pages)         # double free always raises
+            self.alloc.free([p, p])
+        after = (self.alloc.num_free, self.alloc.num_allocated,
+                 self.alloc.ref(p))
+        assert before == after, "raising free() must not mutate"
+
+    @precondition(lambda self: any(r >= 2 for r in self.refs.values()))
+    @rule(data=st.data())
+    def cow_fork(self, data):
+        """Fork a shared page: alloc the copy, drop one ref on the source.
+        ``num_free + num_allocated`` must be conserved."""
+        if not self.alloc.can_alloc(1):
+            return
+        src = data.draw(st.sampled_from(
+            sorted(p for p, r in self.refs.items() if r >= 2)), label="src")
+        total = self.alloc.num_free + self.alloc.num_allocated
+        dst = self.alloc.alloc(1, owner=self.next_owner)[0]
+        self.next_owner += 1
+        self.refs[dst] = 1
+        self.alloc.free([src])
+        self.refs[src] -= 1
+        assert self.alloc.num_free + self.alloc.num_allocated == total, \
+            "COW fork leaked pool capacity"
 
     @rule(k=st.integers(min_value=0, max_value=8))
     def grow(self, k):
@@ -73,21 +119,22 @@ class AllocatorMachine(RuleBasedStateMachine):
         new = self.alloc.complete_shrink()
         assert new == self.alloc.num_pages
         assert not self.alloc.shrink_pending
-        assert all(p < new for p in self.owned)
+        assert all(p < new for p in self.refs), \
+            "shrink reclaimed a page with live sharers"
 
     # -------------------------------------------------------- invariants --
     @invariant()
     def partition_covers_pool(self):
         a = self.alloc
         free = set(a._free)
-        owned = set(a._owner)
+        allocated = set(a._ref)
         every = set(range(1, a.num_pages))
-        retired = every - free - owned
+        retired = every - free - allocated
         # free + used + retired == pool size (sink excluded from all three)
-        assert len(free) + len(owned) + len(retired) == a.num_pages - 1
+        assert len(free) + len(allocated) + len(retired) == a.num_pages - 1
         assert len(a._free) == len(free), "duplicate ids on the free list"
-        assert not (free & owned), "page both free and owned"
-        assert SINK_PAGE not in free and SINK_PAGE not in owned
+        assert not (free & allocated), "page both free and referenced"
+        assert SINK_PAGE not in free and SINK_PAGE not in allocated
         # retired pages exist only under a pending shrink, above its target
         if retired:
             assert a.shrink_pending
@@ -98,9 +145,15 @@ class AllocatorMachine(RuleBasedStateMachine):
 
     @invariant()
     def shadow_model_agrees(self):
-        assert set(self.alloc._owner) == set(self.owned)
-        assert self.alloc.num_allocated == len(self.owned)
+        assert dict(self.alloc._ref) == self.refs
+        assert self.alloc.num_allocated == len(self.refs)
+        assert all(r > 0 for r in self.refs.values())
         assert self.alloc.capacity >= 0
+
+    @invariant()
+    def shrink_blocked_by_sharers(self):
+        if self.alloc.shrink_ready():
+            assert all(p < self.alloc._shrink_target for p in self.refs)
 
 
 TestAllocatorProps = AllocatorMachine.TestCase

@@ -126,8 +126,19 @@ def test_fleet_tokens_identical_after_preemption(params):
 
 def test_fleet_tokens_identical_after_preemption_ssm_hybrid():
     """Same preemption re-route property through the SSM dense-state path
-    (jamba hybrid): a re-prefilled prefix folds the SSM state exactly."""
-    cfg = dataclasses.replace(REDUCED["jamba-v0.1-52b"], dtype="float32")
+    (jamba hybrid): a re-prefilled prefix folds the SSM state exactly.
+
+    Expert capacity is set non-binding (capacity_factor = E / top_k): a
+    re-prefill groups its tokens differently than the original prefill +
+    decode ticks did, and with a binding capacity MoE legitimately drops
+    different tokens per grouping — the documented MoE caveat, not the
+    SSM property under test. (This was latent until parameter init became
+    process-deterministic; the old builtin-hash path-seeding made the test
+    a per-process parameter lottery.)"""
+    cfg = dataclasses.replace(
+        REDUCED["jamba-v0.1-52b"], dtype="float32",
+        moe_capacity_factor=float(REDUCED["jamba-v0.1-52b"].n_routed_experts)
+        / REDUCED["jamba-v0.1-52b"].moe_top_k)
     p = M.init(cfg, jax.random.PRNGKey(0))
     rng = np.random.RandomState(2)
     prompts = [rng.randint(0, cfg.vocab_size, size=n).astype(np.int32)

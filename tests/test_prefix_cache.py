@@ -1,0 +1,376 @@
+"""Shared-prefix copy-on-write page cache: refcounted allocator regression,
+prefix-index semantics, fp32 token identity of shared vs isolated serving
+(dense + jamba hybrid), late-diverging COW, hit/miss accounting, admission
+charging only the uncached suffix, static-engine bookkeeping parity, and
+router prefix-affinity determinism."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import REDUCED
+from repro.core.blueprint import serving_page_plan
+from repro.models import model as M
+from repro.serving import engine as E
+from repro.serving import paged_cache as PC
+from repro.serving.request import make_request
+from repro.serving.router import ServingRouter
+from repro.serving.scheduler import ContinuousBatchingScheduler
+
+CFG = dataclasses.replace(REDUCED["qwen3-32b"], dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init(CFG, jax.random.PRNGKey(0))
+
+
+def _sched(params, *, prefix_cache, cfg=CFG, slots=4, page_size=8,
+           max_seq=64, num_pages=None):
+    return ContinuousBatchingScheduler(
+        cfg, params, max_slots=slots, page_size=page_size,
+        max_seq_len=max_seq, num_pages=num_pages, prefix_cache=prefix_cache)
+
+
+def _serve(sched, trace):
+    reqs = [sched.submit(p, g) for p, g in trace]
+    sched.run()
+    return reqs
+
+
+# ----------------------------------------------------- allocator regression --
+
+def test_double_free_same_page_in_one_call_raises():
+    """Regression: ``free([p, p])`` must raise, not silently drop two
+    references — and must leave the allocator untouched when it raises."""
+    a = PC.PageAllocator(8)
+    p1, p2 = a.alloc(2, owner="r1")
+    with pytest.raises(ValueError, match="twice in one free"):
+        a.free([p1, p1])
+    assert a.num_allocated == 2 and a.ref(p1) == 1   # nothing was mutated
+    a.share([p1])                                    # now legitimately ref 2
+    with pytest.raises(ValueError, match="twice in one free"):
+        a.free([p1, p1])                             # still one call = one ref
+    assert a.ref(p1) == 2
+    a.free([p1, p2])
+    a.free([p1])
+    assert a.num_allocated == 0 and a.num_free == 7
+
+
+def test_share_and_release_lifecycle():
+    a = PC.PageAllocator(6)
+    pages = a.alloc(3, owner="orig")
+    a.share(pages[:2])
+    a.free(pages)                      # original owner leaves
+    assert a.num_allocated == 2        # shared pages survive
+    assert a.ref(pages[0]) == 1 and a.ref(pages[2]) == 0
+    with pytest.raises(ValueError):
+        a.share([pages[2]])            # cannot share a freed page
+    a.free(pages[:2])
+    assert a.num_allocated == 0 and a.num_free == 5
+
+
+def test_shrink_never_reclaims_shared_pages():
+    a = PC.PageAllocator(8)
+    pages = a.alloc(7)
+    a.share(pages)
+    a.free(pages)                      # one of two refs gone
+    a.request_shrink(2)
+    assert not a.shrink_ready()        # live sharers block the shrink
+    a.free(pages)                      # last refs released
+    assert a.shrink_ready() and a.complete_shrink() == 2
+
+
+# --------------------------------------------------------- index semantics --
+
+def test_prefix_index_boundary_tail_and_invalidation():
+    ps = 8
+    alloc = PC.PageAllocator(32)
+    idx = PC.PrefixIndex(ps)
+    alloc.on_free = idx.invalidate_page
+    prompt = np.arange(20, dtype=np.int32)           # 2 full pages + 4 tail
+    pages = alloc.alloc(3, owner="r0")
+    idx.insert(prompt, pages)
+
+    # full-page boundary match, capped at plen - 1
+    hit = idx.lookup(prompt, limit=19)
+    assert hit.length == 19 and hit.full_pages == pages[:2]
+    assert hit.tail_page == pages[2] and hit.tail_len == 3
+
+    # a prompt diverging inside page 2 shares up to the divergence point
+    other = np.concatenate([prompt[:18], [99, 98, 97]]).astype(np.int32)
+    hit = idx.lookup(other, limit=len(other) - 1)
+    assert hit.length == 18 and hit.tail_len == 2
+
+    # sub-page overlap alone is no match (min one full page)
+    assert idx.lookup(np.arange(6, dtype=np.int32)) is None
+    # different first page is a clean miss
+    assert idx.lookup(np.arange(99, 119, dtype=np.int32)) is None
+
+    # freeing any chain page invalidates the entries referencing it
+    alloc.free([pages[1]])
+    assert idx.lookup(prompt, limit=19).length == ps  # page-1 entries died
+    alloc.free([pages[0], pages[2]])
+    assert idx.lookup(prompt, limit=19) is None
+    assert len(idx) == 0
+
+
+# -------------------------------------------------- token identity (dense) --
+
+def test_persona_workload_token_identity_dense(params):
+    """Acceptance core: shared-prefix serving emits byte-identical tokens
+    while sharing the persona pages (hits for every follower)."""
+    rng = np.random.RandomState(0)
+    trace = []
+    for _ in range(2):                                  # 2 personas x 4 users
+        persona = rng.randint(0, CFG.vocab_size, size=24).astype(np.int32)
+        for u in range(4):
+            user = rng.randint(0, CFG.vocab_size, size=4 + u).astype(np.int32)
+            trace.append((np.concatenate([persona, user]), 6))
+    off = _serve(_sched(params, prefix_cache=False), trace)
+    s_on = _sched(params, prefix_cache=True)
+    on = _serve(s_on, trace)
+    assert [r.out_tokens for r in on] == [r.out_tokens for r in off]
+    assert s_on.stats["prefix_hits"] >= 6               # >= users-1 per persona
+    assert s_on.stats["cached_tokens"] >= 6 * 24
+    assert s_on.stats["peak_pages"] < _peak(params, trace)
+    assert s_on.reserved_pages == 0 and s_on.alloc.num_allocated == 0
+
+
+def _peak(params, trace):
+    s = _sched(params, prefix_cache=False)
+    _serve(s, trace)
+    return s.stats["peak_pages"]
+
+
+def test_late_diverging_cow_token_identity(params):
+    """Two prompts sharing 18 of 20+ tokens diverge *inside* page 2: the
+    follower must COW-fork the page, and both streams' tokens must match
+    isolated serving exactly."""
+    rng = np.random.RandomState(1)
+    base = rng.randint(0, CFG.vocab_size, size=20).astype(np.int32)
+    a = np.concatenate([base, rng.randint(0, CFG.vocab_size, size=3)
+                        ]).astype(np.int32)
+    b = np.concatenate([base[:18], rng.randint(0, CFG.vocab_size, size=6)
+                        ]).astype(np.int32)
+    trace = [(a, 8), (b, 8)]
+    off = _serve(_sched(params, prefix_cache=False, slots=2), trace)
+    s_on = _sched(params, prefix_cache=True, slots=2)
+    on = _serve(s_on, trace)
+    assert [r.out_tokens for r in on] == [r.out_tokens for r in off]
+    assert s_on.stats["cow_forks"] >= 1
+    assert on[1].cached_tokens == 18
+
+
+def test_identical_prompt_reuse_caps_at_plen_minus_one(params):
+    """An identical prompt reuses everything except its last token (whose
+    forward pass must still run to produce the first output logits)."""
+    rng = np.random.RandomState(2)
+    p = rng.randint(0, CFG.vocab_size, size=21).astype(np.int32)
+    trace = [(p, 6), (p.copy(), 9)]
+    off = _serve(_sched(params, prefix_cache=False, slots=2), trace)
+    s_on = _sched(params, prefix_cache=True, slots=2)
+    on = _serve(s_on, trace)
+    assert [r.out_tokens for r in on] == [r.out_tokens for r in off]
+    assert on[1].cached_tokens == 20
+
+
+# ------------------------------------------------- token identity (hybrid) --
+
+@pytest.mark.slow
+def test_hybrid_jamba_token_identity():
+    """Hybrid (jamba) conversation continuation: the exact-entry hit loads
+    the SSM state snapshot and steps the suffix sequentially — fp32
+    token-identical to isolated serving. Expert capacity is set non-binding
+    (capacity_factor = E / top_k): MoE capacity couples tokens through
+    their *grouping*, which sharing legitimately changes, so identity is
+    only guaranteed when no token can be dropped (same caveat as the
+    scheduler's MoE late-join note; MoE archs default to prefix_cache
+    off for this reason)."""
+    cfg = dataclasses.replace(
+        REDUCED["jamba-v0.1-52b"], dtype="float32",
+        moe_capacity_factor=float(REDUCED["jamba-v0.1-52b"].n_routed_experts)
+        / REDUCED["jamba-v0.1-52b"].moe_top_k)
+    p = M.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(3)
+    turn1 = rng.randint(0, cfg.vocab_size, size=18).astype(np.int32)
+    turn2 = np.concatenate([turn1, rng.randint(0, cfg.vocab_size, size=5)
+                            ]).astype(np.int32)
+    trace = [(turn1, 8), (turn2, 5)]
+    off = _serve(_sched(p, prefix_cache=False, cfg=cfg, slots=2), trace)
+    s_on = _sched(p, prefix_cache=True, cfg=cfg, slots=2)
+    on = _serve(s_on, trace)
+    assert [r.out_tokens for r in on] == [r.out_tokens for r in off]
+    assert s_on.stats["prefix_hits"] == 1
+    assert on[1].cached_tokens == 18
+    # the hit landed mid-page, so the continuation COW-forked the tail page
+    assert s_on.stats["cow_forks"] == 1
+
+
+def test_moe_arch_defaults_to_no_prefix_cache(params):
+    cfg = dataclasses.replace(REDUCED["jamba-v0.1-52b"], dtype="float32")
+    p = M.init(cfg, jax.random.PRNGKey(0))
+    assert _sched(p, prefix_cache=None, cfg=cfg).prefix_cache is False
+    assert _sched(params, prefix_cache=None).prefix_cache is True
+
+
+# ---------------------------------------------------------------- accounting --
+
+def test_hit_miss_accounting_and_ledger(params):
+    rng = np.random.RandomState(4)
+    persona = rng.randint(0, CFG.vocab_size, size=16).astype(np.int32)
+    trace = [(np.concatenate([persona, rng.randint(0, CFG.vocab_size,
+                                                   size=3 + u)]).astype(
+                  np.int32), 4) for u in range(3)]
+    s = _sched(params, prefix_cache=True, slots=3)
+    reqs = _serve(s, trace)
+    assert s.stats["prefix_misses"] == 1 and s.stats["prefix_hits"] == 2
+    assert reqs[0].cached_tokens == 0
+    assert all(r.cached_tokens == 16 for r in reqs[1:])
+    assert s.stats["cached_tokens"] == 32
+    # ledger drains to zero: shared pages freed exactly once each
+    assert s.reserved_pages == 0 and s.pages_in_use == 0
+    assert s.alloc.num_allocated == 0
+    assert s.alloc.num_free == s.alloc.num_pages - 1
+    assert len(s.index) == 0                  # all entries invalidated
+
+
+def test_admission_charges_only_uncached_suffix(params):
+    """With a pool too small for two worst-case reservations, sharing makes
+    the second request admissible concurrently — the reservation charges
+    only its uncached suffix."""
+    rng = np.random.RandomState(5)
+    p = rng.randint(0, CFG.vocab_size, size=16).astype(np.int32)
+    trace = [(p, 8), (p.copy(), 8)]           # worst case 3 pages each @ps=8
+    # 5 allocatable pages: 3 + 3 reservations cannot coexist without sharing
+    s_off = _sched(params, prefix_cache=False, slots=2, num_pages=6)
+    off = _serve(s_off, trace)
+    assert off[1].admit_step > off[0].admit_step      # serialised
+    s_on = _sched(params, prefix_cache=True, slots=2, num_pages=6)
+    on = _serve(s_on, trace)
+    assert on[1].admit_step == on[0].admit_step       # concurrent via sharing
+    assert [r.out_tokens for r in on] == [r.out_tokens for r in off]
+
+
+def test_static_engine_bookkeeping_parity(params):
+    """The static path fills the same hit/miss bookkeeping (all misses), so
+    paged==static identity checks run on shared-prefix workloads. Prompts
+    share one length so the static group pads nothing (token-exact)."""
+    rng = np.random.RandomState(6)
+    persona = rng.randint(0, CFG.vocab_size, size=16).astype(np.int32)
+    trace = [(np.concatenate([persona, rng.randint(0, CFG.vocab_size,
+                                                   size=6)]).astype(
+                  np.int32), 5) for _ in range(3)]
+    static = [make_request(i, p, g) for i, (p, g) in enumerate(trace)]
+    E.serve_requests(CFG, params, static, batch_width=3)
+    assert all(r.cached_tokens == 0 for r in static)
+    s = _sched(params, prefix_cache=True, slots=3)
+    paged = _serve(s, trace)
+    assert s.stats["prefix_hits"] == 2
+    assert [r.out_tokens for r in paged] == [r.out_tokens for r in static]
+
+
+# ------------------------------------------------------------------ router --
+
+def test_router_prefix_affinity_beats_least_pages(params):
+    """Affinity sends a follower to the replica caching its persona even
+    when that replica holds more outstanding pages."""
+    rng = np.random.RandomState(7)
+    persona = rng.randint(0, CFG.vocab_size, size=24).astype(np.int32)
+    router = ServingRouter(CFG, params, replicas=2, max_slots=4,
+                           page_size=8, max_seq_len=64,
+                           route_policy="prefix-affinity")
+    lead = router.submit(np.concatenate([persona, [1, 2]]).astype(np.int32),
+                         12)
+    router.step()
+    assert lead.replica == 0                  # all-miss -> id tie-break
+    # load replica 0 further; replica 1 stays empty (fewer pages)
+    filler = router.submit(rng.randint(0, CFG.vocab_size, size=8), 12)
+    router.replicas[0].accept(filler)
+    follower = router.submit(
+        np.concatenate([persona, [3, 4, 5]]).astype(np.int32), 6)
+    router.step()
+    assert follower.replica == 0              # affinity overrides least-pages
+    unrelated = router.submit(rng.randint(0, CFG.vocab_size, size=9), 6)
+    router.step()
+    assert unrelated.replica == 1             # no match -> least pages
+    router.run()
+    assert router.fleet_stats()["prefix_hits"] >= 1
+
+
+def test_router_prefix_affinity_deterministic(params):
+    """Same trace, same fleet ops -> same placements and tokens, twice."""
+    def go():
+        rng = np.random.RandomState(8)
+        persona = rng.randint(0, CFG.vocab_size, size=16).astype(np.int32)
+        router = ServingRouter(CFG, params, replicas=2, max_slots=2,
+                               page_size=8, max_seq_len=64,
+                               route_policy="prefix-affinity")
+        reqs = []
+        for i in range(6):
+            user = rng.randint(0, CFG.vocab_size, size=2 + i % 3)
+            reqs.append(router.submit(
+                np.concatenate([persona, user]).astype(np.int32), 5,
+                arrival_step=i // 2))
+        router.run()
+        return [(r.rid, r.replica) for r in reqs], [r.out_tokens
+                                                    for r in reqs]
+    a, ta = go()
+    b, tb = go()
+    assert a == b and ta == tb
+
+
+def test_failover_reprefill_reuses_surviving_prefix(params):
+    """After a replica failure, the re-prefilled continuations land on the
+    survivor with prefix affinity; the second continuation reuses the
+    persona pages the first one just rebuilt (a prefix hit on re-prefill),
+    and tokens stay byte-identical to the single-scheduler run."""
+    rng = np.random.RandomState(9)
+    persona = rng.randint(0, CFG.vocab_size, size=16).astype(np.int32)
+    trace = [(np.concatenate([persona, rng.randint(0, CFG.vocab_size,
+                                                   size=2 + i)]).astype(
+                  np.int32), 10) for i in range(2)]
+    ref = _sched(params, prefix_cache=True, slots=2)
+    want = [r.out_tokens for r in _serve(ref, trace)]
+
+    router = ServingRouter(CFG, params, replicas=2, max_slots=2,
+                           page_size=8, max_seq_len=64,
+                           route_policy="prefix-affinity")
+    reqs = [router.submit(*trace[0])]
+    router.step(max_fuse=1)                   # leader admitted + indexed
+    reqs.append(router.submit(*trace[1],
+                              arrival_step=router.step_idx))
+    for _ in range(2):
+        router.step(max_fuse=1)
+    # affinity pulled the follower onto the leader's replica (a hit there)
+    assert reqs[1].replica == reqs[0].replica == 0
+    assert router.replicas[0].num_unfinished > 0
+    router.fail_replica(0)
+    router.run(max_fuse=1)
+    assert [r.out_tokens for r in reqs] == want
+    stats = router.fleet_stats()
+    # follower's hit on replica 0 died with it (retired stats keep it);
+    # after failover the first continuation re-seeds the persona on the
+    # survivor and the second re-prefill hits it
+    assert stats["prefix_hits"] >= 2
+    assert stats["reroutes"] == 2
+
+
+# --------------------------------------------------------------- blueprint --
+
+def test_blueprint_shared_prefix_plan():
+    plan = serving_page_plan(REDUCED["qwen3-32b"], SHAPES["decode_32k"],
+                             shared_prefix_len=1024, users_per_prefix=8)
+    sp = plan["shared_prefix"]
+    assert sp["prefix_pages"] == 64           # 1024 / page_size 16
+    assert sp["pages_per_seq_effective"] < plan["pages_per_seq"]
+    assert sp["max_concurrent_seqs"] > plan["max_concurrent_seqs"]
+    assert 0 < sp["page_savings_frac"] < 1
+    flat = serving_page_plan(REDUCED["qwen3-32b"], SHAPES["decode_32k"],
+                             shared_prefix_len=1024, users_per_prefix=1)
+    assert flat["shared_prefix"]["page_savings_frac"] == 0
+    with pytest.raises(ValueError):
+        serving_page_plan(REDUCED["qwen3-32b"], SHAPES["decode_32k"],
+                          shared_prefix_len=64, users_per_prefix=0)
