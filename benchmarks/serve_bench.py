@@ -29,6 +29,14 @@ width, the per-replica slot/page budget divided so k replicas of
 fleet throughput, p50/p99 latency in fleet ticks, and the router's
 steady-state reserved-page imbalance. ``--smoke --replicas 2`` is the CI
 fleet smoke step.
+
+``--tp 1,2,4`` switches to **shard-group mode**: the same trace (fp32)
+is served by one scheduler at each tensor-parallel width — page pools and
+attention heads split tp ways across a shard group — reporting
+throughput, p50/p99 tick latency, and per-shard page-pool utilisation.
+Byte-identity vs ``tp=1`` is a *hard gate*: any token difference exits
+non-zero (the determinism contract in docs/sharding.md).
+``--smoke --tp 2`` is the CI shard-group smoke step.
 """
 from __future__ import annotations
 
@@ -109,8 +117,11 @@ def run_paged(sched, workload, arrivals_per_step):
 
 # --------------------------------------------------------- shared prefix --
 
-def _shared_pass(sched, workload, arrivals_per_step):
-    """One timed pass; returns (wall, stats delta, per-request tokens)."""
+def _timed_pass(sched, workload, arrivals_per_step):
+    """One timed scheduler pass; returns (wall, stats delta, requests).
+
+    The single measurement harness for the shared-prefix and shard-group
+    modes — submit with staggered arrivals, run, delta the stats."""
     base = sched.step_idx
     reqs = []
     for i, (prompt, gen) in enumerate(workload):
@@ -121,7 +132,7 @@ def _shared_pass(sched, workload, arrivals_per_step):
     sched.run()
     wall = time.time() - t0
     delta = {k: sched.stats[k] - before[k] for k in before}
-    return wall, delta, [list(r.out_tokens) for r in reqs]
+    return wall, delta, reqs
 
 
 def bench_shared_prefix(cfg, params, args):
@@ -147,13 +158,14 @@ def bench_shared_prefix(cfg, params, args):
         sched = ContinuousBatchingScheduler(
             cfg, params, max_slots=args.batch, page_size=args.page_size,
             max_seq_len=max_seq, prefix_cache=pc)
-        _shared_pass(sched, workload, args.arrivals_per_step)       # warm
+        _timed_pass(sched, workload, args.arrivals_per_step)        # warm
         best = None
         for _ in range(args.repeats):
-            res = _shared_pass(sched, workload, args.arrivals_per_step)
+            res = _timed_pass(sched, workload, args.arrivals_per_step)
             if best is None or res[0] < best[0]:
                 best = res
-        wall, delta, tokens[mode] = best
+        wall, delta, best_reqs = best
+        tokens[mode] = [list(r.out_tokens) for r in best_reqs]
         sides[mode] = {
             "useful_tok_per_s": round(gen_total / wall, 1),
             "wall_s": round(wall, 3),
@@ -182,6 +194,63 @@ def bench_shared_prefix(cfg, params, args):
         "tokens_identical": tokens["shared"] == tokens["no_sharing"],
     }
     return out
+
+
+# ----------------------------------------------------------- shard groups --
+
+def bench_tp(cfg, params, args, widths):
+    """Shard-group mode: one scheduler serving the same trace at each tp
+    width, with byte-identity vs tp=1 as a hard gate. fp32 for the same
+    reason as the shared-prefix gate: exact argmax equality across
+    differently-grouped compiled paths is an fp32 property."""
+    rng = np.random.RandomState(args.seed)
+    workload = make_workload(cfg, rng, args.requests, args.prompt_lo,
+                             args.prompt_hi, args.gen_lo, args.gen_hi,
+                             args.long_frac)
+    max_seq = args.prompt_hi + args.gen_hi + 1
+    gen_total = sum(g for _, g in workload)
+    sides, tokens = [], {}
+    for k in widths:
+        sched = ContinuousBatchingScheduler(
+            cfg, params, max_slots=args.batch, page_size=args.page_size,
+            max_seq_len=max_seq, tp=k)
+        _timed_pass(sched, workload, args.arrivals_per_step)       # warm
+        best = None
+        for _ in range(args.repeats):
+            res = _timed_pass(sched, workload, args.arrivals_per_step)
+            if best is None or res[0] < best[0]:
+                best = res
+        best_wall, delta, reqs = best
+        tokens[k] = [list(r.out_tokens) for r in reqs]
+        lat = np.asarray([r.finish_step - r.arrival_step for r in reqs],
+                         float)
+        shard = sched.shard_stats()
+        per0 = shard["per_shard"][0]
+        sides.append({
+            "tp": k,
+            "useful_tok_per_s": round(gen_total / best_wall, 1),
+            "wall_s": round(best_wall, 3),
+            "decode_steps": delta["decode_steps"],
+            "p50_latency_ticks": float(np.percentile(lat, 50)),
+            "p99_latency_ticks": float(np.percentile(lat, 99)),
+            "peak_pages": sched.stats["peak_pages"],
+            "per_shard_pool": {
+                "shards": k,
+                "peak_pages": per0["peak_pages"],
+                "peak_utilization": per0["peak_utilization"],
+                "pool_bytes_per_shard": per0["pool_bytes"],
+            },
+        })
+    base_tp = widths[0]
+    identical = all(tokens[k] == tokens[base_tp] for k in widths[1:])
+    return {
+        "arch": cfg.name,
+        "mode": "shard-group",
+        "requests": len(workload),
+        "batch_width": args.batch,
+        "tp": sides,
+        "tokens_identical": identical,
+    }
 
 
 # ----------------------------------------------------------------- fleet --
@@ -260,6 +329,11 @@ def main() -> None:
                     help="fleet mode: comma-separated fleet widths (e.g. "
                     "1,2,4) served through the fabric router instead of "
                     "the static-vs-paged head-to-head")
+    ap.add_argument("--tp", default=None,
+                    help="shard-group mode: comma-separated tensor-parallel "
+                    "widths (e.g. 1,2,4); each width serves the same trace "
+                    "fp32 with page pools and heads split tp ways, and "
+                    "byte-identity vs the first width is a hard gate")
     ap.add_argument("--shared-prefix", action="store_true",
                     help="shared-prefix mode: persona workload served by "
                     "the paged scheduler with the copy-on-write prefix "
@@ -282,6 +356,13 @@ def main() -> None:
                     "end-to-end, ignores the speedup number")
     args = ap.parse_args()
 
+    modes = [flag for flag, on in (("--tp", args.tp),
+                                   ("--shared-prefix", args.shared_prefix),
+                                   ("--replicas", args.replicas)) if on]
+    if len(modes) > 1:
+        ap.error("bench modes are mutually exclusive; got "
+                 + " and ".join(modes))
+
     if args.smoke:
         args.requests, args.repeats, args.wide, args.deep = 8, 1, 1, 1
         if args.shared_prefix:
@@ -291,6 +372,24 @@ def main() -> None:
     cfg = bench_cfg(args.arch, args.wide, args.deep)
     params = M.init(cfg, jax.random.PRNGKey(args.seed))
     rng = np.random.RandomState(args.seed)
+
+    # ---- shard-group mode: tensor-parallel widths + byte-identity gate ----
+    if args.tp:
+        widths = [int(k) for k in str(args.tp).split(",")]
+        bad = [k for k in widths if k > 1 and cfg.n_kv_heads % k]
+        if bad:
+            raise SystemExit(
+                f"--tp {bad} does not divide n_kv_heads={cfg.n_kv_heads} "
+                f"at --wide {args.wide}; widen the config")
+        cfg = dataclasses.replace(cfg, dtype="float32")
+        params = M.init(cfg, jax.random.PRNGKey(args.seed))
+        out = bench_tp(cfg, params, args, widths)
+        print(json.dumps(out, indent=2))
+        if not out["tokens_identical"]:
+            raise SystemExit("shard-group serving changed output tokens "
+                             "— tp determinism contract broken (see "
+                             "docs/sharding.md)")
+        return
 
     # ---- shared-prefix mode: COW prefix cache on vs off -------------------
     if args.shared_prefix:

@@ -18,6 +18,16 @@ involuntary path: a heartbeat DEAD host or a SimCloud spot preemption
 fails every replica on the host, the router re-prefills the lost streams
 on survivors (token-identical for dense/SSM archs), and the node is
 replaced from the warm-spare pool when one is available.
+
+Shard groups: with ``tp > 1`` on the router, the controller scales in
+*group* units — every scale-out acquires ``tp`` nodes (one
+``ClusterLifecycle.extend`` call, contiguous ranks), every completed drain
+releases all ``tp``. A single preempted group *member* is the one failure
+the group survives: when a warm spare exists the controller swaps the
+node under its stable hostname and the group's streams never stop (the
+surviving shards re-materialise the lost pool slice onto the spare);
+only with no spare left does the whole group fail and its streams
+re-route, with the surviving members' nodes released.
 """
 from __future__ import annotations
 
@@ -66,6 +76,7 @@ class FleetController:
                  replica_bands: Optional[CapacityBands] = None,
                  log: Optional[EventLog] = None):
         self.router = router
+        self.tp = router.replica_kw.get("tp", 1)   # nodes per shard group
         self.min_replicas = min_replicas
         self.max_replicas = max_replicas
         self.policy = policy or default_fleet_policy(
@@ -175,11 +186,17 @@ class FleetController:
                 self.log.emit(self.now, "autoscale", "undrain_replica",
                               replica=rep.replica_id)
                 continue
-            hostname = self._acquire_node()
-            rep = self.router.add_replica(hostname=hostname)
+            hostnames = self._acquire_nodes()
+            if self.tp > 1:
+                rep = self.router.add_replica(hostnames=hostnames)
+            else:
+                rep = self.router.add_replica(
+                    hostname=hostnames[0] if hostnames else None)
             self._attach_inner(rep)
             self.log.emit(self.now, "autoscale", "add_replica",
-                          replica=rep.replica_id, hostname=hostname)
+                          replica=rep.replica_id,
+                          hostname=hostnames[0] if hostnames else None,
+                          nodes=len(hostnames) if hostnames else 0)
 
     def _scale_in(self, n: int) -> None:
         for _ in range(n):
@@ -197,21 +214,27 @@ class FleetController:
     def _finish_drains(self) -> None:
         for rep in self._draining():
             if rep.idle:
-                hostname = self.router.remove_replica(rep.replica_id)
+                hostnames = list(rep.hostnames)   # before removal purges them
+                self.router.remove_replica(rep.replica_id)
                 self._inner.pop(rep.replica_id, None)
                 self.log.emit(self.now, "autoscale", "remove_replica",
-                              replica=rep.replica_id, hostname=hostname)
-                self._release_node(hostname)
+                              replica=rep.replica_id,
+                              hostname=hostnames[0] if hostnames else None)
+                for hostname in hostnames:        # a group frees tp nodes
+                    self._release_node(hostname)
 
     # -------------------------------------------------------------- nodes --
-    def _acquire_node(self) -> Optional[str]:
+    def _acquire_nodes(self) -> Optional[List[str]]:
+        """Acquire one replica's worth of nodes: ``tp`` per shard group,
+        in one extend call so the group lands on contiguous ranks."""
         if self.lifecycle is None or self.cluster is None:
             return None
-        nodes = self.lifecycle.extend(self.cluster, 1)
+        nodes = self.lifecycle.extend(self.cluster, self.tp)
         if self.monitor is not None:
-            self.monitor.register(nodes[0].hostname,
-                                  now=self.lifecycle.cloud.clock)
-        return nodes[0].hostname
+            for n in nodes:
+                self.monitor.register(n.hostname,
+                                      now=self.lifecycle.cloud.clock)
+        return [n.hostname for n in nodes]
 
     def _release_node(self, hostname: Optional[str]) -> None:
         if hostname is None or self.lifecycle is None or self.cluster is None:
@@ -219,7 +242,8 @@ class FleetController:
         if hostname not in self.cluster.directory.nodes:
             return                           # already gone (failed host)
         # only release nodes no other replica still occupies
-        if any(r.hostname == hostname for r in self.router.replicas.values()):
+        if any(hostname in r.hostnames
+               for r in self.router.replicas.values()):
             return
         self.lifecycle.shrink(self.cluster, [hostname])
         if self.monitor is not None:
@@ -227,11 +251,33 @@ class FleetController:
 
     # ----------------------------------------------------------- failures --
     def _on_host_dead(self, hostname: str) -> None:
-        """Heartbeat DEAD (or preemption) on a replica host: fail + re-route
-        its streams, then replace the node from the warm-spare pool when
-        one exists (a fresh replica lands on the stable hostname)."""
-        had_replica = any(r.hostname == hostname
-                          for r in self.router.replicas.values())
+        """Heartbeat DEAD (or preemption) on a replica host.
+
+        tp == 1 (or no spare): fail + re-route the replica's streams, then
+        replace the node from the warm-spare pool when one exists (a fresh
+        replica lands on the stable hostname).
+
+        tp > 1 with a warm spare: *member replacement* — the spare swaps in
+        under the dead member's stable hostname and the group keeps
+        decoding; its streams, pools, and clocks never notice (the
+        surviving tp-1 shards re-materialise the lost pool slice onto the
+        spare). The group only fails — streams re-routed, surviving
+        members' nodes released — when the spare pool is empty.
+        """
+        group = next((r for r in self.router.replicas.values()
+                      if hostname in r.hostnames and not r.failed), None)
+        if group is not None and group.tp > 1 and self.lifecycle is not None \
+                and self.cluster is not None and self.lifecycle.spares:
+            self.lifecycle.replace_failed(self.cluster, hostname)
+            if self.monitor is not None:
+                self.monitor.register(hostname,
+                                      now=self.lifecycle.cloud.clock)
+            self.log.emit(self.now, "autoscale", "shard_member_replaced",
+                          hostname=hostname, replica=group.replica_id,
+                          tp=group.tp)
+            return
+        had_replica = group is not None
+        member_hosts = list(group.hostnames) if group is not None else []
         rerouted = self.router.fail_host(hostname)
         if not had_replica:
             return
@@ -239,7 +285,12 @@ class FleetController:
                       hostname=hostname, rerouted=len(rerouted))
         if self.lifecycle is None or self.cluster is None:
             return
-        if self.lifecycle.spares:
+        # a failed group's surviving members are healthy nodes with nothing
+        # to serve — release them before deciding on replacement capacity
+        for other in member_hosts:
+            if other != hostname:
+                self._release_node(other)
+        if self.lifecycle.spares and self.tp == 1:
             self.lifecycle.replace_failed(self.cluster, hostname)
             rep = self.router.add_replica(hostname=hostname)
             self._attach_inner(rep)

@@ -110,7 +110,13 @@ def suggest_plan(cfg: ModelConfig, shape: ShapeConfig, mesh,
             act_rules["cache_seq"] = ("model",)
         est["cache_bytes"] = _cache_bytes(cfg, shape) / (
             model_par * data_par * pod_par)
-        pp = serving_page_plan(cfg, shape, sizes)
+        try:
+            pp = serving_page_plan(cfg, shape, sizes)
+        except ValueError as e:
+            # suggest_plan is advisory: surface the unviable pool as a note
+            # (provision_serving, the enforcing caller, still raises)
+            pp = None
+            notes.append(f"paged-KV pool not viable: {e}")
         if pp is not None:
             est["page_size"] = pp["page_size"]
             est["num_pages"] = pp["num_pages"]
@@ -185,7 +191,8 @@ def optimized_cfg_overrides(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, A
 def serving_page_plan(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
                       page_size: int = 16, replicas: int = 1,
                       shared_prefix_len: int = 0,
-                      users_per_prefix: int = 1) -> Optional[Dict[str, Any]]:
+                      users_per_prefix: int = 1,
+                      tp: int = 1) -> Optional[Dict[str, Any]]:
     """Size the paged-KV page pool for the continuous-batching scheduler.
 
     The Ambari-style suggested config for the "serve" service
@@ -193,7 +200,10 @@ def serving_page_plan(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
     is left after bf16 serving params becomes one shared page pool, and the
     scheduler's admission control (worst-case page reservation) keeps
     occupancy inside it. Returns None for archs the paged engine does not
-    cover (MLA / enc-dec — they keep the dense engine).
+    cover (MLA / enc-dec — they keep the dense engine). A pool too small
+    to ever admit one full-length sequence raises a ``ValueError`` naming
+    the minimum viable pool — a "serve" service that can serve nothing
+    must fail at planning time, not admit-time.
 
     With ``replicas=k`` the plan additionally carries a coherent per-replica
     split for the serving fabric (``repro.serving.router``): each replica
@@ -206,6 +216,16 @@ def serving_page_plan(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
     relative to the HBM fit; ``max_replicas`` is the largest k for which
     the split stays inside the budget.
 
+    With ``tp=k`` each replica is a *shard group*: pages are logical, each
+    member stores the ``1/k`` kv-head slice of every page, and params
+    shard ``k`` ways too, so the pool is sized by what one member's HBM
+    share can hold of its slices: ``num_pages = (budget/k) //
+    (shard_page_bytes)``. Expressed in whole-page equivalents the k
+    per-shard budgets (``pages_budget_per_shard = (budget/k) //
+    page_bytes``) sum back to the unsharded ``num_pages`` within one page
+    per shard — only integer flooring separates them (the acceptance
+    check in tests/test_sharding.py). See docs/sharding.md for the math.
+
     All quantities are *global* (whole mesh); divide ``pool_bytes`` by the
     device count for the per-chip footprint. The suggestion, as everywhere
     in the planner, is a starting point the user may override.
@@ -214,7 +234,10 @@ def serving_page_plan(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
         return None
     if replicas < 1:
         raise ValueError("replicas must be >= 1")
-    from repro.serving.paged_cache import page_bytes_per_token
+    if tp < 1:
+        raise ValueError("tp must be >= 1")
+    from repro.serving.paged_cache import (page_bytes_per_token,
+                                           shard_page_bytes_per_token)
     if page_bytes_per_token(cfg) == 0:
         return None                 # pure-SSM arch: O(1) state, no KV pages
     sizes = _mesh_sizes(mesh) if mesh is not None else {}
@@ -224,9 +247,29 @@ def serving_page_plan(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
     param_bytes = cfg.param_count() * 2            # bf16 serving params
     budget = max(n_dev * HBM_BUDGET - param_bytes, 0)
     tok_bytes = page_bytes_per_token(cfg)
-    num_pages = int(budget // (tok_bytes * page_size))
+    # raises for tp not dividing n_kv_heads — the same divisibility rule
+    # the sharded decode path enforces (ShardGroup.validate_model)
+    shard_tok_bytes = shard_page_bytes_per_token(cfg, tp)
+    # the pool is bounded by one shard-group member: its 1/tp share of the
+    # budget must hold its 1/tp slice of every page (tp=1: the whole pool)
+    num_pages = int((budget // tp) // (shard_tok_bytes * page_size))
+    pages_budget_per_shard = int((budget // tp) // (tok_bytes * page_size))
     pages_per_seq = -(-shape.seq_len // page_size)
     max_seqs = max(num_pages - 1, 0) // max(pages_per_seq, 1)
+    if max_seqs < 1:
+        # a tight pool silently flooring to zero full-length sequences used
+        # to provision a service that could admit nothing (classic trigger:
+        # page_size not dividing max_len rounds pages_per_seq up past the
+        # fit) — name the minimum viable pool instead
+        need_pages = pages_per_seq + 1          # one full seq + sink page
+        need_bytes = need_pages * page_size * tok_bytes + param_bytes
+        raise ValueError(
+            f"{cfg.name} on {shape.name}: pool of {num_pages} pages cannot "
+            f"hold one full-length sequence ({shape.seq_len} tokens = "
+            f"{pages_per_seq} pages of {page_size} + sink); minimum viable "
+            f"pool is {need_pages} pages — {need_bytes / GiB:.1f} GiB of "
+            f"HBM incl. bf16 params (have {n_dev * HBM_BUDGET / GiB:.1f}); "
+            f"provision more chips or shrink page_size/max_len")
     # capacity bands for the elastic control plane (repro.autoscale): the
     # autoscaler may move slot count / pool size anywhere inside them. The
     # max band is the HBM fit above; the min band keeps one full-length
@@ -258,6 +301,11 @@ def serving_page_plan(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
         "slots_per_replica": slots_per_replica,
         "pages_per_replica": pages_per_replica,
         "max_replicas": max_replicas,
+        # ---- shard-group split (tensor-parallel replicas) ------------------
+        "tp": tp,
+        "pages_budget_per_shard": pages_budget_per_shard,
+        "shard_page_bytes": shard_tok_bytes * page_size,
+        "shard_pool_bytes": num_pages * page_size * shard_tok_bytes,
     }
     # ---- shared-prefix capacity model (copy-on-write page cache) ----------
     # with N-way prefix sharing a sequence's *marginal* footprint is its

@@ -138,7 +138,7 @@ class AmbariServer:
     # ---------------------------------------------------------- serving --
     def provision_serving(self, model_cfg, shape, mesh=None,
                           config_overrides: Optional[Dict[str, Any]] = None,
-                          replicas: int = 1) -> ServiceInstance:
+                          replicas: int = 1, tp: int = 1) -> ServiceInstance:
         """Install the continuous-batching serving engine as a service.
 
         The framework analogue of installing Impala's backing service: the
@@ -153,9 +153,17 @@ class AmbariServer:
         slot/page split and ``replica_placement`` pins each replica to a
         cluster node (round-robin over the directory's slaves — the fabric
         router and fleet autoscaler key drain/re-route on these hostnames).
+
+        ``tp=k`` makes every replica a *shard group*: ``replica_placement``
+        entries become contiguous k-node hostname lists (group i spans
+        slaves ``[i*k, (i+1)*k)`` — contiguity keeps a group's members on
+        adjacent ranks, the layout the group's all-gather wants), and the
+        cluster must hold ``replicas * k`` slaves so no two shards of one
+        group share a node.
         """
         from repro.core.blueprint import serving_page_plan
-        pool = serving_page_plan(model_cfg, shape, mesh, replicas=replicas)
+        pool = serving_page_plan(model_cfg, shape, mesh, replicas=replicas,
+                                 tp=tp)
         if pool is None:
             raise ValueError(
                 f"{model_cfg.name} is not paged-servable (MLA/enc-dec/"
@@ -171,9 +179,19 @@ class AmbariServer:
         cfg["arch"] = model_cfg.name
         cfg["shape"] = shape.name
         slaves = self.cluster.directory.slaves()
-        cfg["replica_placement"] = [
-            slaves[i % len(slaves)].hostname if slaves else None
-            for i in range(replicas)]
+        if tp > 1:
+            if len(slaves) < replicas * tp:
+                raise ValueError(
+                    f"{replicas} shard groups of tp={tp} need "
+                    f"{replicas * tp} slaves; cluster has {len(slaves)} — "
+                    "a group must span distinct nodes")
+            cfg["replica_placement"] = [
+                [slaves[i * tp + j].hostname for j in range(tp)]
+                for i in range(replicas)]
+        else:
+            cfg["replica_placement"] = [
+                slaves[i % len(slaves)].hostname if slaves else None
+                for i in range(replicas)]
         cfg.update(config_overrides or {})
         svc = ServiceInstance(name="serve", port=cfg.get("port"),
                               placement=cfg["placement"],
@@ -183,7 +201,7 @@ class AmbariServer:
                               service="serve", placement=len(cfg["placement"]),
                               num_pages=pool["num_pages"],
                               page_size=pool["page_size"],
-                              replicas=replicas)
+                              replicas=replicas, tp=tp)
         return svc
 
     def start(self, name: str) -> ServiceInstance:

@@ -42,12 +42,12 @@ def _fd_kernel(q_ref, k_ref, v_ref, m_ref, l_ref, o_ref, *,
     s = jnp.where(k_pos < kv_len, s, _NEG)    # (G, bk)
     m = s.max(axis=-1)                        # (G,)
     p = jnp.exp(s - m[:, None])
-    l = p.sum(axis=-1)
+    lse = p.sum(axis=-1)
     v = v_ref[0].astype(jnp.float32)          # (bk, d)
     pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
                              preferred_element_type=jnp.float32)
     m_ref[0, 0] = m
-    l_ref[0, 0] = l
+    l_ref[0, 0] = lse
     o_ref[0, 0] = pv
 
 
@@ -78,7 +78,7 @@ def decode_attention_partials(q: jnp.ndarray, k_cache: jnp.ndarray,
 
     kernel = functools.partial(_fd_kernel, scale=scale, softcap=softcap,
                                block_k=block_k, kv_len=S)
-    m, l, o = pl.pallas_call(
+    m, lse, o = pl.pallas_call(
         kernel,
         grid=(B * KVH, n_s),
         in_specs=[
@@ -98,4 +98,4 @@ def decode_attention_partials(q: jnp.ndarray, k_cache: jnp.ndarray,
         ],
         interpret=interpret,
     )(qf, kf, vf)
-    return m, l, o
+    return m, lse, o

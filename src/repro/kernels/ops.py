@@ -38,15 +38,32 @@ def decode_attention(q, k_cache, v_cache, *, softcap=None, scale=None,
     B, H, d = q.shape
     KVH = k_cache.shape[2]
     G = H // KVH
-    m, l, o = _fd.decode_attention_partials(
+    m, lse, o = _fd.decode_attention_partials(
         q, k_cache, v_cache, softcap=softcap, scale=scale, block_k=block_k,
         interpret=interpret)
     m_glob = m.max(axis=1, keepdims=True)                   # (BK,1,G)
     w = jnp.exp(m - m_glob)
-    l_glob = (l * w).sum(axis=1)                            # (BK,G)
+    l_glob = (lse * w).sum(axis=1)                          # (BK,G)
     o_glob = (o * w[..., None]).sum(axis=1)                 # (BK,G,d)
     out = o_glob / jnp.maximum(l_glob, 1e-30)[..., None]
     return out.reshape(B, KVH, G, d).reshape(B, H, d).astype(q.dtype)
+
+
+def _paged_decode_one(q, k_pages, v_pages, block_table, seq_lens, *,
+                      k_scale_pages, v_scale_pages, softcap, window, scale,
+                      interpret):
+    """One pool's paged flash-decode: kernel partials + jnp LSE combine."""
+    B, H, d = q.shape
+    m, lse, o = _pd.paged_decode_partials(
+        q, k_pages, v_pages, block_table, seq_lens,
+        k_scale_pages=k_scale_pages, v_scale_pages=v_scale_pages,
+        softcap=softcap, window=window, scale=scale, interpret=interpret)
+    m_glob = m.max(axis=2, keepdims=True)                   # (B,KVH,1,G)
+    w = jnp.exp(m - m_glob)
+    l_glob = (lse * w).sum(axis=2)                          # (B,KVH,G)
+    o_glob = (o * w[..., None]).sum(axis=2)                 # (B,KVH,G,d)
+    out = o_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+    return out.reshape(B, H, d).astype(q.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("softcap", "window", "scale",
@@ -61,19 +78,38 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, seq_lens, *,
     q: (B,H,d); pools (P,ps,KVH,d); block_table (B,n_pg); seq_lens (B,)
     -> (B,H,d). See ``repro.kernels.paged_decode`` for the page gather.
     """
+    return _paged_decode_one(q, k_pages, v_pages, block_table, seq_lens,
+                             k_scale_pages=k_scale_pages,
+                             v_scale_pages=v_scale_pages, softcap=softcap,
+                             window=window, scale=scale, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "window", "scale",
+                                             "interpret"))
+def paged_decode_attention_sharded(q, k_pages, v_pages, block_table,
+                                   seq_lens, *, k_scale_pages=None,
+                                   v_scale_pages=None, softcap=None,
+                                   window=None, scale=None,
+                                   interpret=False):
+    """Shard-group paged flash-decode: pools carry a leading shard axis
+    (tp, P, ps, KVH/tp, d) and the kernel is invoked once per shard on
+    that shard's query-head slice of ``q`` (B, H, d); the head-axis concat
+    of the per-shard results is the group's all_gather. The block table and
+    sequence lengths are the shared control plane — identical operands on
+    every shard.
+    """
+    tp = k_pages.shape[0]
     B, H, d = q.shape
-    KVH = k_pages.shape[2]
-    G = H // KVH
-    m, l, o = _pd.paged_decode_partials(
-        q, k_pages, v_pages, block_table, seq_lens,
-        k_scale_pages=k_scale_pages, v_scale_pages=v_scale_pages,
-        softcap=softcap, window=window, scale=scale, interpret=interpret)
-    m_glob = m.max(axis=2, keepdims=True)                   # (B,KVH,1,G)
-    w = jnp.exp(m - m_glob)
-    l_glob = (l * w).sum(axis=2)                            # (B,KVH,G)
-    o_glob = (o * w[..., None]).sum(axis=2)                 # (B,KVH,G,d)
-    out = o_glob / jnp.maximum(l_glob, 1e-30)[..., None]
-    return out.reshape(B, H, d).astype(q.dtype)
+    Hs = H // tp
+    outs = []
+    for s in range(tp):
+        outs.append(_paged_decode_one(
+            q[:, s * Hs:(s + 1) * Hs], k_pages[s], v_pages[s], block_table,
+            seq_lens,
+            k_scale_pages=None if k_scale_pages is None else k_scale_pages[s],
+            v_scale_pages=None if v_scale_pages is None else v_scale_pages[s],
+            softcap=softcap, window=window, scale=scale, interpret=interpret))
+    return jnp.concatenate(outs, axis=1)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -64,14 +64,14 @@ def _pd_kernel(bt_ref, lens_ref, q_ref, k_ref, v_ref, *refs,
     s = jnp.where(ok, s, _NEG)                  # (G, ps)
     m = s.max(axis=-1)                          # (G,)
     p = jnp.exp(s - m[:, None])
-    l = p.sum(axis=-1)
+    lse = p.sum(axis=-1)
     v = v_ref[0, :, 0].astype(jnp.float32)      # (ps, d)
     if quant:
         v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
     pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
                              preferred_element_type=jnp.float32)
     m_ref[0, 0, 0] = m
-    l_ref[0, 0, 0] = l
+    l_ref[0, 0, 0] = lse
     o_ref[0, 0, 0] = pv
 
 
@@ -126,7 +126,7 @@ def paged_decode_partials(q: jnp.ndarray, k_pages: jnp.ndarray,
                          lambda b, h, i, bt, lens: (b, h, i, 0, 0)),
         ],
     )
-    m, l, o = pl.pallas_call(
+    m, lse, o = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=[
@@ -136,4 +136,4 @@ def paged_decode_partials(q: jnp.ndarray, k_pages: jnp.ndarray,
         ],
         interpret=interpret,
     )(block_table.astype(jnp.int32), seq_lens.astype(jnp.int32), *args)
-    return m, l, o
+    return m, lse, o

@@ -24,6 +24,12 @@ scheduler replicas (``--router`` picks the routing policy), and
 (``repro.autoscale.FleetController``): start at one replica, add/drain
 whole replicas with fleet queue depth.
 
+``--tp k`` (paged only) serves every scheduler/replica as a k-way
+tensor-parallel *shard group*: page pools and attention heads (and MoE
+experts) split k ways while tokens stay byte-identical to ``--tp 1``
+(docs/sharding.md). Composes with ``--replicas``: a fleet of shard
+groups.
+
 ``--seed`` drives both parameter init and workload generation, so
 run-to-run variation studies are one flag.
 
@@ -155,7 +161,7 @@ def run_fleet(cfg, params, args) -> dict:
     router = ServingRouter(cfg, params, replicas=start,
                            max_slots=args.batch, page_size=args.page_size,
                            max_seq_len=max_seq, route_policy=args.router,
-                           prefix_cache=args.prefix_cache)
+                           prefix_cache=args.prefix_cache, tp=args.tp)
     ctl = None
     if args.autoscale:
         from repro.autoscale import FleetController
@@ -173,6 +179,7 @@ def run_fleet(cfg, params, args) -> dict:
         "engine": "fleet",
         "arch": cfg.name,
         "replicas": args.replicas,
+        "tp": args.tp,
         "router": args.router,
         "requests": len(done),
         "tokens_out": fleet["tokens_out"],
@@ -204,7 +211,7 @@ def run_paged(cfg, params, args) -> dict:
     sched = ContinuousBatchingScheduler(
         cfg, params, max_slots=start_slots, page_size=args.page_size,
         num_pages=start_slots * n_pg + 1 if args.autoscale else None,
-        max_seq_len=max_seq, prefix_cache=args.prefix_cache)
+        max_seq_len=max_seq, prefix_cache=args.prefix_cache, tp=args.tp)
     ctl = None
     if args.autoscale:
         from repro.autoscale import AutoscaleController, CapacityBands
@@ -222,6 +229,7 @@ def run_paged(cfg, params, args) -> dict:
     out = {
         "engine": "paged",
         "arch": cfg.name,
+        "tp": args.tp,
         "requests": len(done),
         "decode_steps": sched.stats["decode_steps"],
         "tokens_out": toks,
@@ -235,6 +243,8 @@ def run_paged(cfg, params, args) -> dict:
         "peak_pages": sched.stats["peak_pages"],
         "generated": [r.out_tokens[:8] for r in done[:4]],
     }
+    if args.tp > 1:
+        out["shards"] = sched.shard_stats()
     out.update(_prefix_stats(sched.stats))
     if ctl is not None:
         out["autoscale"] = ctl.summary()
@@ -261,6 +271,12 @@ def main() -> None:
                     help="paged engine: serve through the replicated "
                     "fabric with this many scheduler replicas (with "
                     "--autoscale this is the fleet ceiling)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="paged engine: tensor-parallel shard group width "
+                    "— each scheduler/replica spans this many shards "
+                    "(page pools and attention heads split tp ways; "
+                    "tokens are byte-identical to --tp 1, see "
+                    "docs/sharding.md)")
     ap.add_argument("--router", default="least-pages",
                     choices=("least-pages", "round-robin",
                              "prefix-affinity"),
@@ -308,6 +324,11 @@ def main() -> None:
                  "cache can share prefix pages)")
     if args.replicas < 1:
         ap.error("--replicas must be >= 1")
+    if args.tp < 1:
+        ap.error("--tp must be >= 1")
+    if args.tp > 1 and args.engine != "paged":
+        ap.error("--tp requires --engine paged (shard groups split the "
+                 "paged KV pools)")
 
     cfg = get_reduced(args.arch)
     params = M.init(cfg, jax.random.PRNGKey(args.seed))

@@ -100,8 +100,8 @@ def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                                 causal, window, softcap, scale,
                                 q_offset + q0, interior_end, kv_block,
                                 carry=carry, return_carry=True)
-        m, l, acc = carry
-        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        m, lse, acc = carry
+        o = acc / jnp.maximum(lse, 1e-30)[..., None]
         outs.append(jnp.moveaxis(o, 3, 1).astype(v.dtype))
     return jnp.concatenate(outs, axis=1).reshape(B, Sq, H, hdv)
 
@@ -156,7 +156,7 @@ def _scan_chunk(qi, ks, vs, causal, window, softcap, scale,
     masked = causal or window is not None
 
     def body(c, xs):
-        m, l, acc = c
+        m, lse, acc = c
         kcb, vcb, kp = xs
         s = jnp.einsum("bqhgd,bkhd->bhgqk", qi, kcb,
                        preferred_element_type=jnp.float32) * scale
@@ -167,7 +167,7 @@ def _scan_chunk(qi, ks, vs, causal, window, softcap, scale,
         m_new = jnp.maximum(m, s.max(axis=-1))
         alpha = jnp.exp(m - m_new)
         p = jnp.exp(s - m_new[..., None])
-        l_new = l * alpha + p.sum(axis=-1)
+        l_new = lse * alpha + p.sum(axis=-1)
         pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vcb.dtype), vcb,
                         preferred_element_type=jnp.float32)
         acc_new = acc * alpha[..., None] + pv
@@ -181,8 +181,8 @@ def _scan_chunk(qi, ks, vs, causal, window, softcap, scale,
         carry, _ = jax.lax.scan(body, carry, (kc, vc, kpos))
     if return_carry:
         return carry
-    m, l, acc = carry
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    m, lse, acc = carry
+    out = acc / jnp.maximum(lse, 1e-30)[..., None]
     return jnp.moveaxis(out, 3, 1).astype(vs.dtype)  # (B,qb,KVH,G,hdv)
 
 
@@ -240,10 +240,17 @@ def gqa_schema(cfg: ModelConfig) -> Dict[str, ParamSpec]:
     return p
 
 
-def _qkv(cfg: ModelConfig, p, x, cos, sin, positions_offset_rope=True):
+def _qkv(cfg: ModelConfig, p, x, cos, sin, positions_offset_rope=True,
+         n_heads=None, n_kv_heads=None):
+    """QKV projections. ``n_heads``/``n_kv_heads`` override the config when
+    ``p`` holds one shard's head-slice of the weights (tensor-parallel
+    paged decode) — every per-head op below is independent of the head
+    count, so a slice computes exactly the corresponding slice of the
+    full-width result."""
     B, S, _ = x.shape
     hd = cfg.resolved_head_dim
-    H, KVH = cfg.n_heads, cfg.n_kv_heads
+    H = cfg.n_heads if n_heads is None else n_heads
+    KVH = cfg.n_kv_heads if n_kv_heads is None else n_kv_heads
     dt = x.dtype
     q = x @ p["wq"].astype(dt)
     k = x @ p["wk"].astype(dt)
@@ -335,9 +342,161 @@ def gqa_decode(cfg: ModelConfig, p, x, cos, sin, cache: Dict[str, jnp.ndarray],
     return y, new_cache
 
 
+def _paged_write_attend(cfg: ModelConfig, pool: Dict[str, jnp.ndarray],
+                        q: jnp.ndarray, k_new: jnp.ndarray,
+                        v_new: jnp.ndarray, seq_lens: jnp.ndarray,
+                        block_table: jnp.ndarray, *, local: bool):
+    """Write one decode token's K/V into its page and attend the pages.
+
+    The head-width-agnostic core of the paged decode step: ``pool`` holds
+    one pool's leaves (num_pages, page_size, KVH', hd) where KVH' is either
+    the full kv-head count (tp=1) or one shard's slice — the same function
+    serves both, which is what keeps the tensor-parallel path's math
+    identical to the unsharded one per head. q: (B,1,H',hd); k_new/v_new:
+    (B,1,KVH',hd). Returns (o (B,1,H',hd), new_pool).
+    """
+    B = q.shape[0]
+    dt = q.dtype
+    ps = pool["k_pages"].shape[1]
+    n_pg = block_table.shape[1]
+    pos = seq_lens.astype(jnp.int32)                       # write position
+    page = jnp.take_along_axis(block_table, (pos // ps)[:, None],
+                               axis=1)[:, 0]
+    slot = pos % ps
+    if cfg.cache_quant:
+        k8, ks = quantize_kv(k_new)
+        v8, vs_ = quantize_kv(v_new)
+        k_pages = pool["k_pages"].at[page, slot].set(k8[:, 0])
+        v_pages = pool["v_pages"].at[page, slot].set(v8[:, 0])
+        k_sc = pool["k_scale_pages"].at[page, slot].set(ks[:, 0])
+        v_sc = pool["v_scale_pages"].at[page, slot].set(vs_[:, 0])
+        k_deq = (k_pages[block_table].astype(dt)
+                 * k_sc[block_table][..., None].astype(dt))
+        v_deq = (v_pages[block_table].astype(dt)
+                 * v_sc[block_table][..., None].astype(dt))
+        new_pool = {"k_pages": k_pages, "v_pages": v_pages,
+                    "k_scale_pages": k_sc, "v_scale_pages": v_sc}
+    else:
+        k_pages = pool["k_pages"].at[page, slot].set(k_new[:, 0].astype(
+            pool["k_pages"].dtype))
+        v_pages = pool["v_pages"].at[page, slot].set(v_new[:, 0].astype(
+            pool["v_pages"].dtype))
+        k_deq = k_pages[block_table]
+        v_deq = v_pages[block_table]
+        new_pool = {"k_pages": k_pages, "v_pages": v_pages}
+    KVH, hd = k_deq.shape[-2], k_deq.shape[-1]
+    k_deq = k_deq.reshape(B, n_pg * ps, KVH, hd)
+    v_deq = v_deq.reshape(B, n_pg * ps, KVH, hd)
+    valid = pos + 1
+    start = None
+    if local and cfg.sliding_window:
+        start = jnp.maximum(valid - cfg.sliding_window, 0)
+    o = decode_attend(q, k_deq, v_deq, valid_len=valid, start_len=start,
+                      softcap=cfg.attn_softcap)
+    return o, new_pool
+
+
+def shard_gqa_params(cfg: ModelConfig, p, s: int, tp: int):
+    """Head-slice of one GQA layer's projection params for shard ``s``.
+
+    Columns of wq/wk/wv are head-major, so shard ``s`` owns the contiguous
+    column blocks of its query heads ``[s*H/tp, (s+1)*H/tp)`` and kv heads
+    ``[s*KVH/tp, (s+1)*KVH/tp)``. qk-norm scales are per-head-dim and stay
+    replicated; ``wo`` is not sliced — the combine concatenates head
+    outputs (the shard_map path all-gathers them) and applies the full
+    output projection, which keeps tp>1 bitwise identical to tp=1.
+    """
+    hd = cfg.resolved_head_dim
+    Hs = cfg.n_heads // tp * hd
+    Ks = cfg.n_kv_heads // tp * hd
+    out = {"wq": p["wq"][:, s * Hs:(s + 1) * Hs],
+           "wk": p["wk"][:, s * Ks:(s + 1) * Ks],
+           "wv": p["wv"][:, s * Ks:(s + 1) * Ks]}
+    if cfg.qkv_bias:
+        out["bq"] = p["bq"][s * Hs:(s + 1) * Hs]
+        out["bk"] = p["bk"][s * Ks:(s + 1) * Ks]
+        out["bv"] = p["bv"][s * Ks:(s + 1) * Ks]
+    if cfg.qk_norm:
+        out["q_norm"] = p["q_norm"]
+        out["k_norm"] = p["k_norm"]
+    return out
+
+
+def _gqa_paged_decode_loop(cfg, p, x, cos, sin, cache, seq_lens,
+                           block_table, *, local, tp):
+    """Unrolled shard-group decode: the per-shard body runs ``tp`` times in
+    one program (single-host simulation of the shard_map layout)."""
+    B = x.shape[0]
+    Hs = cfg.n_heads // tp
+    KVHs = cfg.n_kv_heads // tp
+    o_parts, pools = [], []
+    for s in range(tp):
+        p_s = shard_gqa_params(cfg, p, s, tp)
+        pool_s = {k: v[s] for k, v in cache.items()}
+        q, k_new, v_new = _qkv(cfg, p_s, x, cos, sin,
+                               n_heads=Hs, n_kv_heads=KVHs)
+        o_s, pool_s = _paged_write_attend(cfg, pool_s, q, k_new, v_new,
+                                          seq_lens, block_table, local=local)
+        o_parts.append(o_s)
+        pools.append(pool_s)
+    o = jnp.concatenate(o_parts, axis=2)         # head-axis "all_gather"
+    new_cache = {k: jnp.stack([pools[s][k] for s in range(tp)])
+                 for k in cache}
+    y = o.reshape(B, 1, -1) @ p["wo"].astype(x.dtype)
+    return y, new_cache
+
+
+def _gqa_paged_decode_shard_map(cfg, p, x, cos, sin, cache, seq_lens,
+                                block_table, *, local, shard):
+    """Shard-group decode as one program per device: pools and projection
+    weights partition on the group's mesh axis, the per-shard body is the
+    same ``_qkv`` + ``_paged_write_attend`` the loop path runs, and the
+    only wire traffic is the tiny (B,1,H,hd) head all_gather before the
+    replicated output projection."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.collectives import shard_map_compat
+
+    tp, ax = shard.tp, shard.axis
+    B = x.shape[0]
+    Hs = cfg.n_heads // tp
+    KVHs = cfg.n_kv_heads // tp
+    sliced = {"wq": p["wq"].reshape(x.shape[-1], tp, -1),
+              "wk": p["wk"].reshape(x.shape[-1], tp, -1),
+              "wv": p["wv"].reshape(x.shape[-1], tp, -1)}
+    sliced_specs = {k: P(None, ax, None) for k in sliced}
+    if cfg.qkv_bias:
+        for k in ("bq", "bk", "bv"):
+            sliced[k] = p[k].reshape(tp, -1)
+            sliced_specs[k] = P(ax, None)
+    repl = {k: p[k] for k in ("q_norm", "k_norm") if cfg.qk_norm}
+    pool_specs = {k: P(ax) for k in cache}
+
+    def body(sl, rp, pool, xx, cc, ss, lens, bt):
+        p_s = {k: v[:, 0] if v.ndim == 3 else v[0] for k, v in sl.items()}
+        p_s.update(rp)
+        pool_s = {k: v[0] for k, v in pool.items()}
+        q, k_new, v_new = _qkv(cfg, p_s, xx, cc, ss,
+                               n_heads=Hs, n_kv_heads=KVHs)
+        o_s, pool_s = _paged_write_attend(cfg, pool_s, q, k_new, v_new,
+                                          lens, bt, local=local)
+        o = jax.lax.all_gather(o_s, ax, axis=2, tiled=True)  # (B,1,H,hd)
+        return o, {k: v[None] for k, v in pool_s.items()}
+
+    fn = shard_map_compat(
+        body, mesh=shard.mesh,
+        in_specs=(sliced_specs, {k: P() for k in repl}, pool_specs,
+                  P(), P(), P(), P(), P()),
+        out_specs=(P(), pool_specs))
+    o, new_cache = fn(sliced, repl, cache, x, cos, sin, seq_lens,
+                      block_table.astype(jnp.int32))
+    y = o.reshape(B, 1, -1) @ p["wo"].astype(x.dtype)
+    return y, new_cache
+
+
 def gqa_paged_decode(cfg: ModelConfig, p, x, cos, sin,
                      cache: Dict[str, jnp.ndarray], seq_lens: jnp.ndarray,
-                     block_table: jnp.ndarray, *, local: bool):
+                     block_table: jnp.ndarray, *, local: bool, shard=None):
     """Paged-KV decode step: write the new token's K/V into its page, then
     attend the sequence's pages via the block table.
 
@@ -349,46 +508,24 @@ def gqa_paged_decode(cfg: ModelConfig, p, x, cos, sin,
     function on TPU without materialising the gathered cache. Sliding-window
     layers mask ``[len+1-window, len]`` instead of ring-writing — pages hold
     absolute positions.
+
+    ``shard`` (a ``repro.parallel.context.ShardGroup`` with tp > 1) runs
+    the head-sharded tensor-parallel path instead: pool leaves carry a
+    leading shard axis, each shard computes its query/kv head slice against
+    its own pool slice, and the head-axis concat + full output projection
+    keep the result byte-identical to tp=1 (see docs/sharding.md).
     """
+    if shard is not None and shard.tp > 1:
+        if shard.use_shard_map:
+            return _gqa_paged_decode_shard_map(
+                cfg, p, x, cos, sin, cache, seq_lens, block_table,
+                local=local, shard=shard)
+        return _gqa_paged_decode_loop(cfg, p, x, cos, sin, cache, seq_lens,
+                                      block_table, local=local, tp=shard.tp)
     B = x.shape[0]
-    dt = x.dtype
     q, k_new, v_new = _qkv(cfg, p, x, cos, sin)
-    ps = cache["k_pages"].shape[1]
-    n_pg = block_table.shape[1]
-    pos = seq_lens.astype(jnp.int32)                       # write position
-    page = jnp.take_along_axis(block_table, (pos // ps)[:, None],
-                               axis=1)[:, 0]
-    slot = pos % ps
-    if cfg.cache_quant:
-        k8, ks = quantize_kv(k_new)
-        v8, vs_ = quantize_kv(v_new)
-        k_pages = cache["k_pages"].at[page, slot].set(k8[:, 0])
-        v_pages = cache["v_pages"].at[page, slot].set(v8[:, 0])
-        k_sc = cache["k_scale_pages"].at[page, slot].set(ks[:, 0])
-        v_sc = cache["v_scale_pages"].at[page, slot].set(vs_[:, 0])
-        k_deq = (k_pages[block_table].astype(dt)
-                 * k_sc[block_table][..., None].astype(dt))
-        v_deq = (v_pages[block_table].astype(dt)
-                 * v_sc[block_table][..., None].astype(dt))
-        new_cache = {"k_pages": k_pages, "v_pages": v_pages,
-                     "k_scale_pages": k_sc, "v_scale_pages": v_sc}
-    else:
-        k_pages = cache["k_pages"].at[page, slot].set(k_new[:, 0].astype(
-            cache["k_pages"].dtype))
-        v_pages = cache["v_pages"].at[page, slot].set(v_new[:, 0].astype(
-            cache["v_pages"].dtype))
-        k_deq = k_pages[block_table]
-        v_deq = v_pages[block_table]
-        new_cache = {"k_pages": k_pages, "v_pages": v_pages}
-    KVH, hd = k_deq.shape[-2], k_deq.shape[-1]
-    k_deq = k_deq.reshape(B, n_pg * ps, KVH, hd)
-    v_deq = v_deq.reshape(B, n_pg * ps, KVH, hd)
-    valid = pos + 1
-    start = None
-    if local and cfg.sliding_window:
-        start = jnp.maximum(valid - cfg.sliding_window, 0)
-    o = decode_attend(q, k_deq, v_deq, valid_len=valid, start_len=start,
-                      softcap=cfg.attn_softcap)
+    o, new_cache = _paged_write_attend(cfg, cache, q, k_new, v_new,
+                                       seq_lens, block_table, local=local)
     y = o.reshape(B, 1, -1) @ p["wo"].astype(x.dtype)
     return y, new_cache
 
@@ -531,12 +668,12 @@ def attn_decode(cfg, p, x, cos, sin, cache, cur_len, *, local=False):
 
 
 def attn_paged_decode(cfg, p, x, cos, sin, cache, seq_lens, block_table, *,
-                      local=False):
+                      local=False, shard=None):
     if cfg.attn_impl == "mla":
         raise NotImplementedError(
             "paged decode covers GQA; MLA serves via the dense absorbed path")
     return gqa_paged_decode(cfg, p, x, cos, sin, cache, seq_lens, block_table,
-                            local=local)
+                            local=local, shard=shard)
 
 
 def kv_cache_spec(cfg: ModelConfig, batch: int, capacity: int,

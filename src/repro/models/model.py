@@ -44,14 +44,14 @@ def chunked_ce(cfg: ModelConfig, embed_params, hidden: jnp.ndarray,
 
     @jax.checkpoint
     def body(carry, xs):
-        h, l = xs
+        h, lab = xs
         lg = jnp.einsum("bcd,dv->bcv", h, w.astype(h.dtype),
                         preferred_element_type=jnp.float32)
         lg = soft_cap(lg, cfg.final_softcap)
         lg = jnp.where(vocab_ok[None, None], lg, _NEG)
         lg = constrain(lg, ("batch", None, "vocab_act"))
         lse = jax.scipy.special.logsumexp(lg, axis=-1)
-        gold = jnp.take_along_axis(lg, l[..., None], axis=-1)[..., 0]
+        gold = jnp.take_along_axis(lg, lab[..., None], axis=-1)[..., 0]
         return carry + jnp.sum(lse - gold), None
 
     from repro.models.flags import unroll_scans
@@ -118,17 +118,24 @@ def decode_step(cfg: ModelConfig, params, cache, tokens: jnp.ndarray,
 
 
 def paged_decode_step(cfg: ModelConfig, params, cache, tokens: jnp.ndarray,
-                      seq_lens: jnp.ndarray, block_table: jnp.ndarray):
+                      seq_lens: jnp.ndarray, block_table: jnp.ndarray,
+                      shard=None):
     """Paged-KV decode step for the continuous-batching scheduler.
 
     tokens: (B,1); seq_lens: (B,) per-sequence live lengths; block_table:
     (B, n_pg) page ids into the pools in ``cache`` (see
     ``repro.serving.paged_cache``). -> (logits (B,1,V), new_cache).
+
+    ``shard`` (a ``repro.parallel.context.ShardGroup``, tp > 1) runs the
+    tensor-parallel path: head-sharded attention over per-shard page pools
+    and expert-sharded MoE, with the logits computed from the gathered
+    hidden state exactly as at tp=1 — the byte-identity contract
+    serve_bench's ``--tp`` gate enforces.
     """
     hidden, _, new_cache = lm_forward(cfg, params, tokens,
                                       mode="paged_decode", cache=cache,
                                       cur_len=seq_lens,
-                                      block_table=block_table)
+                                      block_table=block_table, shard=shard)
     lg = final_logits(cfg, params, hidden)
     return lg, new_cache
 

@@ -71,8 +71,18 @@ def _dispatch_one(x: jnp.ndarray, idx: jnp.ndarray, cap: int,
 
 
 def moe_apply(cfg: ModelConfig, p: Dict[str, Any], x: jnp.ndarray,
-              *, decode: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """x: (B, S, D) -> (y, aux_loss)."""
+              *, decode: bool = False,
+              shard=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y, aux_loss).
+
+    ``shard`` (a ``repro.parallel.context.ShardGroup``, decode only) runs
+    the expert-sharded tensor-parallel path: routing and dispatch stay
+    replicated (the router weights are tiny and identical routing across
+    the group is what keeps the shard pools coherent), each shard computes
+    the FFN for its ``E/tp`` contiguous expert slice, and the expert-axis
+    concat of slot outputs — the EP all-gather — feeds the unchanged
+    combine, so the sharded result matches tp=1 token for token.
+    """
     B, S, D = x.shape
     E, k = cfg.n_routed_experts, cfg.moe_top_k
     dt = x.dtype
@@ -103,11 +113,22 @@ def moe_apply(cfg: ModelConfig, p: Dict[str, Any], x: jnp.ndarray,
     # groups stay on the batch (data) axes; experts shard on "model" (EP)
     buf = constrain(buf, ("batch", "experts_act", None, None))
 
-    # expert FFN (gated)
-    h = _act(jnp.einsum("gecd,edf->gecf", buf, p["w_gate"].astype(dt)),
-             cfg.mlp_act)
-    h = h * jnp.einsum("gecd,edf->gecf", buf, p["w_up"].astype(dt))
-    out = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dt))
+    # expert FFN (gated) — per contiguous expert slice so one shard of a
+    # tensor-parallel group computes only the experts it owns
+    def _expert_ffn(b, lo, hi):
+        h = _act(jnp.einsum("gecd,edf->gecf", b,
+                            p["w_gate"][lo:hi].astype(dt)), cfg.mlp_act)
+        h = h * jnp.einsum("gecd,edf->gecf", b, p["w_up"][lo:hi].astype(dt))
+        return jnp.einsum("gecf,efd->gecd", h, p["w_down"][lo:hi].astype(dt))
+
+    tp = shard.tp if (shard is not None and decode) else 1
+    if tp > 1:
+        E_s = E // tp
+        out = jnp.concatenate(
+            [_expert_ffn(buf[:, s * E_s:(s + 1) * E_s], s * E_s,
+                         (s + 1) * E_s) for s in range(tp)], axis=1)
+    else:
+        out = _expert_ffn(buf, 0, E)
     out = constrain(out, ("batch", "experts_act", None, None))
 
     out_flat = out.reshape(G, E * cap, D)

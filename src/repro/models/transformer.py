@@ -86,8 +86,12 @@ def block_schema(cfg: ModelConfig, idx: int) -> Dict[str, Any]:
 def block_apply(cfg: ModelConfig, p: Dict[str, Any], x: jnp.ndarray, idx: int,
                 cos, sin, mode: str, cache: Optional[Dict] = None,
                 cur_len: Optional[jnp.ndarray] = None,
-                block_table: Optional[jnp.ndarray] = None):
-    """-> (x, aux, cache_update)."""
+                block_table: Optional[jnp.ndarray] = None,
+                shard=None):
+    """-> (x, aux, cache_update). ``shard`` (a ShardGroup) activates the
+    tensor-parallel paged-decode path: head-sharded attention over per-shard
+    page pools, expert-sharded MoE; SSM mixers stay replicated (their state
+    is O(1) per sequence — nothing to split)."""
     kind = cfg.block_kind(idx)
     local = kind == "attn_local"
     h = rmsnorm(x, p["ln1"], cfg.rms_eps)
@@ -108,7 +112,7 @@ def block_apply(cfg: ModelConfig, p: Dict[str, Any], x: jnp.ndarray, idx: int,
         elif mode == "paged_decode":
             mix, cache_update = attn.attn_paged_decode(
                 cfg, p["mixer"], h, cos, sin, cache, cur_len, block_table,
-                local=local)
+                local=local, shard=shard)
         else:
             mix, cache_update = attn.attn_decode(cfg, p["mixer"], h, cos, sin,
                                                  cache, cur_len, local=local)
@@ -121,7 +125,8 @@ def block_apply(cfg: ModelConfig, p: Dict[str, Any], x: jnp.ndarray, idx: int,
         if cfg.is_moe_layer(idx):
             ff, aux = moe_mod.moe_apply(
                 cfg, p["ffn"], h2,
-                decode=(mode in ("decode", "paged_decode")))
+                decode=(mode in ("decode", "paged_decode")),
+                shard=shard if mode == "paged_decode" else None)
         else:
             ff = mlp(cfg, p["ffn"], h2)
         if cfg.use_post_norm:
@@ -163,7 +168,7 @@ def lm_forward(cfg: ModelConfig, params: Dict[str, Any], tokens: jnp.ndarray,
                positions: Optional[jnp.ndarray] = None, *, mode: str = "train",
                cache: Optional[Dict] = None, cur_len=None,
                block_table: Optional[jnp.ndarray] = None,
-               remat: str = "none"):
+               remat: str = "none", shard=None):
     """Decoder-only forward.
 
     train        -> (hidden, aux)
@@ -174,6 +179,9 @@ def lm_forward(cfg: ModelConfig, params: Dict[str, Any], tokens: jnp.ndarray,
         per-sequence length vector and ``block_table`` (B, n_pg) maps each
         sequence to its pages — this is what lets the continuous-batching
         scheduler decode sequences of different lengths in one step.
+        ``shard`` (a ``repro.parallel.context.ShardGroup``, tp > 1) selects
+        the tensor-parallel path: pool leaves carry a leading shard axis
+        and attention/MoE split across the group (docs/sharding.md).
     """
     assert not cfg.is_encdec
     B, S = tokens.shape
@@ -201,7 +209,8 @@ def lm_forward(cfg: ModelConfig, params: Dict[str, Any], tokens: jnp.ndarray,
     for i in range(prefix):
         c_in = cache["prefix"][str(i)] if (cache and decoding) else None
         x, aux, c_out = block_apply(cfg, params["prefix"][str(i)], x, i,
-                                    cos, sin, mode, c_in, cur_len, block_table)
+                                    cos, sin, mode, c_in, cur_len,
+                                    block_table, shard)
         aux_total = aux_total + aux
         if c_out is not None:
             prefix_cache_out[str(i)] = c_out
@@ -251,7 +260,7 @@ def lm_forward(cfg: ModelConfig, params: Dict[str, Any], tokens: jnp.ndarray,
             for p in range(period):
                 xx, _, c_out = block_apply(cfg, ps[str(p)], xx, prefix + p,
                                            cos, sin, mode, cs[str(p)],
-                                           cur_len, block_table)
+                                           cur_len, block_table, shard)
                 new_cs[str(p)] = c_out
             return xx, new_cs
 

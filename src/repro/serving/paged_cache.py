@@ -31,6 +31,19 @@ chains of in-flight prompts to the pages holding their K/V, and
 ``copy_page`` is the copy-on-write fork for a sequence diverging inside a
 shared page — see docs/serving.md "Shared prefixes" for the state diagram
 and the admission contract built on top in ``repro.serving.scheduler``.
+
+Shard groups (``tp > 1``): pages are *logical*, storage is *per shard*.
+Every attention pool leaf grows a leading shard axis — shard ``s`` stores
+the ``KVH/tp`` kv-head slice ``[s*KVH/tp, (s+1)*KVH/tp)`` of every page —
+while the page-id space, the allocator's refcounts, the block tables, and
+the prefix index stay a single shared control plane: page ``p`` addresses
+the same slot in every shard's pool the same way it already addresses the
+same slot in every layer's pool. Cache ops that move whole pages
+(``write_prefill``, ``copy_page``, ``resize_cache_pages``) take ``tp`` and
+touch every shard's slice in one call, so a COW fork or prefill insert can
+never leave shards disagreeing about a page's contents — the invariant
+the sharded rule set in tests/test_allocator_props.py drives. SSM slot
+state is O(1) per sequence and stays replicated (unsharded).
 """
 from __future__ import annotations
 
@@ -447,8 +460,8 @@ class PrefixIndex:
 # cache pytree construction
 # ---------------------------------------------------------------------------
 
-def _attn_pool_leaves(cfg: ModelConfig, num_pages: int,
-                      page_size: int) -> Dict[str, jnp.ndarray]:
+def _attn_pool_leaves(cfg: ModelConfig, num_pages: int, page_size: int,
+                      tp: int = 1) -> Dict[str, jnp.ndarray]:
     if cfg.attn_impl == "mla":
         raise NotImplementedError(
             "paged serving covers GQA archs; MLA decode keeps the dense "
@@ -456,14 +469,18 @@ def _attn_pool_leaves(cfg: ModelConfig, num_pages: int,
     hd = cfg.resolved_head_dim
     KVH = cfg.n_kv_heads
     kv_dt = jnp.int8 if cfg.cache_quant else jnp.dtype(cfg.dtype)
+    if tp > 1 and KVH % tp:
+        raise ValueError(f"tp={tp} must divide n_kv_heads {KVH}")
+    shard = (tp,) if tp > 1 else ()
+    KVH_s = KVH // tp if tp > 1 else KVH
     out = {
-        "k_pages": jnp.zeros((num_pages, page_size, KVH, hd), kv_dt),
-        "v_pages": jnp.zeros((num_pages, page_size, KVH, hd), kv_dt),
+        "k_pages": jnp.zeros(shard + (num_pages, page_size, KVH_s, hd), kv_dt),
+        "v_pages": jnp.zeros(shard + (num_pages, page_size, KVH_s, hd), kv_dt),
     }
     if cfg.cache_quant:
-        out["k_scale_pages"] = jnp.zeros((num_pages, page_size, KVH),
+        out["k_scale_pages"] = jnp.zeros(shard + (num_pages, page_size, KVH_s),
                                          jnp.float32)
-        out["v_scale_pages"] = jnp.zeros((num_pages, page_size, KVH),
+        out["v_scale_pages"] = jnp.zeros(shard + (num_pages, page_size, KVH_s),
                                          jnp.float32)
     return out
 
@@ -475,29 +492,39 @@ def _ssm_slot_leaves(cfg: ModelConfig, max_slots: int) -> Dict[str, jnp.ndarray]
 
 
 def _layer_leaves(cfg: ModelConfig, idx: int, num_pages: int, page_size: int,
-                  max_slots: int) -> Dict[str, jnp.ndarray]:
+                  max_slots: int, tp: int = 1) -> Dict[str, jnp.ndarray]:
     if cfg.block_kind(idx) == "ssm":
         return _ssm_slot_leaves(cfg, max_slots)
-    return _attn_pool_leaves(cfg, num_pages, page_size)
+    return _attn_pool_leaves(cfg, num_pages, page_size, tp)
+
+
+def page_axis(stacked: bool, tp: int = 1) -> int:
+    """Index of the page axis in an attention pool leaf: the scanned stack
+    adds a leading layers axis, a shard group adds a leading shard axis
+    (stack outermost: scan slices it away before model code sees leaves)."""
+    return int(stacked) + int(tp > 1)
 
 
 def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
-                     max_slots: int) -> Any:
+                     max_slots: int, tp: int = 1) -> Any:
     """Zero page pools in the same prefix/stack pytree shape the dense cache
     uses (``repro.models.model.cache_schema``), so the transformer's scanned
-    stack threads them identically."""
+    stack threads them identically. With ``tp > 1`` attention pool leaves
+    carry a leading shard axis holding each shard's kv-head slice; SSM slot
+    leaves stay replicated."""
     if cfg.is_encdec:
         raise NotImplementedError("paged serving targets decoder-only archs")
     prefix, period, n_periods = depth_plan(cfg)
     out: Dict[str, Any] = {}
     if prefix:
         out["prefix"] = {str(i): _layer_leaves(cfg, i, num_pages, page_size,
-                                               max_slots)
+                                               max_slots, tp)
                          for i in range(prefix)}
     out["stack"] = {
         str(p): jax.tree.map(
             lambda x: jnp.broadcast_to(x, (n_periods,) + x.shape).copy(),
-            _layer_leaves(cfg, prefix + p, num_pages, page_size, max_slots))
+            _layer_leaves(cfg, prefix + p, num_pages, page_size, max_slots,
+                          tp))
         for p in range(period)}
     return out
 
@@ -506,39 +533,49 @@ def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
 # prefill insertion
 # ---------------------------------------------------------------------------
 
+def _shard_kv(kv: jnp.ndarray, tp: int, stacked: bool) -> jnp.ndarray:
+    """Split a prefill K/V block's kv-head axis into per-shard slices.
+
+    kv: ([L,] n, KVH, hd) -> ([L,] tp, n, KVH/tp, hd) — shard s receives
+    the same contiguous head block the sharded decode path owns."""
+    lead = kv.shape[:-3] if stacked else ()
+    n, KVH, hd = kv.shape[-3:]
+    kv = kv.reshape(lead + (n, tp, KVH // tp, hd))
+    return jnp.moveaxis(kv, -3, -4)
+
+
 def _write_attn_prefill(cfg: ModelConfig, node: Dict[str, jnp.ndarray],
                         pre: Dict[str, jnp.ndarray], page_ids: jnp.ndarray,
-                        page_slots: jnp.ndarray,
-                        stacked: bool) -> Dict[str, jnp.ndarray]:
+                        page_slots: jnp.ndarray, stacked: bool,
+                        tp: int = 1) -> Dict[str, jnp.ndarray]:
     """Scatter one sequence's prefill K/V (B=1) into its pages.
 
     ``page_ids``/``page_slots``: (n_write,) int32 — padding positions past
-    the live length are routed to the sink page by the caller."""
+    the live length are routed to the sink page by the caller. With
+    ``tp > 1`` the prefill's full-KVH block splits into per-shard head
+    slices and every shard's pool is written in this one call."""
     out = dict(node)
     n_write = page_ids.shape[0]
+    # leading axes before the page axis: optional stack, optional shard
+    lead = (slice(None),) * page_axis(stacked, tp)
     for name in ("k", "v"):
         kv = pre[name][..., 0, :n_write, :, :] if stacked \
             else pre[name][0, :n_write]                   # ([L,]n,KVH,hd)
         if cfg.cache_quant:
             q8, sc = quantize_kv(kv)
-            if stacked:
-                out[f"{name}_pages"] = node[f"{name}_pages"].at[
-                    :, page_ids, page_slots].set(q8)
-                out[f"{name}_scale_pages"] = node[f"{name}_scale_pages"].at[
-                    :, page_ids, page_slots].set(sc)
-            else:
-                out[f"{name}_pages"] = node[f"{name}_pages"].at[
-                    page_ids, page_slots].set(q8)
-                out[f"{name}_scale_pages"] = node[f"{name}_scale_pages"].at[
-                    page_ids, page_slots].set(sc)
+            if tp > 1:
+                q8, sc = _shard_kv(q8, tp, stacked), _shard_kv(
+                    sc[..., None], tp, stacked)[..., 0]
+            out[f"{name}_pages"] = node[f"{name}_pages"].at[
+                lead + (page_ids, page_slots)].set(q8)
+            out[f"{name}_scale_pages"] = node[f"{name}_scale_pages"].at[
+                lead + (page_ids, page_slots)].set(sc)
         else:
             dt = node[f"{name}_pages"].dtype
-            if stacked:
-                out[f"{name}_pages"] = node[f"{name}_pages"].at[
-                    :, page_ids, page_slots].set(kv.astype(dt))
-            else:
-                out[f"{name}_pages"] = node[f"{name}_pages"].at[
-                    page_ids, page_slots].set(kv.astype(dt))
+            if tp > 1:
+                kv = _shard_kv(kv, tp, stacked)
+            out[f"{name}_pages"] = node[f"{name}_pages"].at[
+                lead + (page_ids, page_slots)].set(kv.astype(dt))
     return out
 
 
@@ -558,7 +595,8 @@ def _write_ssm_prefill(node: Dict[str, jnp.ndarray],
 
 
 def write_prefill(cfg: ModelConfig, paged: Any, pre: Any, block_row,
-                  slot, plen, n_write: int, page_size: int) -> Any:
+                  slot, plen, n_write: int, page_size: int,
+                  tp: int = 1) -> Any:
     """Insert a freshly prefilled sequence (batch 1) into the paged cache.
 
     ``pre`` is the cache returned by a batch-1 prefill on an ``n_write``-long
@@ -566,9 +604,11 @@ def write_prefill(cfg: ModelConfig, paged: Any, pre: Any, block_row,
     padding positions are scattered to the sink page, so one compilation per
     prefill *bucket* serves every prompt length in it. ``block_row``:
     (n_pg,) int32 page ids for this sequence (unused tail = sink).
-    Returns the updated cache pytree; jit with ``n_write``/``page_size``
-    static. For archs with SSM layers the caller must use ``n_write ==
-    plen`` — an SSM final state folds padding tokens in.
+    Returns the updated cache pytree; jit with ``n_write``/``page_size``/
+    ``tp`` static. For archs with SSM layers the caller must use ``n_write
+    == plen`` — an SSM final state folds padding tokens in. Prefill always
+    produces full-KVH K/V (it runs replicated across a shard group);
+    ``tp > 1`` splits it into per-shard slices on insert.
     """
     t = jnp.arange(n_write)
     live = t < jnp.asarray(plen)
@@ -579,7 +619,7 @@ def write_prefill(cfg: ModelConfig, paged: Any, pre: Any, block_row,
     def walk(node: Any, pnode: Any, stacked: bool) -> Any:
         if "k_pages" in node:
             return _write_attn_prefill(cfg, node, pnode, page_ids,
-                                       page_slots, stacked)
+                                       page_slots, stacked, tp)
         if "h" in node and "conv" in node:
             return _write_ssm_prefill(node, pnode, slot, stacked)
         return {k: walk(node[k], pnode[k], stacked or k == "stack")
@@ -600,16 +640,19 @@ def _is_ssm(node: Any) -> bool:
     return isinstance(node, dict) and "h" in node and "conv" in node
 
 
-def copy_page(cache: Any, src, dst) -> Any:
+def copy_page(cache: Any, src, dst, tp: int = 1) -> Any:
     """COW fork: copy page ``src``'s contents into page ``dst`` in every
-    attention pool leaf (all layers). Jit with the cache donated — the fork
-    happens between decode ticks, exactly like a prefill insert."""
+    attention pool leaf (all layers — and, for a shard group, every shard's
+    slice in the same call: the fork is atomic across shards, so no shard
+    can ever hold a forked page the others don't). Jit with the cache
+    donated — the fork happens between decode ticks, exactly like a
+    prefill insert."""
     src = jnp.asarray(src, jnp.int32)
     dst = jnp.asarray(dst, jnp.int32)
 
     def walk(node: Any, stacked: bool) -> Any:
         if _is_attn(node):
-            axis = 1 if stacked else 0
+            axis = page_axis(stacked, tp)
             out = dict(node)
             for k in PAGE_LEAVES:
                 if k not in node:
@@ -705,19 +748,20 @@ def _resize_axis(leaf: jnp.ndarray, axis: int, new: int) -> jnp.ndarray:
     return leaf[tuple(idx)]
 
 
-def resize_cache_pages(cache: Any, new_num_pages: int) -> Any:
+def resize_cache_pages(cache: Any, new_num_pages: int, tp: int = 1) -> Any:
     """Resize every page pool to ``new_num_pages``.
 
     Growth appends zero pages — existing page ids (and everything any block
     table references) are untouched, so decoded tokens are unaffected.
     Shrink slices the tail; the caller (scheduler) guarantees every page
     with id >= ``new_num_pages`` is free and out of every live block table
-    before calling. SSM slot leaves are untouched. Runs eagerly (outside
-    jit) — resizes are rare, bucketed events.
+    before calling. Every shard's pool resizes in the same call (the
+    logical page-id space is shared). SSM slot leaves are untouched. Runs
+    eagerly (outside jit) — resizes are rare, bucketed events.
     """
     def walk(node: Any, stacked: bool) -> Any:
         if "k_pages" in node:
-            axis = 1 if stacked else 0
+            axis = page_axis(stacked, tp)
             return {k: (_resize_axis(v, axis, new_num_pages)
                         if k in PAGE_LEAVES else v) for k, v in node.items()}
         if "h" in node and "conv" in node:
@@ -763,9 +807,21 @@ def page_bytes_per_token(cfg: ModelConfig) -> int:
     return per * n_attn
 
 
-def pool_bytes(cfg: ModelConfig, num_pages: int, page_size: int) -> int:
-    """Total HBM the page pools occupy (all layers)."""
-    return page_bytes_per_token(cfg) * num_pages * page_size
+def shard_page_bytes_per_token(cfg: ModelConfig, tp: int) -> int:
+    """KV bytes one token occupies on *one shard* of a ``tp``-way group —
+    the per-member slice of ``page_bytes_per_token``. Exact: every byte
+    term is proportional to ``n_kv_heads``, which ``tp`` must divide."""
+    total = page_bytes_per_token(cfg)
+    if tp > 1 and cfg.n_kv_heads % tp:
+        raise ValueError(f"tp={tp} must divide n_kv_heads {cfg.n_kv_heads}")
+    return total // tp
+
+
+def pool_bytes(cfg: ModelConfig, num_pages: int, page_size: int,
+               tp: int = 1) -> int:
+    """HBM the page pools occupy: all layers, one shard's slice when
+    ``tp > 1`` (multiply by ``tp`` for the whole group)."""
+    return shard_page_bytes_per_token(cfg, tp) * num_pages * page_size
 
 
 def dense_cache_bytes(cfg: ModelConfig, batch: int, capacity: int) -> int:

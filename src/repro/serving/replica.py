@@ -1,25 +1,31 @@
-"""A serving replica: one scheduler + one page pool, placed on one node.
+"""A serving replica: one scheduler + one page pool, placed on a *shard
+group* of cluster nodes (one node at tp=1).
 
 The fabric router (``repro.serving.router``) spreads requests over a fleet
 of these. The wrapper is deliberately thin — all decode/admission logic
 stays in ``ContinuousBatchingScheduler`` — and adds only what the fleet
 needs to reason about a member:
 
-* **placement** — the cluster hostname this replica's "serve" service runs
-  on (``AmbariServer.provision_serving`` + ``NodeDirectory`` assign it;
-  ``None`` for an unplaced, in-process fabric);
+* **placement** — the cluster hostnames this replica's "serve" service
+  spans: ``tp`` shard-group members placed on contiguous nodes by
+  ``AmbariServer.provision_serving`` + ``NodeDirectory`` (one hostname at
+  tp=1; ``None``/empty for an unplaced, in-process fabric). ``fail()``
+  purges the hostnames so a dead member can never read as still occupying
+  a node in any hostname-derived stats or routing signal;
 * **load** — ``outstanding_pages`` is the routing signal: worst-case pages
   reserved by admitted streams plus the worst-case pages of everything in
   the replica's own queue, so routing sees committed-but-not-yet-admitted
-  work too;
+  work too (pages are logical, so the signal is tp-invariant);
 * **lifecycle** — ``draining`` stops new routing while admitted/queued
   streams finish (graceful scale-in); ``failed`` marks a dead replica
   (heartbeat DEAD / spot preemption) whose unfinished streams the router
-  re-prefills elsewhere.
+  re-prefills elsewhere. A single preempted *member* of a tp>1 group is
+  survivable when a warm spare exists — ``repro.autoscale.fleet`` swaps
+  the node without failing the group.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 from repro.serving.request import Request, worst_case_pages
 from repro.serving.scheduler import ContinuousBatchingScheduler
@@ -28,23 +34,43 @@ from repro.serving.scheduler import ContinuousBatchingScheduler
 class ServingReplica:
     def __init__(self, replica_id: int,
                  sched: ContinuousBatchingScheduler, *,
-                 hostname: Optional[str] = None):
+                 hostname: Optional[str] = None,
+                 hostnames: Optional[Sequence[str]] = None):
+        if hostname is not None and hostnames is not None:
+            raise ValueError("pass hostname or hostnames, not both")
         self.replica_id = replica_id
         self.sched = sched
-        self.hostname = hostname
+        self.hostnames: List[str] = (list(hostnames) if hostnames
+                                     else [hostname] if hostname else [])
+        if sched.tp > 1 and self.hostnames \
+                and len(self.hostnames) != sched.tp:
+            raise ValueError(
+                f"shard group of tp={sched.tp} needs {sched.tp} hostnames, "
+                f"got {self.hostnames}")
         self.draining = False
         self.failed = False
+
+    @property
+    def hostname(self) -> Optional[str]:
+        """Primary (rank-0) member hostname — the fleet's stable key for
+        single-node replicas; None once failed (hostnames are purged)."""
+        return self.hostnames[0] if self.hostnames else None
+
+    @property
+    def tp(self) -> int:
+        return self.sched.tp
 
     @classmethod
     def build(cls, cfg, params, replica_id: int, *, max_slots: int = 4,
               page_size: int = 16, num_pages: Optional[int] = None,
               max_seq_len: int = 512, prefix_cache: Optional[bool] = None,
-              hostname: Optional[str] = None) -> "ServingReplica":
+              tp: int = 1, hostname: Optional[str] = None,
+              hostnames: Optional[Sequence[str]] = None) -> "ServingReplica":
         sched = ContinuousBatchingScheduler(
             cfg, params, max_slots=max_slots, page_size=page_size,
             num_pages=num_pages, max_seq_len=max_seq_len,
-            prefix_cache=prefix_cache)
-        return cls(replica_id, sched, hostname=hostname)
+            prefix_cache=prefix_cache, tp=tp)
+        return cls(replica_id, sched, hostname=hostname, hostnames=hostnames)
 
     # -------------------------------------------------------------- state --
     @property
@@ -111,9 +137,15 @@ class ServingReplica:
         The device state is considered lost: queued streams come back
         untouched, admitted streams come back with the tokens they already
         emitted (the router re-prefills ``prompt + out_tokens`` elsewhere).
+        The hostnames are purged too: every hostname-derived signal —
+        node-occupancy checks before a release, prefix-affinity stats, a
+        later ``fail_host`` sweep — must stop seeing this replica on its
+        nodes the moment it dies, or a replacement booting on the same
+        hostname races a ghost (the regression in tests/test_fabric.py).
         """
         self.failed = True
         self.draining = True
+        self.hostnames = []           # purge placement: the nodes are free
         lost: List[Request] = list(self.sched.waiting)
         self.sched.waiting.clear()
         # host-side bookkeeping is still ours to zero out (the simulated

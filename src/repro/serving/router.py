@@ -36,6 +36,15 @@ picks k nodes from the ``NodeDirectory`` and the fleet autoscaler
 (``repro.autoscale.fleet``) acquires/releases nodes through
 ``ClusterLifecycle`` as it adds/removes replicas. ``fail_host`` is the
 heartbeat hook: wire ``monitor.on_dead(router.fail_host)``.
+
+With ``tp > 1`` every fabric member is a *shard group*: one logical
+scheduler spanning tp nodes (``provision_serving(tp=k)`` hands out
+contiguous node sets, the fleet autoscaler acquires/releases tp nodes per
+scaling decision), and ``fail_host`` fails the whole group when any
+member dies — unless the fleet controller replaces the member from a warm
+spare first, in which case the group's streams never notice. Routing is
+tp-agnostic: pages are logical, so ``outstanding_pages`` and the prefix
+index compare across members of different tp.
 """
 from __future__ import annotations
 
@@ -63,9 +72,9 @@ class ServingRouter:
     def __init__(self, cfg: ModelConfig, params: Any, *, replicas: int = 1,
                  max_slots: int = 4, page_size: int = 16,
                  num_pages: Optional[int] = None, max_seq_len: int = 512,
-                 placement: Optional[Sequence[Optional[str]]] = None,
+                 placement: Optional[Sequence[Any]] = None,
                  route_policy: str = "least-pages",
-                 prefix_cache: Optional[bool] = None):
+                 prefix_cache: Optional[bool] = None, tp: int = 1):
         if not supports_paged(cfg):
             raise NotImplementedError(
                 f"{cfg.name}: the fabric routes over paged schedulers; "
@@ -76,9 +85,11 @@ class ServingRouter:
             raise ValueError(f"route_policy must be one of {ROUTE_POLICIES}")
         self.cfg = cfg
         self.params = params
+        # tp > 1: every fabric member is a shard group — tp nodes, one
+        # logical scheduler (placement entries become hostname *lists*)
         self.replica_kw = dict(max_slots=max_slots, page_size=page_size,
                                num_pages=num_pages, max_seq_len=max_seq_len,
-                               prefix_cache=prefix_cache)
+                               prefix_cache=prefix_cache, tp=tp)
         self.route_policy = route_policy
         self.replicas: Dict[int, ServingReplica] = {}
         self.waiting: Deque[Request] = collections.deque()
@@ -101,18 +112,24 @@ class ServingRouter:
         self.balance_log: List[tuple] = []
         placement = list(placement or [])
         for i in range(replicas):
-            self.add_replica(hostname=placement[i] if i < len(placement)
-                             else None)
+            spot = placement[i] if i < len(placement) else None
+            if spot is None or isinstance(spot, str):
+                self.add_replica(hostname=spot)
+            else:
+                self.add_replica(hostnames=spot)
 
     # ----------------------------------------------------------- topology --
     def add_replica(self, *, hostname: Optional[str] = None,
+                    hostnames: Optional[Sequence[str]] = None,
                     **overrides: Any) -> ServingReplica:
         """Add a fabric member (``overrides`` patch the default replica
         sizing — fleet members become heterogeneous the moment per-replica
-        autoscalers resize them, so routing never assumes symmetry)."""
+        autoscalers resize them, so routing never assumes symmetry). A
+        shard-group member (tp > 1) takes ``hostnames`` — its ``tp`` node
+        placement — instead of a single ``hostname``."""
         rep = ServingReplica.build(
             self.cfg, self.params, self._next_replica, hostname=hostname,
-            **{**self.replica_kw, **overrides})
+            hostnames=hostnames, **{**self.replica_kw, **overrides})
         self.replicas[rep.replica_id] = rep
         self._next_replica += 1
         self.stats["replicas_added"] += 1
@@ -147,9 +164,15 @@ class ServingRouter:
 
     def fail_replica(self, replica_id: int) -> List[Request]:
         """Replica death (heartbeat DEAD / spot preemption): surrender its
-        unfinished streams and queue token-identical continuations."""
+        unfinished streams and queue token-identical continuations. A
+        replica already failed directly (member death observed ahead of
+        the router) is simply retired from the fleet — its hostnames and
+        streams were purged by ``ServingReplica.fail()``."""
         rep = self.replicas[replica_id]
         if rep.failed:
+            self._retire_stats(rep)
+            del self.replicas[replica_id]
+            self.stats["replicas_removed"] += 1
             return []
         lost = rep.fail()
         rerouted = []
@@ -162,10 +185,13 @@ class ServingRouter:
         return rerouted
 
     def fail_host(self, hostname: str) -> List[Request]:
-        """Heartbeat hook: fail every replica placed on ``hostname``."""
+        """Heartbeat hook: fail every replica with a member on
+        ``hostname`` — losing one shard of a tp-way group loses the whole
+        group's device state (unless the fleet controller intercepts the
+        death first and swaps the member from a warm spare)."""
         out = []
         for rid in [r.replica_id for r in self.replicas.values()
-                    if r.hostname == hostname]:
+                    if hostname in r.hostnames]:
             out.extend(self.fail_replica(rid))
         return out
 

@@ -45,6 +45,14 @@ single-scheduler core only. One scheduler drives one page pool — a fleet
 of them behind ``repro.serving.router.ServingRouter`` is the replicated
 serving fabric, with each scheduler wrapped as a
 ``repro.serving.replica.ServingReplica`` placed on a cluster node.
+
+``tp > 1`` makes the scheduler a *shard group*: one logical scheduler
+whose page pools split into per-shard kv-head slices across ``tp`` devices
+(placed on ``tp`` cluster nodes by ``provision_serving``), with the block
+table, allocator, prefix index, and admission ledger staying a single
+control plane. Decoded tokens are byte-identical to ``tp=1`` for dense
+archs — see docs/sharding.md for the determinism contract and the
+per-shard page-budget math.
 """
 from __future__ import annotations
 
@@ -59,6 +67,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.models.transformer import lm_forward
+from repro.parallel.context import ShardGroup
 from repro.serving import paged_cache as PC
 from repro.serving.request import Request, make_request
 
@@ -85,7 +94,8 @@ class ContinuousBatchingScheduler:
                  page_size: int = 16, num_pages: Optional[int] = None,
                  max_seq_len: int = 512,
                  prefill_buckets: Sequence[int] = DEFAULT_BUCKETS,
-                 prefix_cache: Optional[bool] = None):
+                 prefix_cache: Optional[bool] = None, tp: int = 1,
+                 shard_mesh=None):
         if not supports_paged(cfg):
             raise NotImplementedError(
                 f"{cfg.name}: paged serving covers decoder-only non-MLA "
@@ -95,6 +105,13 @@ class ContinuousBatchingScheduler:
         self.page_size = page_size
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
+        # tensor-parallel shard group: one logical scheduler/replica whose
+        # page pools, attention heads, and MoE experts split tp ways while
+        # the block table / allocator / prefix index stay one control plane
+        self.tp = tp
+        self.shard = ShardGroup(tp, mesh=shard_mesh) if tp > 1 else None
+        if self.shard is not None:
+            self.shard.validate_model(cfg)
         self.n_pg = PC.pages_for_len(max_seq_len, page_size)
         if num_pages is None:
             num_pages = max_slots * self.n_pg + 1        # + sink
@@ -121,7 +138,8 @@ class ContinuousBatchingScheduler:
         self.prefix_cache = prefix_cache
         self.index = PC.PrefixIndex(page_size)
 
-        self.cache = PC.init_paged_cache(cfg, num_pages, page_size, max_slots)
+        self.cache = PC.init_paged_cache(cfg, num_pages, page_size, max_slots,
+                                         tp=tp)
         self.alloc = PC.PageAllocator(num_pages)
         self.alloc.on_free = self.index.invalidate_page
         self.block_table = np.full((max_slots, self.n_pg), PC.SINK_PAGE,
@@ -153,19 +171,21 @@ class ContinuousBatchingScheduler:
 
         # donate the cache: pools are sized to fill HBM, so the step must
         # update them in place rather than double-buffer (cf. trainer.py)
-        self._decode_fn = jax.jit(functools.partial(self._decode_multi, cfg),
-                                  static_argnames=("k",), donate_argnums=(1,))
+        self._decode_fn = jax.jit(
+            functools.partial(self._decode_multi, cfg, self.shard),
+            static_argnames=("k",), donate_argnums=(1,))
         self._prefill_fns: Dict[int, Any] = {}
         self._insert_fns: Dict[int, Any] = {}
         self._suffix_fns: Dict[int, Any] = {}
         self._seq_suffix_fns: Dict[int, Any] = {}
-        self._cow_fn = jax.jit(PC.copy_page, donate_argnums=(0,))
+        self._cow_fn = jax.jit(functools.partial(PC.copy_page, tp=tp),
+                               donate_argnums=(0,))
         self._rid = 0
 
     # ------------------------------------------------------------ jit fns --
     @staticmethod
-    def _decode_multi(cfg, params, cache, tokens, seq_lens, block_table, *,
-                      k: int):
+    def _decode_multi(cfg, shard, params, cache, tokens, seq_lens,
+                      block_table, *, k: int):
         """``k`` fused greedy decode ticks in one lax.scan (one dispatch).
 
         The host loop picks ``k`` so that no request finishes and no arrival
@@ -176,7 +196,7 @@ class ContinuousBatchingScheduler:
         def body(carry, _):
             toks, lens, cc = carry
             lg, cc = M.paged_decode_step(cfg, params, cc, toks, lens,
-                                         block_table)
+                                         block_table, shard=shard)
             nxt = jnp.argmax(lg[:, -1, :cfg.vocab_size],
                              axis=-1).astype(jnp.int32)
             return (nxt[:, None], lens + 1, cc), nxt
@@ -211,11 +231,11 @@ class ContinuousBatchingScheduler:
 
     def _insert_fn(self, n: int):
         if n not in self._insert_fns:
-            cfg, ps = self.cfg, self.page_size
+            cfg, ps, tp = self.cfg, self.page_size, self.tp
 
             def fn(cache, pre, block_row, slot, plen):
                 return PC.write_prefill(cfg, cache, pre, block_row, slot,
-                                        plen, n, ps)
+                                        plen, n, ps, tp=tp)
 
             self._insert_fns[n] = jax.jit(fn, donate_argnums=(0,))
         return self._insert_fns[n]
@@ -233,7 +253,7 @@ class ContinuousBatchingScheduler:
         at the live suffix's last row.
         """
         if n not in self._suffix_fns:
-            cfg = self.cfg
+            cfg, shard = self.cfg, self.shard
 
             def fn(params, cache, tokens, start, s_live, row):
                 i = jnp.arange(n, dtype=jnp.int32)
@@ -242,7 +262,8 @@ class ContinuousBatchingScheduler:
                 bt = jnp.where(live[:, None], row[None, :],
                                PC.SINK_PAGE).astype(jnp.int32)
                 lg, cache = M.paged_decode_step(cfg, params, cache,
-                                                tokens[:, None], lens, bt)
+                                                tokens[:, None], lens, bt,
+                                                shard=shard)
                 last = jax.lax.dynamic_slice_in_dim(lg[:, -1, :],
                                                     s_live - 1, 1, axis=0)
                 tok = jnp.argmax(last[0, :cfg.vocab_size]).astype(jnp.int32)
@@ -259,7 +280,7 @@ class ContinuousBatchingScheduler:
         a time so expert capacity groups match decode's) and writes each
         suffix token's K/V into the sequence's pages."""
         if s not in self._seq_suffix_fns:
-            cfg = self.cfg
+            cfg, shard = self.cfg, self.shard
 
             def fn(params, cache, state, tokens, start, row, slot):
                 view = PC.ssm_slot_view(cache, state)
@@ -269,7 +290,7 @@ class ContinuousBatchingScheduler:
                     cl, vw = carry
                     lg, vw = M.paged_decode_step(cfg, params, vw,
                                                  tok[None, None],
-                                                 cl[None], bt)
+                                                 cl[None], bt, shard=shard)
                     return (cl + 1, vw), lg[0, -1]
 
                 (_, view), lgs = jax.lax.scan(
@@ -362,6 +383,26 @@ class ContinuousBatchingScheduler:
     def pages_allocated(self) -> int:
         """Physical pages held (each shared page counted once)."""
         return self.alloc.num_allocated
+
+    def shard_stats(self) -> Dict[str, Any]:
+        """Per-shard page-pool occupancy for a ``tp``-way group.
+
+        One allocator ledger governs every shard's storage plane, so the
+        per-shard numbers are equal by construction — that lockstep (no
+        shard can run out of pages before its peers) is the design point
+        the sharded rule set in tests/test_allocator_props.py checks.
+        """
+        one = {
+            "pages_allocated": self.alloc.num_allocated,
+            "pages_free": self.alloc.num_free,
+            "peak_pages": self.stats["peak_pages"],
+            "pool_bytes": PC.pool_bytes(self.cfg, self.alloc.num_pages,
+                                        self.page_size, self.tp),
+        }
+        cap = max(self.alloc.capacity, 1)
+        one["peak_utilization"] = round(self.stats["peak_pages"] / cap, 3)
+        return {"tp": self.tp, "per_shard": [dict(one)
+                                             for _ in range(self.tp)]}
 
     def _bucket(self, plen: int) -> int:
         if self.exact_prefill:
@@ -525,7 +566,8 @@ class ContinuousBatchingScheduler:
                             self.alloc.num_allocated + self.reserved_pages
                             - self.pages_in_use + 1, 2)
             if num_pages > self.alloc.num_pages:
-                self.cache = PC.resize_cache_pages(self.cache, num_pages)
+                self.cache = PC.resize_cache_pages(self.cache, num_pages,
+                                                   tp=self.tp)
                 self.alloc.grow(num_pages)
             else:
                 self.alloc.request_shrink(num_pages)
@@ -563,7 +605,8 @@ class ContinuousBatchingScheduler:
             self.max_slots = n
         if self.alloc.shrink_ready():
             self.cache = PC.resize_cache_pages(self.cache,
-                                               self.alloc.complete_shrink())
+                                               self.alloc.complete_shrink(),
+                                               tp=self.tp)
 
     # ---------------------------------------------------------------- step --
     @property

@@ -200,6 +200,54 @@ def check_gpipe_matches_sequential():
     print("PASS gpipe_matches_sequential")
 
 
+def check_shard_group_paged_decode():
+    """Tensor-parallel shard group under real shard_map (2 devices on the
+    "model" axis): per-shard pools + head-sliced weights, one program per
+    device, head all_gather on the wire — tokens match the single-device
+    tp=1 decode and the in-program unrolled-loop tp=2 path."""
+    import dataclasses
+
+    from repro.parallel.context import ShardGroup
+    from repro.serving import paged_cache as PC
+
+    cfg = dataclasses.replace(REDUCED["qwen3-32b"], dtype="float32")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    mesh = make_mesh_for(4, 2)              # ("data", "model"): model axis 2
+    rng = np.random.RandomState(0)
+    prompt = rng.randint(0, cfg.vocab_size, size=11).astype(np.int32)
+    from repro.models.transformer import lm_forward
+
+    def run(shard):
+        tp = 1 if shard is None else shard.tp
+        cache = PC.init_paged_cache(cfg, 6, 8, 2, tp=tp)
+        _, _, pre = lm_forward(cfg, params, jnp.asarray(prompt[None]),
+                               mode="prefill")
+        row = np.array([1, 2, 0], np.int32)
+        cache = PC.write_prefill(cfg, cache, pre, jnp.asarray(row), 0,
+                                 len(prompt), len(prompt), 8, tp=tp)
+        bt = np.zeros((2, 3), np.int32)
+        bt[0] = row
+        lens = np.array([len(prompt), 0], np.int32)
+        last = np.array([[3], [0]], np.int32)
+        toks = []
+        for _ in range(5):
+            lg, cache = M.paged_decode_step(
+                cfg, params, cache, jnp.asarray(last), jnp.asarray(lens),
+                jnp.asarray(bt), shard=shard)
+            nxt = int(jnp.argmax(lg[0, -1, :cfg.vocab_size]))
+            toks.append(nxt)
+            last[0, 0] = nxt
+            lens[0] += 1
+        return toks
+
+    want = run(None)
+    loop = run(ShardGroup(2))
+    with mesh:
+        spmd = run(ShardGroup(2, mesh=mesh))
+    assert want == loop == spmd, (want, loop, spmd)
+    print("PASS shard_group_paged_decode")
+
+
 if __name__ == "__main__":
     checks = {name[len("check_"):]: fn
               for name, fn in sorted(globals().items())

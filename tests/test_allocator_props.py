@@ -17,6 +17,15 @@ grow / request_shrink / complete_shrink and check, after every step:
 
 The state-machine analogue of the hand-written sequences in
 tests/test_autoscale.py and tests/test_prefix_cache.py.
+
+``ShardedPoolMachine`` adds the shard-group rule set (PR 5): a tp-way
+group keeps ONE logical allocator over tp per-shard storage planes
+(``repro.serving.paged_cache`` — pages are logical, storage is per
+shard). The machine drives alloc/share/COW-fork/free through the single
+control plane while maintaining each shard's storage plane explicitly,
+and asserts after every step that per-shard free/allocated counts stay
+equal across shards and that an atomic COW (``copy_page`` copies every
+shard's slice in one call) leaves no shard holding stale page contents.
 """
 import pytest
 
@@ -160,3 +169,110 @@ TestAllocatorProps = AllocatorMachine.TestCase
 TestAllocatorProps.settings = settings(max_examples=60,
                                        stateful_step_count=40,
                                        deadline=None)
+
+
+class ShardedPoolMachine(RuleBasedStateMachine):
+    """One logical allocator, ``TP`` per-shard storage planes.
+
+    Mirrors the scheduler's shard-group contract: every control-plane op
+    (alloc / share / free / COW fork) applies to all shards at once —
+    alloc stamps the page's slice in every shard, the COW fork copies the
+    source page's slice in every shard (``paged_cache.copy_page`` with a
+    leading shard axis) — so the planes can never skew.
+    """
+
+    TP = 2
+
+    def __init__(self):
+        super().__init__()
+        self.alloc = PageAllocator(8)
+        self.refs = {}                      # page -> refcount (shadow)
+        # per-shard storage planes: page -> content stamp; the stamp a
+        # shard holds for page p models its kv-head slice of p
+        self.planes = [dict() for _ in range(self.TP)]
+        self.stamp = 0
+
+    def _write_all(self, page):
+        """A prefill insert: every shard's slice written in one call."""
+        self.stamp += 1
+        for plane in self.planes:
+            plane[page] = self.stamp
+
+    # ------------------------------------------------------------- rules --
+    @rule(n=st.integers(min_value=1, max_value=4))
+    def alloc_pages(self, n):
+        if not self.alloc.can_alloc(n):
+            return
+        pages = self.alloc.alloc(n)
+        for p in pages:
+            self.refs[p] = 1
+            self._write_all(p)
+
+    @precondition(lambda self: self.refs)
+    @rule(data=st.data())
+    def share_pages(self, data):
+        pages = data.draw(st.lists(st.sampled_from(sorted(self.refs)),
+                                   min_size=1, unique=True), label="share")
+        self.alloc.share(pages)
+        for p in pages:
+            self.refs[p] += 1
+        # sharing is control-plane only: no shard's storage changes
+
+    @precondition(lambda self: self.refs)
+    @rule(data=st.data())
+    def free_pages(self, data):
+        pages = data.draw(st.lists(st.sampled_from(sorted(self.refs)),
+                                   min_size=1, unique=True), label="free")
+        self.alloc.free(pages)
+        for p in pages:
+            self.refs[p] -= 1
+            if not self.refs[p]:
+                del self.refs[p]
+                for plane in self.planes:   # last owner: slice recycled
+                    del plane[p]
+
+    @precondition(lambda self: any(r >= 2 for r in self.refs.values()))
+    @rule(data=st.data())
+    def cow_fork(self, data):
+        """Diverge inside a shared page: alloc the copy, copy *every*
+        shard's slice atomically, drop one ref on the source."""
+        if not self.alloc.can_alloc(1):
+            return
+        src = data.draw(st.sampled_from(
+            sorted(p for p, r in self.refs.items() if r >= 2)), label="src")
+        dst = self.alloc.alloc(1)[0]
+        self.refs[dst] = 1
+        for plane in self.planes:           # the atomic whole-group copy
+            plane[dst] = plane[src]
+        self.alloc.free([src])
+        self.refs[src] -= 1
+
+    # -------------------------------------------------------- invariants --
+    @invariant()
+    def per_shard_counts_stay_equal(self):
+        """The satellite's acceptance: after any alloc/share/COW/free
+        sequence, every shard holds slices for exactly the allocated
+        logical pages — per-shard free/allocated counts are equal."""
+        allocated = set(self.alloc._ref)
+        for s, plane in enumerate(self.planes):
+            assert set(plane) == allocated, f"shard {s} skewed"
+        counts = {(self.alloc.num_pages - 1 - len(plane), len(plane))
+                  for plane in self.planes}
+        assert len(counts) == 1, "per-shard free/allocated counts diverged"
+
+    @invariant()
+    def cow_left_no_stale_shard(self):
+        """Any two shards agree on every page's contents (same stamp) —
+        a non-atomic COW would break this on the first fork."""
+        for plane in self.planes[1:]:
+            assert plane == self.planes[0]
+
+    @invariant()
+    def control_plane_agrees(self):
+        assert dict(self.alloc._ref) == self.refs
+
+
+TestShardedPoolProps = ShardedPoolMachine.TestCase
+TestShardedPoolProps.settings = settings(max_examples=50,
+                                         stateful_step_count=40,
+                                         deadline=None)

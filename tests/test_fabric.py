@@ -264,6 +264,46 @@ def test_heartbeat_death_fails_host_replicas(params):
     assert all(len(r.out_tokens) == r.max_new_tokens for r in reqs)
 
 
+def test_failed_replica_hostname_purged(params):
+    """Regression (PR 5 satellite): ServingReplica.fail() must purge its
+    hostnames so a dead member can't read as still occupying its node —
+    before the fix, a directly-failed replica (member death observed ahead
+    of the router) kept its hostname, so hostname-derived occupancy checks
+    (e.g. the fleet controller's release guard) saw a ghost on the node
+    and prefix-affinity stats could still attribute cached pages to it
+    until the replacement booted."""
+    rng = np.random.RandomState(11)
+    router = ServingRouter(CFG, params, replicas=2, max_slots=2,
+                           page_size=8, max_seq_len=64,
+                           route_policy="prefix-affinity",
+                           placement=["slave-0", "slave-1"])
+    persona = rng.randint(0, CFG.vocab_size, size=16).astype(np.int32)
+    # warm replica 1's prefix index with the persona (replica 0 is busy)
+    r0 = router.submit(rng.randint(0, CFG.vocab_size, size=24), 20)
+    r1 = router.submit(persona, 4)
+    router.step(max_fuse=1)
+    assert r1.replica == 1
+    rep = router.replicas[1]
+    assert rep.prefix_match_len(persona) > 0
+    # member dies; fail() observed directly, before any router bookkeeping
+    rep.fail()
+    assert rep.hostnames == [] and rep.hostname is None
+    # no hostname-derived signal sees the dead replica on its node
+    assert not any("slave-1" in r.hostnames
+                   for r in router.replicas.values())
+    assert rep.prefix_match_len(persona) == 0   # cached pages died with it
+    # a follow-up persona request routes to a live replica, never the ghost
+    r2 = router.submit(np.concatenate([persona, persona[:2]]), 4)
+    router.route_due()
+    assert r2.replica == 0
+    # and the router-side sweep of the host is a clean no-op (no double
+    # failure, the replica slot is simply removed)
+    assert router.fail_host("slave-1") == []
+    router.fail_replica(1)
+    router.run()
+    assert len(r0.out_tokens) == 20 and len(r2.out_tokens) == 4
+
+
 # ----------------------------------------------- per-replica plan + Ambari --
 
 def test_page_plan_replica_split_all_archs():

@@ -1,0 +1,389 @@
+"""Tensor-parallel shard groups: byte-identity of tp>1 serving vs tp=1
+(dense, hybrid-SSM, MoE), sharded page-pool/COW atomicity, the per-shard
+kernel wrapper vs the unsharded one, serving_page_plan(tp=k) budget sums,
+provision_serving shard-group placement, and fleet scaling/preemption in
+shard-group units. See docs/sharding.md for the contracts under test."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, ShapeConfig
+from repro.configs.registry import ARCHS, REDUCED
+from repro.core.blueprint import serving_page_plan
+from repro.models import model as M
+from repro.parallel.context import ShardGroup
+from repro.serving import paged_cache as PC
+from repro.serving.router import ServingRouter
+from repro.serving.scheduler import ContinuousBatchingScheduler
+
+# widened so tp in (2, 4) divides the kv-head count
+CFG = dataclasses.replace(REDUCED["qwen3-32b"], dtype="float32",
+                          n_heads=8, n_kv_heads=4)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init(CFG, jax.random.PRNGKey(0))
+
+
+def _persona_trace(rng, n_users=5, extra=2):
+    """Shared-prefix-heavy trace: exercises full prefill, suffix prefill,
+    page sharing, and COW forks — every sharded cache op — in one run."""
+    persona = rng.randint(0, CFG.vocab_size, size=18).astype(np.int32)
+    out = []
+    for _ in range(n_users):
+        user = rng.randint(0, CFG.vocab_size,
+                           size=int(rng.randint(3, 8))).astype(np.int32)
+        out.append((np.concatenate([persona, user]),
+                    int(rng.randint(4, 9))))
+    for _ in range(extra):
+        out.append((rng.randint(0, CFG.vocab_size,
+                                size=int(rng.randint(5, 12))
+                                ).astype(np.int32),
+                    int(rng.randint(4, 8))))
+    return out
+
+
+def _run_sched(cfg, params, trace, tp, **kw):
+    s = ContinuousBatchingScheduler(cfg, params, max_slots=3, page_size=8,
+                                    max_seq_len=64, tp=tp, **kw)
+    reqs = [s.submit(p, g, arrival_step=i) for i, (p, g) in enumerate(trace)]
+    s.run()
+    return [r.out_tokens for r in reqs], s
+
+
+# ----------------------------------------------------------- shard group --
+
+def test_shard_group_validation():
+    with pytest.raises(ValueError, match="tp must be >= 1"):
+        ShardGroup(0)
+    sg = ShardGroup(3)
+    with pytest.raises(ValueError, match="must divide"):
+        sg.validate_model(CFG)              # 3 does not divide 8/4 heads
+    ShardGroup(2).validate_model(CFG)
+    assert ShardGroup(2).shard_heads(CFG.n_kv_heads) == 2
+    assert not ShardGroup(1).is_sharded and ShardGroup(2).is_sharded
+    with pytest.raises(ValueError, match="MLA"):
+        ShardGroup(2).validate_model(REDUCED["deepseek-v2-236b"])
+
+
+def test_scheduler_rejects_undividable_tp(params):
+    with pytest.raises(ValueError, match="must divide"):
+        ContinuousBatchingScheduler(CFG, params, max_slots=2, page_size=8,
+                                    max_seq_len=32, tp=3)
+
+
+# ------------------------------------------------------- token identity --
+
+def test_tp_tokens_identical_dense(params):
+    """Acceptance: tp=2 and tp=4 emit byte-identical tokens to tp=1 on a
+    dense fp32 arch, across full prefills, prefix-cache hits, and COW
+    forks (the sharded suffix/COW paths must all agree)."""
+    rng = np.random.RandomState(0)
+    trace = _persona_trace(rng)
+    want, s1 = _run_sched(CFG, params, trace, tp=1)
+    for tp in (2, 4):
+        got, s = _run_sched(CFG, params, trace, tp=tp)
+        assert got == want, f"tp={tp} diverged from tp=1"
+        # the interesting sharded paths actually ran
+        assert s.stats["prefix_hits"] > 0
+        assert s.stats["cow_forks"] > 0
+        # allocator ledger is tp-invariant (pages are logical)
+        assert s.stats["peak_pages"] == s1.stats["peak_pages"]
+        assert s.alloc.num_allocated == 0
+
+
+def test_tp_tokens_identical_hybrid_ssm():
+    """Sharded attention + replicated SSM slot state (jamba hybrid)."""
+    cfg = dataclasses.replace(
+        REDUCED["jamba-v0.1-52b"], dtype="float32",
+        moe_capacity_factor=float(REDUCED["jamba-v0.1-52b"].n_routed_experts)
+        / REDUCED["jamba-v0.1-52b"].moe_top_k)
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(1)
+    trace = [(rng.randint(0, cfg.vocab_size,
+                          size=int(rng.randint(4, 9))).astype(np.int32),
+              int(rng.randint(4, 7))) for _ in range(3)]
+    want, _ = _run_sched(cfg, params, trace, tp=1)
+    got, _ = _run_sched(cfg, params, trace, tp=2)
+    assert got == want
+
+
+def test_tp_tokens_identical_moe_expert_sharded():
+    """Expert-sharded MoE: routing replicated, expert FFN sliced per shard,
+    expert-axis concat combine — token-identical to tp=1 (the EP
+    all-gather reconstructs the exact slot buffer)."""
+    cfg = dataclasses.replace(REDUCED["qwen2-moe-a2.7b"], dtype="float32")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(2)
+    trace = [(rng.randint(0, cfg.vocab_size,
+                          size=int(rng.randint(4, 9))).astype(np.int32),
+              int(rng.randint(3, 6))) for _ in range(3)]
+    want, _ = _run_sched(cfg, params, trace, tp=1)
+    got, _ = _run_sched(cfg, params, trace, tp=2)
+    assert got == want
+
+
+def test_fleet_tp_tokens_identical_to_single(params):
+    """Acceptance: a tp=2 *fleet* run (2 shard-group replicas behind the
+    router) emits byte-identical tokens to the single tp=1 scheduler."""
+    rng = np.random.RandomState(3)
+    trace = _persona_trace(rng, n_users=4, extra=2)
+    want, _ = _run_sched(CFG, params, trace, tp=1)
+
+    router = ServingRouter(CFG, params, replicas=2, max_slots=3,
+                           page_size=8, max_seq_len=64, tp=2,
+                           placement=[["slave-0", "slave-1"],
+                                      ["slave-2", "slave-3"]])
+    reqs = [router.submit(p, g, arrival_step=i)
+            for i, (p, g) in enumerate(trace)]
+    router.run()
+    assert [r.out_tokens for r in reqs] == want
+    assert all(len(rep.hostnames) == 2
+               for rep in router.replicas.values())
+
+
+# --------------------------------------------------- sharded cache ops --
+
+def test_init_paged_cache_shard_axis():
+    cache = PC.init_paged_cache(CFG, num_pages=5, page_size=4, max_slots=2,
+                                tp=2)
+    leaf = cache["stack"]["0"]["k_pages"]
+    # (n_periods, tp, P, ps, KVH/tp, hd)
+    assert leaf.shape == (CFG.n_layers, 2, 5, 4, CFG.n_kv_heads // 2,
+                          CFG.resolved_head_dim)
+    with pytest.raises(ValueError, match="must divide"):
+        PC.init_paged_cache(CFG, 5, 4, 2, tp=3)
+
+
+def test_copy_page_sharded_atomic():
+    """A COW fork copies the source page's slice in *every* shard in one
+    call — no shard can be left holding stale contents."""
+    cache = PC.init_paged_cache(CFG, num_pages=4, page_size=2, max_slots=1,
+                                tp=2)
+
+    def stamp(leaf):
+        # distinct value per (shard, page) so copies are attributable
+        idx = np.arange(leaf.size, dtype=np.float32).reshape(leaf.shape)
+        return idx
+
+    cache = jax.tree.map(lambda x: jax.numpy.asarray(stamp(x), x.dtype),
+                         cache)
+    out = PC.copy_page(cache, 1, 3, tp=2)
+
+    def check(node, stacked):
+        if isinstance(node, dict) and "k_pages" in node:
+            ax = PC.page_axis(stacked, 2)
+            for k in PC.PAGE_LEAVES:
+                if k not in node:
+                    continue
+                leaf = np.asarray(node[k])
+                src = np.take(leaf, 1, axis=ax)
+                dst = np.take(leaf, 3, axis=ax)
+                np.testing.assert_array_equal(src, dst)
+            return
+        for k, v in node.items():
+            check(v, stacked or k == "stack")
+
+    check(out, False)
+
+
+def test_write_prefill_sharded_matches_unsharded(params):
+    """The per-shard pools hold exactly the kv-head slices of the tp=1
+    pool after a prefill insert (same pages, same block row)."""
+    from repro.models.transformer import lm_forward
+    rng = np.random.RandomState(4)
+    prompt = rng.randint(0, CFG.vocab_size, size=11).astype(np.int32)
+    _, _, pre = lm_forward(CFG, params, jax.numpy.asarray(prompt[None]),
+                           mode="prefill")
+    row = np.array([1, 2, PC.SINK_PAGE], np.int32)
+    kw = dict(block_row=jax.numpy.asarray(row), slot=0,
+              plen=len(prompt), n_write=len(prompt), page_size=8)
+    c1 = PC.write_prefill(CFG, PC.init_paged_cache(CFG, 4, 8, 1), pre, **kw)
+    c2 = PC.write_prefill(CFG, PC.init_paged_cache(CFG, 4, 8, 1, tp=2), pre,
+                          tp=2, **kw)
+    k1 = np.asarray(c1["stack"]["0"]["k_pages"])   # (L, P, ps, KVH, hd)
+    k2 = np.asarray(c2["stack"]["0"]["k_pages"])   # (L, tp, P, ps, KVH/2, hd)
+    KVH = CFG.n_kv_heads
+    np.testing.assert_array_equal(k2[:, 0], k1[..., :KVH // 2, :])
+    np.testing.assert_array_equal(k2[:, 1], k1[..., KVH // 2:, :])
+
+
+# ------------------------------------------------------------- kernel --
+
+def test_paged_decode_kernel_sharded_matches_unsharded():
+    """The per-shard Pallas kernel invocation (head-slice q against each
+    shard's pool slice, concat combine) equals the one-shot kernel on the
+    logical pool."""
+    from repro.kernels import ops
+    rng = np.random.RandomState(5)
+    B, H, KVH, d, P, ps, n_pg, tp = 2, 8, 4, 16, 6, 4, 3, 2
+    q = jax.numpy.asarray(rng.randn(B, H, d).astype(np.float32))
+    k_pages = jax.numpy.asarray(rng.randn(P, ps, KVH, d).astype(np.float32))
+    v_pages = jax.numpy.asarray(rng.randn(P, ps, KVH, d).astype(np.float32))
+    bt = jax.numpy.asarray(
+        np.array([[1, 2, 3], [4, 5, 0]], np.int32))
+    lens = jax.numpy.asarray(np.array([9, 5], np.int32))
+    want = ops.paged_decode_attention(q, k_pages, v_pages, bt, lens,
+                                      interpret=True)
+    def shard(a):
+        return jax.numpy.stack([a[..., :KVH // tp, :],
+                                a[..., KVH // tp:, :]])
+
+    got = ops.paged_decode_attention_sharded(
+        q, shard(k_pages), shard(v_pages), bt, lens, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# -------------------------------------------------------------- planner --
+
+def test_page_plan_tp_budgets_sum_within_one_page_per_shard():
+    """Acceptance: serving_page_plan(tp=k) per-shard budgets sum to the
+    unsharded budget within one page per shard (flooring only)."""
+    mesh = {"model": 8, "data": 4}
+    checked = 0
+    for name, cfg in ARCHS.items():
+        try:
+            base = serving_page_plan(cfg, SHAPES["decode_32k"], mesh)
+        except ValueError:
+            continue
+        if base is None:
+            continue
+        for k in (2, 4, 8):
+            if cfg.n_kv_heads % k:
+                with pytest.raises(ValueError, match="must divide"):
+                    serving_page_plan(cfg, SHAPES["decode_32k"], mesh, tp=k)
+                continue
+            plan = serving_page_plan(cfg, SHAPES["decode_32k"], mesh, tp=k)
+            checked += 1
+            total = k * plan["pages_budget_per_shard"]
+            assert 0 <= base["num_pages"] - total <= k, (name, k)
+            assert abs(plan["num_pages"] - base["num_pages"]) <= k
+            # per-shard bytes times tp reassembles the whole pool
+            assert plan["shard_pool_bytes"] * k == plan["pool_bytes"]
+            assert plan["tp"] == k
+    assert checked > 0
+
+
+def test_page_plan_tight_pool_raises_with_minimum():
+    """Satellite: page_size not dividing max_len on a tight pool used to
+    floor silently to zero admissible sequences; now it names the minimum
+    viable pool."""
+    tight = ShapeConfig("tight", 1000, 1, "decode")
+    with pytest.raises(ValueError, match="minimum viable"):
+        serving_page_plan(ARCHS["qwen1.5-110b"], tight, {"model": 1},
+                          page_size=48)
+
+
+# -------------------------------------------------- placement + fleet --
+
+def _mini_cluster(n_slaves, spares=0):
+    from repro.core.cluster import ClusterManager
+    mgr = ClusterManager()
+    ic = mgr.build_cluster(n_slaves=n_slaves, spot=True)
+    if spares:
+        ic.lifecycle.provision_spares(ic.cluster, spares)
+    return mgr, ic
+
+
+def test_provision_serving_tp_contiguous_groups():
+    """Acceptance: provision_serving(tp=k) places each shard group on
+    exactly k (contiguous, distinct) nodes."""
+    from repro.core.services import AmbariServer
+    mgr, ic = _mini_cluster(4)
+    server = AmbariServer(mgr.cloud, ic.cluster)
+    svc = server.provision_serving(ARCHS["qwen3-32b"], SHAPES["decode_32k"],
+                                   {"model": 8, "data": 4}, replicas=2, tp=2)
+    groups = svc.config["replica_placement"]
+    assert groups == [["slave-0", "slave-1"], ["slave-2", "slave-3"]]
+    assert all(len(g) == 2 == len(set(g)) for g in groups)
+    assert svc.config["tp"] == 2
+    with pytest.raises(ValueError, match="need 6 slaves"):
+        server.provision_serving(ARCHS["qwen3-32b"], SHAPES["decode_32k"],
+                                 {"model": 8, "data": 4}, replicas=3, tp=2)
+
+
+def test_fleet_controller_scales_in_shard_group_units(params):
+    """Scale-out acquires tp nodes in one extend; a completed drain
+    releases all tp members' nodes."""
+    from repro.autoscale import FleetController
+    from repro.core.heartbeat import HeartbeatMonitor
+    mgr, ic = _mini_cluster(2)
+    monitor = HeartbeatMonitor()
+    for node in ic.cluster.directory.slaves():
+        monitor.register(node.hostname, now=mgr.cloud.clock)
+    router = ServingRouter(CFG, params, replicas=1, max_slots=1,
+                           page_size=8, max_seq_len=64, tp=2,
+                           placement=[["slave-0", "slave-1"]])
+    ctl = FleetController(router, min_replicas=1, max_replicas=2,
+                          eval_interval=2, lifecycle=ic.lifecycle,
+                          cluster=ic.cluster, monitor=monitor)
+    rng = np.random.RandomState(6)
+    for i in range(10):
+        router.submit(rng.randint(0, CFG.vocab_size, size=6), 10,
+                      arrival_step=0)
+    for _ in range(3):
+        router.submit(rng.randint(0, CFG.vocab_size, size=6), 4,
+                      arrival_step=180 + 40 * _)   # quiet tail -> scale-in
+    done = ctl.run()
+    assert all(len(r.out_tokens) == r.max_new_tokens for r in done)
+    adds = [e for e in ctl.log.events if e.action == "add_replica"]
+    assert adds and all(e.detail["nodes"] == 2 for e in adds)
+    ext = [e for e in ctl.log.events if e.action == "extend_cluster"]
+    assert ext and all(len(e.detail["added"]) == 2 for e in ext)
+    # the drained group's two nodes were both released
+    ctl.log.assert_order("extend_cluster", "drain_replica",
+                         "remove_replica", "shrink_cluster")
+    shrunk = [h for e in ctl.log.events if e.action == "shrink_cluster"
+              for h in e.detail["removed"]]
+    assert len(shrunk) == 2
+    assert len(ic.cluster.directory.slaves()) == 2
+
+
+def test_shard_member_preemption_replaced_without_losing_streams(params):
+    """Tentpole contract: one preempted member of a tp=2 group is swapped
+    from the warm-spare pool under its stable hostname and the group's
+    streams never re-route; with no spare the whole group fails and its
+    streams re-prefill elsewhere."""
+    from repro.autoscale import FleetController
+    from repro.core.heartbeat import HeartbeatMonitor
+    mgr, ic = _mini_cluster(4, spares=1)
+    monitor = HeartbeatMonitor()
+    for node in ic.cluster.directory.slaves():
+        monitor.register(node.hostname, now=mgr.cloud.clock)
+    router = ServingRouter(CFG, params, replicas=2, max_slots=2,
+                           page_size=8, max_seq_len=64, tp=2,
+                           placement=[["slave-0", "slave-1"],
+                                      ["slave-2", "slave-3"]])
+    ctl = FleetController(router, min_replicas=2, max_replicas=2,
+                          eval_interval=4, lifecycle=ic.lifecycle,
+                          cluster=ic.cluster, monitor=monitor)
+    rng = np.random.RandomState(7)
+    reqs = [router.submit(rng.randint(0, CFG.vocab_size, size=6), 12)
+            for _ in range(6)]
+    for _ in range(3):
+        ctl.tick()
+        router.step(max_fuse=1)
+    # preempt one member of group 0 mid-decode: spare swaps in, no failure
+    victim_id = ic.cluster.directory.nodes["slave-1"].instance_id
+    mgr.cloud.preempt_spot(victim_id)
+    assert router.stats["reroutes"] == 0
+    assert len(router.replicas) == 2
+    assert any(e.action == "shard_member_replaced"
+               for e in ctl.log.events)
+    # the stable hostname survived with fresh hardware
+    assert ic.cluster.directory.nodes["slave-1"].instance_id != victim_id
+    # second member loss: spare pool is empty -> the whole group fails,
+    # streams re-route to the surviving group, and its nodes are released
+    mgr.cloud.preempt_spot(
+        ic.cluster.directory.nodes["slave-0"].instance_id)
+    assert router.stats["reroutes"] >= 1
+    assert len(router.replicas) == 1
+    done = ctl.run()
+    assert all(len(r.out_tokens) == r.max_new_tokens for r in reqs)
+    assert len(done) == len(reqs)
+    hostnames = [n.hostname for n in ic.cluster.directory.slaves()]
+    assert "slave-0" not in hostnames and "slave-2" in hostnames

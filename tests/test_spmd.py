@@ -44,3 +44,8 @@ def test_decode_cache_stays_sharded():
 @pytest.mark.slow
 def test_gpipe_matches_sequential():
     run_check("gpipe_matches_sequential")
+
+
+@pytest.mark.slow
+def test_shard_group_paged_decode_shard_map():
+    run_check("shard_group_paged_decode")
