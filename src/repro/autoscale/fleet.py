@@ -28,6 +28,15 @@ node under its stable hostname and the group's streams never stop (the
 surviving shards re-materialise the lost pool slice onto the spare);
 only with no spare left does the whole group fail and its streams
 re-route, with the surviving members' nodes released.
+
+Disaggregated fleets (``router.disagg``) scale the two roles on separate
+signals: prefill replicas on backlog *tokens* (queued prompts plus
+in-flight chunk remainders, per prefill replica), decode replicas on
+stream demand (active + parked-for-handoff, per decode replica) — long
+prompts stress the first, long generations the second, and coupling them
+under one ladder would overshoot whichever role is idle. Scale-in keeps
+at least one replica per role; the colocated (non-disagg) path is
+untouched.
 """
 from __future__ import annotations
 
@@ -39,6 +48,36 @@ from repro.autoscale.policy import ScaleDecision, StepScalingPolicy
 from repro.core.events import EventLog
 from repro.serving.replica import ServingReplica
 from repro.serving.router import ServingRouter
+
+
+def default_role_policies(max_replicas: int, slots_per_replica: int,
+                          prefill_budget: Optional[int] = None):
+    """Separate ladders for a disaggregated fleet's two roles.
+
+    Prefill replicas scale on *backlog tokens per prefill replica* — the
+    prompt tokens queued or mid-chunk, normalised by the per-tick chunk
+    budget (a replica retires about one budget's worth per tick, so
+    ``2 * budget`` outstanding means ~2 ticks of prompt latency). Decode
+    replicas scale on *streams per decode replica* against their slot
+    count, the same ladder shape the colocated fleet uses. Each role keeps
+    at least one replica — a fleet that can prefill but never decode (or
+    vice versa) deadlocks.
+    """
+    b = float(max(prefill_budget or 8 * max(slots_per_replica, 1), 1))
+    prefill = StepScalingPolicy(
+        metric="prefill_backlog_per_replica",
+        steps_out=[(2.0 * b, 1), (6.0 * b, 2)],
+        scale_in_below=0.5 * b, scale_in_step=1,
+        min_cap=1, max_cap=max_replicas,
+        cooldown_out=2.0, cooldown_in=12.0, resource="prefill_replicas")
+    s = max(slots_per_replica, 1)
+    decode = StepScalingPolicy(
+        metric="decode_demand_per_replica",
+        steps_out=[(1.25 * s, 1), (3.0 * s, 2)],
+        scale_in_below=0.5 * s, scale_in_step=1,
+        min_cap=1, max_cap=max_replicas,
+        cooldown_out=2.0, cooldown_in=12.0, resource="decode_replicas")
+    return prefill, decode
 
 
 def default_fleet_policy(min_replicas: int, max_replicas: int,
@@ -81,6 +120,13 @@ class FleetController:
         self.max_replicas = max_replicas
         self.policy = policy or default_fleet_policy(
             min_replicas, max_replicas, router.replica_kw["max_slots"])
+        # disaggregated fleets scale the two roles on separate signals:
+        # prefill on backlog tokens, decode on stream demand
+        self.prefill_policy = self.decode_policy = None
+        if router.disagg:
+            self.prefill_policy, self.decode_policy = default_role_policies(
+                max_replicas, router.replica_kw["max_slots"],
+                router.replica_kw.get("prefill_budget"))
         self.eval_interval = eval_interval
         self.tick_seconds = tick_seconds
         self.lifecycle = lifecycle
@@ -148,6 +194,19 @@ class FleetController:
             # demand thresholds under shared-prefix traffic
             "fleet_hit_rate": self._hit_rate(),
         }
+        if self.router.disagg:
+            n_pre = len(self.router.live_by_role("prefill"))
+            n_dec = len([r for r in live if r.role != "prefill"])
+            backlog = float(self.router.prefill_backlog())
+            dem = float(self.router.decode_demand())
+            sample.update({
+                "prefill_replicas": float(n_pre),
+                "decode_replicas": float(n_dec),
+                "prefill_backlog": backlog,
+                "prefill_backlog_per_replica": backlog / max(n_pre, 1),
+                "decode_demand": dem,
+                "decode_demand_per_replica": dem / max(n_dec, 1),
+            })
         self.bus.record(self.now, sample)
         if self.router.step_idx >= self._next_eval:
             self._next_eval = self.router.step_idx + self.eval_interval
@@ -158,10 +217,25 @@ class FleetController:
                 ctl.tick()
 
     def _evaluate(self) -> None:
-        horizon = self.eval_interval * self.tick_seconds
+        if self.router.disagg:
+            self._evaluate_role("prefill", self.prefill_policy)
+            self._evaluate_role("decode", self.decode_policy)
+            return
         d = self.policy.evaluate(
-            self.now, self.bus.max(self.policy.metric, horizon),
+            self.now, self._windowed(self.policy.metric),
             len(self._live()))
+        self._act(d)
+
+    def _evaluate_role(self, role: str, policy) -> None:
+        d = policy.evaluate(self.now, self._windowed(policy.metric),
+                            len(self.router.live_by_role(role)))
+        self._act(d, role=role)
+
+    def _windowed(self, metric: str) -> float:
+        return self.bus.max(metric,
+                            self.eval_interval * self.tick_seconds)
+
+    def _act(self, d, role: Optional[str] = None) -> None:
         if d is None:
             return
         self.decisions.append(d)
@@ -169,16 +243,17 @@ class FleetController:
                       resource=d.resource, desired=d.desired, delta=d.delta,
                       reason=d.reason)
         if d.delta > 0:
-            self._scale_out(d.delta)
+            self._scale_out(d.delta, role=role)
         else:
-            self._scale_in(-d.delta)
+            self._scale_in(-d.delta, role=role)
 
     # ------------------------------------------------------------ actuate --
-    def _scale_out(self, n: int) -> None:
+    def _scale_out(self, n: int, role: Optional[str] = None) -> None:
         for _ in range(n):
             if len(self._live()) >= self.max_replicas:
                 return
-            draining = self._draining()
+            draining = [r for r in self._draining()
+                        if role is None or r.role == role]
             if draining:
                 # cheapest capacity: a drain not yet completed reverses
                 rep = max(draining, key=lambda r: r.replica_id)
@@ -187,21 +262,27 @@ class FleetController:
                               replica=rep.replica_id)
                 continue
             hostnames = self._acquire_nodes()
+            kw = {} if role is None else {"role": role}
             if self.tp > 1:
-                rep = self.router.add_replica(hostnames=hostnames)
+                rep = self.router.add_replica(hostnames=hostnames, **kw)
             else:
                 rep = self.router.add_replica(
-                    hostname=hostnames[0] if hostnames else None)
+                    hostname=hostnames[0] if hostnames else None, **kw)
             self._attach_inner(rep)
             self.log.emit(self.now, "autoscale", "add_replica",
-                          replica=rep.replica_id,
+                          replica=rep.replica_id, role=rep.role,
                           hostname=hostnames[0] if hostnames else None,
                           nodes=len(hostnames) if hostnames else 0)
 
-    def _scale_in(self, n: int) -> None:
+    def _scale_in(self, n: int, role: Optional[str] = None) -> None:
         for _ in range(n):
             live = self._live()
-            if len(live) <= self.min_replicas:
+            if role is not None:
+                live = [r for r in live if r.role == role]
+                floor = 1          # both roles must survive — see
+            else:                  # default_role_policies
+                floor = self.min_replicas
+            if len(live) <= floor:
                 return
             # least outstanding work drains fastest; newest id on ties
             rep = min(live, key=lambda r: (r.outstanding_pages,
@@ -341,5 +422,6 @@ class FleetController:
                                  default=len(self.router.replicas)),
             "final_replicas": len(self._live()),
             "reroutes": self.router.stats["reroutes"],
+            "migrations": self.router.stats.get("migrations", 0),
             "prefix_hit_rate": round(self._hit_rate(), 3),
         }

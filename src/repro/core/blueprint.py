@@ -192,7 +192,9 @@ def serving_page_plan(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
                       page_size: int = 16, replicas: int = 1,
                       shared_prefix_len: int = 0,
                       users_per_prefix: int = 1,
-                      tp: int = 1) -> Optional[Dict[str, Any]]:
+                      tp: int = 1, prefill_replicas: int = 0,
+                      prompt_len: Optional[int] = None
+                      ) -> Optional[Dict[str, Any]]:
     """Size the paged-KV page pool for the continuous-batching scheduler.
 
     The Ambari-style suggested config for the "serve" service
@@ -215,6 +217,16 @@ def serving_page_plan(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
     so ``k * pages_per_replica`` may exceed ``num_pages`` when k is large
     relative to the HBM fit; ``max_replicas`` is the largest k for which
     the split stays inside the budget.
+
+    With ``prefill_replicas=p`` (and ``replicas > p``) the plan adds a
+    ``disagg`` section splitting the fleet into prefill and decode roles:
+    a prefill replica's pool turns over at *prompt* granularity — its
+    admission reserves ``ceil((prompt_len + 1) / page_size)`` pages per
+    stream instead of the prompt+generation worst case — so the same slot
+    count needs a smaller pool, and the freed pages go to the decode side
+    where generations actually accumulate. ``prompt_len`` bounds the
+    longest routed prompt (defaults to the shape's full ``seq_len`` —
+    conservative, no saving assumed).
 
     With ``tp=k`` each replica is a *shard group*: pages are logical, each
     member stores the ``1/k`` kv-head slice of every page, and params
@@ -307,6 +319,30 @@ def serving_page_plan(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
         "shard_page_bytes": shard_tok_bytes * page_size,
         "shard_pool_bytes": num_pages * page_size * shard_tok_bytes,
     }
+    # ---- prefill/decode role split (disaggregated fabric) -----------------
+    if prefill_replicas > 0:
+        if prefill_replicas >= replicas:
+            raise ValueError(
+                f"disaggregation needs at least one decode replica: "
+                f"prefill_replicas={prefill_replicas} >= "
+                f"replicas={replicas}")
+        p_len = shape.seq_len if prompt_len is None \
+            else min(prompt_len, shape.seq_len)
+        prompt_pages = -(-(p_len + 1) // page_size)
+        prefill_pool = min(slots_per_replica * prompt_pages + 1,
+                           pages_per_replica)
+        plan["disagg"] = {
+            "prefill_replicas": prefill_replicas,
+            "decode_replicas": replicas - prefill_replicas,
+            "prompt_len": p_len,
+            "prompt_pages_per_seq": prompt_pages,
+            # prompt-granularity reservation: a prefill replica's pool only
+            # ever holds prompts (+1 position for the first output token)
+            "prefill_pages_per_replica": prefill_pool,
+            "decode_pages_per_replica": pages_per_replica,
+            "prefill_pool_savings_frac": round(
+                1 - prefill_pool / max(pages_per_replica, 1), 3),
+        }
     # ---- shared-prefix capacity model (copy-on-write page cache) ----------
     # with N-way prefix sharing a sequence's *marginal* footprint is its
     # uncached suffix plus an amortised 1/N share of the prefix chain —

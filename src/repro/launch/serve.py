@@ -24,6 +24,15 @@ scheduler replicas (``--router`` picks the routing policy), and
 (``repro.autoscale.FleetController``): start at one replica, add/drain
 whole replicas with fleet queue depth.
 
+``--chunked-prefill N`` (paged only) lands each prompt in chunks of at
+most N tokens per tick, interleaved with decode ticks, instead of one
+monolithic prefill call — tokens stay byte-identical at fp32.
+``--disagg k`` (fleet only) splits the fabric into k prefill-role
+replicas and ``replicas - k`` decode-role replicas with verbatim KV-page
+handoff between them; composes with ``--chunked-prefill`` and
+``--autoscale`` (the fleet controller then scales the two roles on
+separate signals).
+
 ``--tp k`` (paged only) serves every scheduler/replica as a k-way
 tensor-parallel *shard group*: page pools and attention heads (and MoE
 experts) split k ways while tokens stay byte-identical to ``--tp 1``
@@ -157,15 +166,20 @@ def run_fleet(cfg, params, args) -> dict:
         raise SystemExit(f"{cfg.name}: use --engine static (MLA/enc-dec)")
     rng = np.random.RandomState(args.seed)
     max_seq = _max_seq(args)
-    start = 1 if args.autoscale else args.replicas
+    # a disaggregated fleet needs one live replica per role, so the
+    # autoscale floor is (disagg prefill + 1 decode) instead of 1
+    start = args.replicas if not args.autoscale \
+        else (args.disagg + 1 if args.disagg else 1)
     router = ServingRouter(cfg, params, replicas=start,
                            max_slots=args.batch, page_size=args.page_size,
                            max_seq_len=max_seq, route_policy=args.router,
-                           prefix_cache=args.prefix_cache, tp=args.tp)
+                           prefix_cache=args.prefix_cache, tp=args.tp,
+                           prefill_budget=args.chunked_prefill,
+                           disagg=args.disagg)
     ctl = None
     if args.autoscale:
         from repro.autoscale import FleetController
-        ctl = FleetController(router, min_replicas=1,
+        ctl = FleetController(router, min_replicas=start,
                               max_replicas=args.replicas, eval_interval=2)
     for i, (prompt, gen) in enumerate(make_workload(cfg, rng, args)):
         router.submit(prompt, gen, arrival_step=i // 2)
@@ -181,6 +195,7 @@ def run_fleet(cfg, params, args) -> dict:
         "replicas": args.replicas,
         "tp": args.tp,
         "router": args.router,
+        "disagg": args.disagg,
         "requests": len(done),
         "tokens_out": fleet["tokens_out"],
         "tok_per_s": round(fleet["tokens_out"] / wall, 1),
@@ -191,6 +206,11 @@ def run_fleet(cfg, params, args) -> dict:
         "reroutes": fleet["reroutes"],
         "generated": [r.out_tokens[:8] for r in done[:4]],
     }
+    if args.chunked_prefill:
+        out["chunked_prefill"] = args.chunked_prefill
+        out["prefill_chunk_tokens"] = fleet.get("prefill_chunk_tokens", 0)
+    if args.disagg:
+        out["migrations"] = router.stats.get("migrations", 0)
     out.update(_prefix_stats(fleet))
     if fleet.get("reserved_page_imbalance") is not None:
         out["reserved_page_imbalance"] = fleet["reserved_page_imbalance"]
@@ -211,7 +231,8 @@ def run_paged(cfg, params, args) -> dict:
     sched = ContinuousBatchingScheduler(
         cfg, params, max_slots=start_slots, page_size=args.page_size,
         num_pages=start_slots * n_pg + 1 if args.autoscale else None,
-        max_seq_len=max_seq, prefix_cache=args.prefix_cache, tp=args.tp)
+        max_seq_len=max_seq, prefix_cache=args.prefix_cache, tp=args.tp,
+        prefill_budget=args.chunked_prefill)
     ctl = None
     if args.autoscale:
         from repro.autoscale import AutoscaleController, CapacityBands
@@ -245,6 +266,9 @@ def run_paged(cfg, params, args) -> dict:
     }
     if args.tp > 1:
         out["shards"] = sched.shard_stats()
+    if args.chunked_prefill:
+        out["chunked_prefill"] = args.chunked_prefill
+        out["prefill_chunk_tokens"] = sched.stats["prefill_chunk_tokens"]
     out.update(_prefix_stats(sched.stats))
     if ctl is not None:
         out["autoscale"] = ctl.summary()
@@ -300,6 +324,17 @@ def main() -> None:
                     action="store_false", default=None,
                     help="disable shared-prefix admission (the no-sharing "
                     "baseline; default: on except MoE archs)")
+    ap.add_argument("--chunked-prefill", type=int, default=None,
+                    metavar="N",
+                    help="paged engine: land each prompt in chunks of at "
+                    "most N tokens per tick, interleaved with decode "
+                    "ticks (tokens stay byte-identical to monolithic "
+                    "prefill)")
+    ap.add_argument("--disagg", type=int, nargs="?", const=1, default=0,
+                    metavar="K",
+                    help="fleet only: dedicate K replicas to prefill and "
+                    "the rest to decode, with verbatim KV-page handoff "
+                    "between the roles (requires --replicas > K)")
     ap.add_argument("--autoscale", action="store_true",
                     help="paged engine: start at 1 slot and let the "
                     "autoscale control plane move capacity inside "
@@ -329,6 +364,18 @@ def main() -> None:
     if args.tp > 1 and args.engine != "paged":
         ap.error("--tp requires --engine paged (shard groups split the "
                  "paged KV pools)")
+    if args.chunked_prefill is not None:
+        if args.engine != "paged":
+            ap.error("--chunked-prefill requires --engine paged")
+        if args.chunked_prefill < 1:
+            ap.error("--chunked-prefill must be >= 1")
+    if args.disagg:
+        if args.engine != "paged" or args.replicas < 2:
+            ap.error("--disagg requires --engine paged and --replicas >= 2 "
+                     "(one replica per role at minimum)")
+        if args.disagg >= args.replicas:
+            ap.error("--disagg must leave at least one decode replica "
+                     "(--disagg < --replicas)")
 
     cfg = get_reduced(args.arch)
     params = M.init(cfg, jax.random.PRNGKey(args.seed))

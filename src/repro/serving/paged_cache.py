@@ -685,6 +685,68 @@ def extract_ssm_state(pre: Any) -> Any:
     return walk(pre)
 
 
+def extract_ssm_slot(cache: Any, slot: int) -> Any:
+    """Batch-1 snapshot of ``slot``'s SSM state sliced out of the paged
+    cache — the live analogue of ``extract_ssm_state`` (which reads a
+    prefill-produced cache). Chunked prefill resumes a mid-prompt sequential
+    scan from it, and a disaggregation handoff carries it to the adopting
+    replica. Runs eagerly (host round-trip); returns None when the arch has
+    no SSM layers."""
+    def walk(node: Any, stacked: bool) -> Any:
+        if not isinstance(node, dict):
+            return None
+        if _is_attn(node):
+            return None
+        if _is_ssm(node):
+            if stacked:
+                return {k: v[:, slot:slot + 1] for k, v in node.items()}
+            return {k: v[slot:slot + 1] for k, v in node.items()}
+        out = {k: walk(v, stacked or k == "stack") for k, v in node.items()}
+        out = {k: v for k, v in out.items() if v is not None}
+        return out or None
+    return walk(cache, False)
+
+
+def migrate_pages(src_cache: Any, dst_cache: Any, src_pages: List[int],
+                  dst_pages: List[int], tp: int = 1) -> Any:
+    """Verbatim KV-page handoff between two replicas' caches.
+
+    Copies page ``src_pages[i]`` of every attention pool leaf in
+    ``src_cache`` into page ``dst_pages[i]`` of the corresponding leaf in
+    ``dst_cache`` — all layers and (``tp > 1``) every shard's slice in one
+    call, the same atomicity contract as ``copy_page``. The two caches must
+    share layout (same arch/page_size/tp); pool *sizes* may differ — only
+    the listed page ids are touched, so a prefill replica's prompt pages
+    land bit-identically in a decode replica's pool. Partial trailing pages
+    copy whole-page: unwritten slots are zeros on both sides. SSM slot
+    state moves separately (``extract_ssm_slot`` / ``merge_ssm_slot``).
+    Runs eagerly — handoffs are per-request events between ticks.
+    """
+    assert len(src_pages) == len(dst_pages)
+    if not src_pages:
+        return dst_cache
+    src_ids = jnp.asarray(src_pages, jnp.int32)
+    dst_ids = jnp.asarray(dst_pages, jnp.int32)
+
+    def walk(snode: Any, dnode: Any, stacked: bool) -> Any:
+        if _is_attn(dnode):
+            lead = (slice(None),) * page_axis(stacked, tp)
+            out = dict(dnode)
+            for k in PAGE_LEAVES:
+                if k not in dnode:
+                    continue
+                rows = snode[k][lead + (src_ids,)]
+                out[k] = dnode[k].at[lead + (dst_ids,)].set(
+                    rows.astype(dnode[k].dtype))
+            return out
+        if _is_ssm(dnode):
+            return dnode
+        return {k: walk(snode[k], dnode[k], stacked or k == "stack")
+                for k in dnode}
+
+    return walk(src_cache, dst_cache, False)
+
+
 def ssm_slot_view(cache: Any, state: Any) -> Any:
     """Batch-1 view of the cache for sequential suffix decode: attention
     pools shared as-is (the block-table row selects pages), SSM leaves

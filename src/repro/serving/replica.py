@@ -21,7 +21,13 @@ needs to reason about a member:
   (heartbeat DEAD / spot preemption) whose unfinished streams the router
   re-prefills elsewhere. A single preempted *member* of a tp>1 group is
   survivable when a warm spare exists — ``repro.autoscale.fleet`` swaps
-  the node without failing the group.
+  the node without failing the group;
+* **role** — under disaggregation a replica is a ``prefill`` or
+  ``decode`` specialist (default ``mixed`` does both): prefill replicas
+  take every routed prompt, park completed prompts (``handoff_ready``)
+  and donate their KV pages verbatim to a decode replica (the router's
+  migration pass); ``fits`` on a prefill replica therefore checks prompt
+  pages only, while decode replicas answer for the worst case.
 """
 from __future__ import annotations
 
@@ -51,6 +57,11 @@ class ServingReplica:
         self.failed = False
 
     @property
+    def role(self) -> str:
+        """Disaggregation role ("mixed" | "prefill" | "decode")."""
+        return self.sched.role
+
+    @property
     def hostname(self) -> Optional[str]:
         """Primary (rank-0) member hostname — the fleet's stable key for
         single-node replicas; None once failed (hostnames are purged)."""
@@ -65,11 +76,14 @@ class ServingReplica:
               page_size: int = 16, num_pages: Optional[int] = None,
               max_seq_len: int = 512, prefix_cache: Optional[bool] = None,
               tp: int = 1, hostname: Optional[str] = None,
-              hostnames: Optional[Sequence[str]] = None) -> "ServingReplica":
+              hostnames: Optional[Sequence[str]] = None,
+              prefill_budget: Optional[int] = None,
+              role: str = "mixed") -> "ServingReplica":
         sched = ContinuousBatchingScheduler(
             cfg, params, max_slots=max_slots, page_size=page_size,
             num_pages=num_pages, max_seq_len=max_seq_len,
-            prefix_cache=prefix_cache, tp=tp)
+            prefix_cache=prefix_cache, tp=tp, prefill_budget=prefill_budget,
+            role=role)
         return cls(replica_id, sched, hostname=hostname, hostnames=hostnames)
 
     # -------------------------------------------------------------- state --
@@ -104,13 +118,35 @@ class ServingReplica:
         return self.sched.prefix_match_len(prompt)
 
     def fits(self, req: Request) -> bool:
-        """Could this replica *ever* admit the request (spill-over check)?"""
+        """Could this replica *ever* admit the request (spill-over check)?
+        A prefill-role replica answers for the prompt's pages only — the
+        generation worst case is the adopting decode replica's burden."""
         if req.plen + req.max_new_tokens > self.sched.max_seq_len:
             return False
         cap = self.sched.alloc.capacity
         if self.sched.capacity_hint is not None:
             cap = max(cap, self.sched.capacity_hint - 1)
+        if self.role == "prefill":
+            from repro.serving.paged_cache import pages_for_len
+            return pages_for_len(req.plen + 1, self.sched.page_size) <= cap
         return worst_case_pages(req, self.sched.page_size) <= cap
+
+    # ------------------------------------------------------------- handoff --
+    def handoff_ready(self) -> List[int]:
+        """Slots parked after prefill, awaiting KV-page migration."""
+        return self.sched.handoff_ready()
+
+    def can_adopt(self, req: Request) -> bool:
+        return self.sched.can_adopt(req)
+
+    def adopt(self, req: Request, donor: "ServingReplica",
+              donor_slot: int) -> int:
+        """Verbatim page handoff: copy the donor slot's KV pages into this
+        replica's pool, then release them on the donor."""
+        slot = self.sched.adopt(req, donor.sched, donor_slot)
+        donor.sched.surrender_slot(donor_slot)
+        req.replica = self.replica_id
+        return slot
 
     # ---------------------------------------------------------- lifecycle --
     def accept(self, req: Request) -> None:
@@ -153,11 +189,15 @@ class ServingReplica:
         for slot, req in enumerate(self.sched.slot_req):
             if req is not None:
                 lost.append(req)
+                req.prefill_pos = None    # a mid-prefill stream restarts
                 self.sched.alloc.free(self.sched.slot_pages[slot])
                 self.sched.slot_pages[slot] = []
                 self.sched.slot_req[slot] = None
                 self.sched.slot_reserve[slot] = 0
                 self.sched.slot_shared[slot] = 0
+                self.sched.slot_parked[slot] = False
+                self.sched.slot_resume_state[slot] = None
+        self.sched._prefill_fifo.clear()
         self.sched.reserved_pages = 0
         self.sched.index.clear()      # the device's cached prefixes died too
         return lost

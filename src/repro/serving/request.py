@@ -3,10 +3,17 @@
 A ``Request`` is one generation stream: a prompt, a token budget, and the
 bookkeeping both engines fill in as the stream moves through its states::
 
-    WAITING ──admit──► ACTIVE ──budget spent──► FINISHED
-      (queued; arrival     (prefilled; decoding    (finish_step recorded,
-       gate not yet due,    greedily, one token     pages freed by the
-       or no capacity)      per scheduler tick)     owning engine)
+    WAITING ──admit──► [PREFILLING] ──► ACTIVE ──budget spent──► FINISHED
+      (queued; arrival   (chunked prefill  (prefilled; decoding    (finish_step
+       gate not yet due,  only: prompt      greedily, one token     recorded, pages
+       or no capacity)    chunks land       per scheduler tick)     freed by the
+                          across ticks)                             owning engine)
+
+PREFILLING exists only under chunked prefill (``prefill_budget`` set on
+the scheduler): the request owns a slot and its prompt pages, but its
+prompt is still landing chunk by chunk — ``prefill_pos`` is the chunk
+cursor (prompt tokens whose K/V are already in the pages). Monolithic
+admission prefills in one call and never passes through the state.
 
 The dataclass lives here — not in ``scheduler.py`` — because three layers
 share it: the continuous-batching scheduler admits/decodes/evicts single
@@ -36,6 +43,7 @@ import numpy as np
 
 class RequestState(enum.Enum):
     WAITING = "waiting"
+    PREFILLING = "prefilling"
     ACTIVE = "active"
     FINISHED = "finished"
 
@@ -54,9 +62,13 @@ class Request:
     # because a shared prefix already held their K/V (0 on a miss, and
     # always 0 on the static engine, which cannot share)
     cached_tokens: int = 0
+    # chunked-prefill cursor: prompt tokens already landed in pages (None
+    # outside a chunked prefill — monolithic admission never sets it)
+    prefill_pos: Optional[int] = None
     # filled in by the fabric router (single-engine runs leave the defaults)
     replica: Optional[int] = None         # replica currently decoding this
     reroutes: int = 0                     # re-prefills after a replica loss
+    migrations: int = 0                   # verbatim KV-page handoffs (disagg)
 
     @property
     def plen(self) -> int:
@@ -71,6 +83,8 @@ class Request:
         if self.finish_step is not None or self.done:
             return RequestState.FINISHED
         if self.admit_step is not None:
+            if self.prefill_pos is not None:
+                return RequestState.PREFILLING
             return RequestState.ACTIVE
         return RequestState.WAITING
 

@@ -37,6 +37,18 @@ picks k nodes from the ``NodeDirectory`` and the fleet autoscaler
 ``ClusterLifecycle`` as it adds/removes replicas. ``fail_host`` is the
 heartbeat hook: wire ``monitor.on_dead(router.fail_host)``.
 
+**Disaggregation** (``disagg=k``): the first ``k`` replicas become
+*prefill* specialists and the rest *decode* specialists. Every prompt
+routes to a prefill replica (prefix-affinity and spillover unchanged);
+when its prefill completes the stream parks and the router's migration
+pass hands its KV pages verbatim to the least-loaded decode replica that
+can adopt it (worst-case reservation on the decode side, so an adopted
+stream can never OOM). No decode-capable target with room means the
+stream stays parked — natural backpressure on the prefill side. Migration
+keeps the same ``Request`` object, so fleet-clock latency accounting and
+the re-route machinery are untouched; a prefill replica dying mid-prompt
+falls back to the existing re-prefill path.
+
 With ``tp > 1`` every fabric member is a *shard group*: one logical
 scheduler spanning tp nodes (``provision_serving(tp=k)`` hands out
 contiguous node sets, the fleet autoscaler acquires/releases tp nodes per
@@ -49,6 +61,7 @@ index compare across members of different tp.
 from __future__ import annotations
 
 import collections
+import time
 from typing import Any, Deque, Dict, List, Optional, Sequence
 
 from repro.configs.base import ModelConfig
@@ -74,7 +87,8 @@ class ServingRouter:
                  num_pages: Optional[int] = None, max_seq_len: int = 512,
                  placement: Optional[Sequence[Any]] = None,
                  route_policy: str = "least-pages",
-                 prefix_cache: Optional[bool] = None, tp: int = 1):
+                 prefix_cache: Optional[bool] = None, tp: int = 1,
+                 prefill_budget: Optional[int] = None, disagg: int = 0):
         if not supports_paged(cfg):
             raise NotImplementedError(
                 f"{cfg.name}: the fabric routes over paged schedulers; "
@@ -83,13 +97,20 @@ class ServingRouter:
             raise ValueError("need at least one replica")
         if route_policy not in ROUTE_POLICIES:
             raise ValueError(f"route_policy must be one of {ROUTE_POLICIES}")
+        if disagg and not 1 <= disagg < replicas:
+            raise ValueError(
+                f"disagg={disagg} needs 1 <= prefill replicas < "
+                f"replicas ({replicas}) so both roles exist")
         self.cfg = cfg
         self.params = params
         # tp > 1: every fabric member is a shard group — tp nodes, one
         # logical scheduler (placement entries become hostname *lists*)
         self.replica_kw = dict(max_slots=max_slots, page_size=page_size,
                                num_pages=num_pages, max_seq_len=max_seq_len,
-                               prefix_cache=prefix_cache, tp=tp)
+                               prefix_cache=prefix_cache, tp=tp,
+                               prefill_budget=prefill_budget)
+        # prefill/decode disaggregation: True once the fleet splits roles
+        self.disagg = disagg > 0
         self.route_policy = route_policy
         self.replicas: Dict[int, ServingReplica] = {}
         self.waiting: Deque[Request] = collections.deque()
@@ -103,7 +124,11 @@ class ServingRouter:
         self._parents: Dict[int, Request] = {}
         self.stats: Dict[str, int] = {"routed": 0, "spillovers": 0,
                                       "reroutes": 0, "replicas_added": 0,
-                                      "replicas_removed": 0}
+                                      "replicas_removed": 0, "migrations": 0}
+        # per-tick per-replica step wall times (seconds), recorded only when
+        # a bench turns it on: [{replica_id: (role, dt)}, ...]
+        self.record_timing = False
+        self.tick_timings: List[Dict[int, tuple]] = []
         # counters of replicas that already left the fleet, so fleet totals
         # survive drain-remove and failure
         self._retired_stats: Dict[str, int] = {}
@@ -113,10 +138,13 @@ class ServingRouter:
         placement = list(placement or [])
         for i in range(replicas):
             spot = placement[i] if i < len(placement) else None
+            kw = {}
+            if disagg:
+                kw["role"] = "prefill" if i < disagg else "decode"
             if spot is None or isinstance(spot, str):
-                self.add_replica(hostname=spot)
+                self.add_replica(hostname=spot, **kw)
             else:
-                self.add_replica(hostnames=spot)
+                self.add_replica(hostnames=spot, **kw)
 
     # ----------------------------------------------------------- topology --
     def add_replica(self, *, hostname: Optional[str] = None,
@@ -221,11 +249,19 @@ class ServingRouter:
                arrival_step: int = 0) -> Request:
         req = make_request(self._rid, prompt, max_new_tokens, arrival_step)
         self._rid += 1
-        if not any(rep.fits(req) for rep in self.replicas.values()):
+        if not any(rep.fits(req) for rep in self.replicas.values()
+                   if rep.role != "decode"):
             raise ValueError(
                 f"request needs {req.plen + req.max_new_tokens} positions / "
                 f"{worst_case_pages(req, self.replica_kw['page_size'])} "
                 f"pages — no replica in the fleet could ever admit it")
+        if self.disagg and not any(
+                rep.fits(req) for rep in self.replicas.values()
+                if rep.role != "prefill"):
+            raise ValueError(
+                f"request needs {req.plen + req.max_new_tokens} positions "
+                "but no decode-role replica could ever adopt it after "
+                "prefill")
         self._arrival[req.rid] = arrival_step
         self.waiting.append(req)
         return req
@@ -234,6 +270,11 @@ class ServingRouter:
     def _live(self) -> List[ServingReplica]:
         return sorted((r for r in self.replicas.values() if r.live),
                       key=lambda r: r.replica_id)
+
+    def _routable(self) -> List[ServingReplica]:
+        """Live replicas new prompts may route to — decode specialists only
+        take work through the migration pass."""
+        return [r for r in self._live() if r.role != "decode"]
 
     def _candidates(self, live: List[ServingReplica],
                     req: Request) -> List[ServingReplica]:
@@ -263,7 +304,7 @@ class ServingRouter:
             if self.waiting[0].arrival_step > self.step_idx:
                 break
             req = self.waiting.popleft()
-            live = self._live()
+            live = self._routable()
             placed = False
             for i, rep in enumerate(self._candidates(live, req)):
                 if rep.fits(req):
@@ -298,17 +339,52 @@ class ServingRouter:
         req.arrival_step = self._arrival.pop(req.rid, req.arrival_step)
         self.finished.append(req)
 
+    def _migrate_ready(self) -> int:
+        """Hand parked prefilled streams to decode-capable replicas.
+
+        Donors drain oldest-parked-first; each stream goes to the live
+        non-prefill replica with the fewest outstanding pages that can
+        adopt it (free slot + full worst-case reservation). A stream with
+        no adoptable target stays parked and retries next tick — the
+        backpressure that keeps prefill replicas from outrunning decode
+        capacity."""
+        moved = 0
+        for donor in sorted(self.replicas.values(),
+                            key=lambda r: r.replica_id):
+            if donor.failed or donor.role != "prefill":
+                continue
+            for slot in donor.handoff_ready():
+                req = donor.sched.slot_req[slot]
+                targets = sorted(
+                    (r for r in self._live() if r.role != "prefill"),
+                    key=lambda r: (r.outstanding_pages, r.replica_id))
+                for t in targets:
+                    if t.can_adopt(req):
+                        t.adopt(req, donor, slot)
+                        moved += 1
+                        break
+        self.stats["migrations"] += moved
+        return moved
+
     def step(self, max_fuse: int = 16) -> List[Request]:
         """One fleet tick: route due arrivals, step every replica once,
-        collect finishes (joining re-routed continuations to their
-        originals), advance the fleet clock."""
+        migrate parked prefilled streams to decode replicas, collect
+        finishes (joining re-routed continuations to their originals),
+        advance the fleet clock."""
         self.route_due()
         done_now: List[Request] = []
+        timing: Dict[int, tuple] = {}
         for rep in sorted(self.replicas.values(),
                           key=lambda r: r.replica_id):
             if rep.failed:
                 continue
-            for req in rep.step(max_fuse=max_fuse):
+            if self.record_timing:
+                t0 = time.perf_counter()
+            stepped = rep.step(max_fuse=max_fuse)
+            if self.record_timing:
+                timing[rep.replica_id] = (rep.role,
+                                          time.perf_counter() - t0)
+            for req in stepped:
                 orig = self._parents.pop(req.rid, None)
                 if orig is not None:
                     orig.out_tokens.extend(req.out_tokens)
@@ -316,6 +392,9 @@ class ServingRouter:
                     req = orig
                 self._collect(req)
                 done_now.append(req)
+        if self.record_timing:
+            self.tick_timings.append(timing)
+        self._migrate_ready()
         if len(self.replicas) >= 2:
             live = self._live()
             if len(live) >= 2 and all(r.sched.num_active > 0 for r in live):
@@ -334,6 +413,35 @@ class ServingRouter:
                 f"router run() exhausted max_steps with "
                 f"{self.num_unfinished} unfinished requests")
         return self.finished
+
+    # ------------------------------------------------- role-split signals --
+    def live_by_role(self, role: str) -> List[ServingReplica]:
+        return [r for r in self._live() if r.role == role]
+
+    def prefill_backlog(self) -> int:
+        """Prompt tokens awaiting prefill fleet-wide: due queued prompts
+        plus every prefill-capable replica's in-flight chunk remainders —
+        the prefill-role autoscaling signal."""
+        t = sum(r.plen for r in self.waiting
+                if r.arrival_step <= self.step_idx)
+        for rep in self.replicas.values():
+            if not rep.failed and rep.role != "decode":
+                t += rep.sched.prefill_backlog
+        return t
+
+    def decode_demand(self) -> int:
+        """Streams that need (or are about to need) a decode slot: active
+        and queued streams on decode-capable replicas plus prefilled
+        streams parked for handoff — the decode-role autoscaling signal."""
+        n = 0
+        for rep in self.replicas.values():
+            if rep.failed:
+                continue
+            if rep.role == "prefill":
+                n += len(rep.handoff_ready())
+            else:
+                n += rep.num_unfinished
+        return n
 
     # ------------------------------------------------------------ metrics --
     def prefix_hit_rate(self) -> float:
@@ -367,7 +475,9 @@ class ServingRouter:
         out["fleet_ticks"] = self.step_idx
         out["live_replicas"] = len(self._live())
         for key in ("tokens_out", "decode_steps", "prefills",
-                    "prefix_hits", "cached_tokens", "cow_forks"):
+                    "prefix_hits", "cached_tokens", "cow_forks",
+                    "prefill_chunk_tokens", "migrations_in",
+                    "migrations_out"):
             out[key] = (sum(s.get(key, 0) for s in per_replica.values())
                         + self._retired_stats.get(key, 0))
         out["prefix_hit_rate"] = round(self.prefix_hit_rate(), 3)

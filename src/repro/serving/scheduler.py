@@ -39,6 +39,28 @@ requests can influence each other's routing when capacity binds — the
 late-join byte-determinism guarantee is for dense/SSM archs. See
 docs/serving.md for the API walk-through and tuning knobs.
 
+**Chunked prefill** (``prefill_budget=N``): instead of one monolithic
+prefill call that blocks every decode tick behind a long prompt, admission
+only allocates the prompt's pages and the prompt then lands in chunks of
+at most ``N`` tokens per tick, interleaved with decode ticks — the request
+sits in the PREFILLING state (``req.prefill_pos`` is the chunk cursor)
+and joins decode the tick its last chunk lands. The first chunk is a
+bucketed batch-1 prefill; later chunks ride the shared-prefix suffix
+paths (``_suffix_fn`` for dense archs, ``_seq_suffix_fn`` from the slot's
+SSM state for hybrid/MoE), so chunked output is byte-identical to
+monolithic at fp32 — the same contract the prefix cache proves. Budget is
+spent FCFS over in-flight prefills, so the oldest admitted prefill always
+advances (no starvation) and per-tick chunk tokens never exceed ``N``.
+
+**Disaggregation** (``role="prefill" | "decode"``): a prefill-role
+scheduler admits and prefills but never decodes — a completed prompt
+*parks* (``handoff_ready``) until the fabric router migrates its KV pages
+verbatim to a decode-role scheduler (``adopt`` / ``surrender_slot``,
+refcount- and prefix-index-correct on both sides). Prefill-role admission
+reserves only the prompt's pages (the decode side reserves worst-case on
+adopt), so a prefill replica's pool turns over at prompt, not
+prompt+generation, granularity.
+
 The request dataclass and its lifecycle live in ``repro.serving.request``
 (shared with the static engine and the fabric router); this module is the
 single-scheduler core only. One scheduler drives one page pool — a fleet
@@ -95,7 +117,8 @@ class ContinuousBatchingScheduler:
                  max_seq_len: int = 512,
                  prefill_buckets: Sequence[int] = DEFAULT_BUCKETS,
                  prefix_cache: Optional[bool] = None, tp: int = 1,
-                 shard_mesh=None):
+                 shard_mesh=None, prefill_budget: Optional[int] = None,
+                 role: str = "mixed"):
         if not supports_paged(cfg):
             raise NotImplementedError(
                 f"{cfg.name}: paged serving covers decoder-only non-MLA "
@@ -105,6 +128,17 @@ class ContinuousBatchingScheduler:
         self.page_size = page_size
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
+        # chunked prefill: at most this many prompt tokens land per tick
+        # (None = monolithic prefill at admission, the pre-chunking path)
+        if prefill_budget is not None and prefill_budget < 1:
+            raise ValueError("prefill_budget must be >= 1 token per tick")
+        self.prefill_budget = prefill_budget
+        # disaggregation role: "mixed" (default) prefills and decodes;
+        # "prefill" parks completed prompts for page handoff; "decode"
+        # adopts handed-off streams and only decodes
+        if role not in ("mixed", "prefill", "decode"):
+            raise ValueError(f"unknown scheduler role {role!r}")
+        self.role = role
         # tensor-parallel shard group: one logical scheduler/replica whose
         # page pools, attention heads, and MoE experts split tp ways while
         # the block table / allocator / prefix index stay one control plane
@@ -152,6 +186,13 @@ class ContinuousBatchingScheduler:
         # (net of shared prefix pages) and the shared-page count itself
         self.slot_reserve: List[int] = [0] * max_slots
         self.slot_shared: List[int] = [0] * max_slots
+        # chunked-prefill bookkeeping: SSM resume snapshot for a slot's next
+        # chunk (set by a prefix hit; None = read the slot's live state),
+        # parked flag (prefill role: done, awaiting page handoff), and the
+        # FCFS order budget is spent in (slot ids, admit order)
+        self.slot_resume_state: List[Any] = [None] * max_slots
+        self.slot_parked: List[bool] = [False] * max_slots
+        self._prefill_fifo: List[int] = []
         self.waiting: Deque[Request] = collections.deque()
         self.finished: List[Request] = []
         self._admit_done: List[Request] = []
@@ -167,7 +208,10 @@ class ContinuousBatchingScheduler:
                                       "prefills": 0, "peak_pages": 0,
                                       "admit_blocked": 0, "resizes": 0,
                                       "prefix_hits": 0, "prefix_misses": 0,
-                                      "cached_tokens": 0, "cow_forks": 0}
+                                      "cached_tokens": 0, "cow_forks": 0,
+                                      "prefill_chunk_tokens": 0,
+                                      "migrations_in": 0,
+                                      "migrations_out": 0}
 
         # donate the cache: pools are sized to fill HBM, so the step must
         # update them in place rather than double-buffer (cf. trainer.py)
@@ -318,7 +362,11 @@ class ContinuousBatchingScheduler:
         if total > self.max_seq_len:
             raise ValueError(f"request needs {total} positions > "
                              f"max_seq_len {self.max_seq_len}")
-        worst = PC.pages_for_len(total, self.page_size)
+        # a prefill-role scheduler only ever holds the prompt (+1 for the
+        # first output's logits); generation pages are the adopter's burden
+        worst = PC.pages_for_len(
+            req.plen + 1 if self.role == "prefill" else total,
+            self.page_size)
         cap = self.alloc.capacity
         if self.capacity_hint is not None:
             cap = max(cap, self.capacity_hint - 1)
@@ -345,9 +393,12 @@ class ContinuousBatchingScheduler:
             hit = self._prefix_lookup(req)
             # worst-case reservation charges only the uncached suffix: the
             # shared full pages are already allocated and survive (via their
-            # refcount) until this stream releases them
-            need = PC.pages_for_len(req.plen + req.max_new_tokens,
-                                    self.page_size)
+            # refcount) until this stream releases them. A prefill-role
+            # scheduler reserves prompt pages only — generation pages are
+            # reserved by whichever decode scheduler adopts the stream.
+            need = PC.pages_for_len(
+                req.plen + 1 if self.role == "prefill"
+                else req.plen + req.max_new_tokens, self.page_size)
             if hit is not None:
                 need -= len(hit.full_pages)
             if self.alloc.num_free - (self.reserved_pages
@@ -355,7 +406,10 @@ class ContinuousBatchingScheduler:
                 self.stats["admit_blocked"] += 1
                 break                       # reservation would overcommit
             self.waiting.popleft()
-            self._admit(req, free[0], need, hit)
+            if self.prefill_budget is not None:
+                self._admit_chunked(req, free[0], need, hit)
+            else:
+                self._admit(req, free[0], need, hit)
 
     def _prefix_lookup(self, req: Request):
         if not self.prefix_cache:
@@ -434,6 +488,8 @@ class ContinuousBatchingScheduler:
         if req.done:                        # max_new_tokens == 1
             self._finish(slot)
             self._admit_done.append(req)
+        elif self.role == "prefill":
+            self.slot_parked[slot] = True   # awaiting page handoff
 
     def _admit_full(self, req: Request, slot: int):
         """Prefix-cache miss (or caching off): full bucketed prefill."""
@@ -497,6 +553,229 @@ class ContinuousBatchingScheduler:
         self.stats["cached_tokens"] += L
         return int(first), pages, len(shared), row
 
+    # ------------------------------------------------------ chunked prefill --
+    def _admit_chunked(self, req: Request, slot: int, reserve: int,
+                       hit=None) -> None:
+        """Allocate the prompt's pages and enter PREFILLING — no model call.
+
+        The prompt lands chunk by chunk in ``_advance_prefills``; until the
+        last chunk the slot is masked out of decode (seq_lens 0, sink block
+        row), indistinguishable from an empty slot. A prefix hit shares /
+        COW-forks pages exactly like monolithic admission, and the chunk
+        cursor starts at the hit length.
+        """
+        plen = req.plen
+        n_own = PC.pages_for_len(plen + 1, self.page_size)
+        if hit is None:
+            pages = self.alloc.alloc(n_own, owner=req.rid)
+            shared = 0
+            start = 0
+            self.slot_resume_state[slot] = None
+            if self.prefix_cache:
+                self.stats["prefix_misses"] += 1
+        else:
+            shared_pages = list(hit.full_pages)
+            self.alloc.share(shared_pages)
+            own = self.alloc.alloc(n_own - len(shared_pages), owner=req.rid)
+            if hit.tail_len:
+                self.cache = self._cow_fn(self.cache, hit.tail_page, own[0])
+                self.stats["cow_forks"] += 1
+            pages = shared_pages + own
+            shared = len(shared_pages)
+            start = hit.length
+            self.slot_resume_state[slot] = hit.state
+            req.cached_tokens = start
+            self.stats["prefix_hits"] += 1
+            self.stats["cached_tokens"] += start
+        row = np.full((self.n_pg,), PC.SINK_PAGE, np.int32)
+        row[:len(pages)] = pages
+        self.reserved_pages += reserve
+        self.block_table[slot] = row
+        self.seq_lens[slot] = 0             # masked until prefill completes
+        self.last_tokens[slot, 0] = 0
+        self.slot_req[slot] = req
+        self.slot_pages[slot] = pages
+        self.slot_reserve[slot] = reserve
+        self.slot_shared[slot] = shared
+        req.admit_step = self.step_idx
+        req.prefill_pos = start
+        self._prefill_fifo.append(slot)
+
+    def _advance_prefills(self) -> None:
+        """Spend this tick's chunk budget FCFS over in-flight prefills.
+
+        The fifo head (oldest admitted prefill) is funded first, so it
+        always advances by at least one token — no admitted prefill can
+        starve — and total chunk tokens per tick never exceed the budget.
+        """
+        budget = self.prefill_budget
+        for slot in list(self._prefill_fifo):
+            if budget <= 0:
+                break
+            req = self.slot_req[slot]
+            pos = req.prefill_pos
+            c = min(budget, req.plen - pos)
+            budget -= c
+            self._prefill_chunk(slot, req, pos, c)
+            self.stats["prefill_chunk_tokens"] += c
+
+    def _prefill_chunk(self, slot: int, req: Request, pos: int,
+                       c: int) -> None:
+        """Land ``c`` prompt tokens at cursor ``pos`` into the slot's pages.
+
+        ``pos == 0`` runs a bucketed batch-1 prefill of the first chunk
+        (which also writes the SSM slot state at ``c``); later chunks are
+        suffix continuations — the dense batched-rows path or, for
+        hybrid/MoE archs, the sequential scan resumed from the slot's live
+        SSM state (or the prefix hit's snapshot for the first post-hit
+        chunk). The last chunk's logits yield the first output token,
+        exactly where monolithic prefill reads them.
+        """
+        row = self.block_table[slot]
+        chunk = np.asarray(req.prompt[pos:pos + c], np.int32)
+        if pos == 0:
+            n = self._bucket(c)
+            tokens = np.zeros((1, n), np.int32)
+            tokens[0, :c] = chunk
+            tok, pre = self._prefill_fn(n)(self.params, jnp.asarray(tokens),
+                                           jnp.asarray(c, jnp.int32))
+            self.cache = self._insert_fn(n)(self.cache, pre,
+                                            jnp.asarray(row),
+                                            jnp.asarray(slot, jnp.int32),
+                                            jnp.asarray(c, jnp.int32))
+        elif self.exact_prefill:
+            state = self.slot_resume_state[slot]
+            if state is None and self._has_ssm:
+                state = PC.extract_ssm_slot(self.cache, slot)
+            tok, self.cache = self._seq_suffix_fn(c)(
+                self.params, self.cache, state, jnp.asarray(chunk),
+                jnp.asarray(pos, jnp.int32), jnp.asarray(row),
+                jnp.asarray(slot, jnp.int32))
+        else:
+            n = self._bucket(c)
+            toks = np.zeros((n,), np.int32)
+            toks[:c] = chunk
+            tok, self.cache = self._suffix_fn(n)(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(pos, jnp.int32), jnp.asarray(c, jnp.int32),
+                jnp.asarray(row))
+        if pos + c < req.plen:
+            req.prefill_pos = pos + c
+            if self._has_ssm:
+                # the live slot state is NOT safe to resume from: decode
+                # ticks for other slots step every slot's SSM recurrence —
+                # including this masked one (KV writes land on the sink
+                # page, but SSM state lives per slot, not per page). Carry
+                # the authoritative post-chunk state host-side and resume
+                # the next chunk from the snapshot.
+                self.slot_resume_state[slot] = PC.extract_ssm_slot(
+                    self.cache, slot)
+            return
+        # ---- last chunk: the request leaves PREFILLING this tick --------
+        self._prefill_fifo.remove(slot)
+        self.slot_resume_state[slot] = None
+        req.prefill_pos = None
+        self.seq_lens[slot] = req.plen
+        first = int(tok)
+        self.last_tokens[slot, 0] = first
+        req.out_tokens.append(first)
+        self.stats["prefills"] += 1
+        self.stats["tokens_out"] += 1
+        if self.prefix_cache:
+            state = (PC.extract_ssm_slot(self.cache, slot)
+                     if self._has_ssm else None)
+            self.index.insert(req.prompt, self.slot_pages[slot], state=state)
+        if req.done:                        # max_new_tokens == 1
+            self._finish(slot)
+            self._admit_done.append(req)
+        elif self.role == "prefill":
+            self.slot_parked[slot] = True   # awaiting page handoff
+
+    # ------------------------------------------------- disaggregation hand --
+    def handoff_ready(self) -> List[int]:
+        """Slots parked after prefill, awaiting page migration (admit
+        order — the router drains the oldest first)."""
+        return [s for s in range(self.max_slots) if self.slot_parked[s]]
+
+    def can_adopt(self, req: Request) -> bool:
+        """Room for a migrated stream: a free slot plus the worst-case
+        reservation the stream's remaining generation needs."""
+        if not self._free_slots():
+            return False
+        need = PC.pages_for_len(req.plen + req.max_new_tokens,
+                                self.page_size)
+        return (self.alloc.num_free
+                - (self.reserved_pages - self.pages_in_use) >= need)
+
+    def adopt(self, req: Request, donor: "ContinuousBatchingScheduler",
+              donor_slot: int) -> int:
+        """Adopt a prefilled stream from ``donor``: copy its KV pages
+        verbatim into freshly allocated pages here (``PC.migrate_pages`` —
+        every layer, every shard slice, one call), carry the SSM slot state
+        across, and seat the request in a free slot with the full
+        worst-case reservation. The caller must still
+        ``donor.surrender_slot`` to release the source pages. Returns the
+        adopting slot."""
+        assert self.can_adopt(req)
+        slot = self._free_slots()[0]
+        src_pages = donor.slot_pages[donor_slot]
+        need = PC.pages_for_len(req.plen + req.max_new_tokens,
+                                self.page_size)
+        pages = self.alloc.alloc(len(src_pages), owner=req.rid)
+        self.cache = PC.migrate_pages(donor.cache, self.cache, src_pages,
+                                      pages, tp=self.tp)
+        state = None
+        if self._has_ssm:
+            state = PC.extract_ssm_slot(donor.cache, donor_slot)
+            self.cache = PC.merge_ssm_slot(
+                self.cache, PC.ssm_slot_view(self.cache, state), slot)
+        row = np.full((self.n_pg,), PC.SINK_PAGE, np.int32)
+        row[:len(pages)] = pages
+        self.reserved_pages += need
+        self.block_table[slot] = row
+        self.seq_lens[slot] = req.plen
+        self.last_tokens[slot, 0] = int(req.out_tokens[-1])
+        self.slot_req[slot] = req
+        self.slot_pages[slot] = list(pages)
+        self.slot_reserve[slot] = need
+        self.slot_shared[slot] = 0
+        if self.prefix_cache:
+            self.index.insert(req.prompt, pages, state=state)
+        req.migrations += 1
+        self.stats["migrations_in"] += 1
+        return slot
+
+    def surrender_slot(self, slot: int) -> Request:
+        """Release a handed-off slot on the donor side: free its pages
+        (refcount-correct — shared prefix pages survive for their other
+        owners, and ``on_free`` drops any index entry whose last page
+        owner this was), drop the reservation, clear the slot. The request
+        object itself lives on at the adopter; no finish is recorded."""
+        req = self.slot_req[slot]
+        self.alloc.free(self.slot_pages[slot])
+        self.reserved_pages -= self.slot_reserve[slot]
+        self.slot_reserve[slot] = 0
+        self.slot_shared[slot] = 0
+        self.slot_pages[slot] = []
+        self.slot_req[slot] = None
+        self.block_table[slot] = PC.SINK_PAGE
+        self.seq_lens[slot] = 0
+        self.last_tokens[slot, 0] = 0
+        self.slot_parked[slot] = False
+        self.slot_resume_state[slot] = None
+        self.stats["migrations_out"] += 1
+        return req
+
+    @property
+    def prefill_backlog(self) -> int:
+        """Prompt tokens not yet landed: due queued prompts plus in-flight
+        chunk remainders — the prefill-role autoscaling signal."""
+        t = sum(r.plen for r in self.waiting
+                if r.arrival_step <= self.step_idx)
+        t += sum(r.plen - r.prefill_pos for r in self.slot_req
+                 if r is not None and r.prefill_pos is not None)
+        return t
+
     # -------------------------------------------------------------- finish --
     def _finish(self, slot: int) -> None:
         req = self.slot_req[slot]
@@ -510,25 +789,35 @@ class ContinuousBatchingScheduler:
         self.block_table[slot] = PC.SINK_PAGE
         self.seq_lens[slot] = 0
         self.last_tokens[slot, 0] = 0
+        self.slot_parked[slot] = False
+        self.slot_resume_state[slot] = None
+        if slot in self._prefill_fifo:
+            self._prefill_fifo.remove(slot)
         self.finished.append(req)
 
     def _grow_pages(self, k: int = 1) -> None:
         """Ensure each active slot owns the pages its next ``k`` tokens land
         in (admission reserved them, so allocation cannot fail here)."""
         for slot, req in enumerate(self.slot_req):
-            if req is None:
-                continue
+            if req is None or req.prefill_pos is not None \
+                    or self.slot_parked[slot]:
+                continue                    # not decoding this tick
             needed = (int(self.seq_lens[slot]) + k - 1) // self.page_size + 1
             while len(self.slot_pages[slot]) < needed:
                 new = self.alloc.alloc(1, owner=req.rid)[0]
                 self.block_table[slot, len(self.slot_pages[slot])] = new
                 self.slot_pages[slot].append(new)
 
-    def _fuse_k(self, max_fuse: int) -> int:
+    def _fuse_k(self, max_fuse: int,
+                decoding: Optional[List[int]] = None) -> int:
         """Largest tick count that changes nothing mid-scan: bounded by the
-        earliest finish among active requests and the next future arrival."""
-        k = min(r.max_new_tokens - len(r.out_tokens)
-                for r in self.slot_req if r is not None)
+        earliest finish among decoding requests and the next future
+        arrival."""
+        if decoding is None:
+            reqs = [r for r in self.slot_req if r is not None]
+        else:
+            reqs = [self.slot_req[i] for i in decoding]
+        k = min(r.max_new_tokens - len(r.out_tokens) for r in reqs)
         future = [r.arrival_step - self.step_idx for r in self.waiting
                   if r.arrival_step > self.step_idx]
         if future:
@@ -587,6 +876,8 @@ class ContinuousBatchingScheduler:
         self.slot_pages.extend([] for _ in range(pad))
         self.slot_reserve.extend([0] * pad)
         self.slot_shared.extend([0] * pad)
+        self.slot_resume_state.extend([None] * pad)
+        self.slot_parked.extend([False] * pad)
         self.cache = PC.resize_cache_slots(self.cache, new)
         self.max_slots = new
 
@@ -601,6 +892,8 @@ class ContinuousBatchingScheduler:
             del self.slot_pages[n:]
             del self.slot_reserve[n:]
             del self.slot_shared[n:]
+            del self.slot_resume_state[n:]
+            del self.slot_parked[n:]
             self.cache = PC.resize_cache_slots(self.cache, n)
             self.max_slots = n
         if self.alloc.shrink_ready():
@@ -636,9 +929,19 @@ class ContinuousBatchingScheduler:
         """
         self._settle_resize()
         self._try_admit()
+        if self.prefill_budget is not None and self._prefill_fifo:
+            self._advance_prefills()
         done_now: List[Request] = self._admit_done
         self._admit_done = []
-        if not self.num_active:
+        # slots still landing chunks (PREFILLING) or parked for handoff sit
+        # out of decode: masked below, they look exactly like empty slots
+        decoding = [i for i, r in enumerate(self.slot_req)
+                    if r is not None and r.prefill_pos is None
+                    and not self.slot_parked[i]]
+        if not decoding:
+            if self.num_active:             # prefill-only / parked-only tick
+                self.step_idx += 1
+                return done_now
             arrivals = [r.arrival_step for r in self.waiting]
             if arrivals and min(arrivals) > self.step_idx:
                 # idle gap: skip toward the next arrival instead of spinning
@@ -648,20 +951,30 @@ class ContinuousBatchingScheduler:
             else:
                 self.step_idx += 1
             return done_now
-        k = self._fuse_k(max_fuse)
+        k = self._fuse_k(max_fuse, decoding)
+        if self._prefill_fifo:
+            k = 1                           # chunks land between single ticks
         k = 1 << (k.bit_length() - 1)       # pow2 buckets bound compiles
         self._grow_pages(k)
         self.stats["peak_pages"] = max(self.stats["peak_pages"],
                                        self.alloc.num_allocated)
+        toks, lens, bt = self.last_tokens, self.seq_lens, self.block_table
+        if len(decoding) < self.num_active:
+            dec = set(decoding)
+            toks, lens, bt = toks.copy(), lens.copy(), bt.copy()
+            for i, r in enumerate(self.slot_req):
+                if r is not None and i not in dec:
+                    toks[i, 0] = 0          # identical to an empty slot: the
+                    lens[i] = 0             # garbage token lands on the sink
+                    bt[i] = PC.SINK_PAGE    # page, masked out of attention
         outs, self.cache = self._decode_fn(
-            self.params, self.cache, jnp.asarray(self.last_tokens),
-            jnp.asarray(self.seq_lens), jnp.asarray(self.block_table), k=k)
+            self.params, self.cache, jnp.asarray(toks),
+            jnp.asarray(lens), jnp.asarray(bt), k=k)
         outs = np.asarray(outs)             # (k, max_slots)
         self.stats["decode_steps"] += k
         self.step_idx += k                  # before _finish: finish_step must
-        for slot, req in enumerate(self.slot_req):  # not depend on max_fuse
-            if req is None:
-                continue
+        for slot in decoding:               # not depend on max_fuse
+            req = self.slot_req[slot]
             req.out_tokens.extend(int(t) for t in outs[:, slot])
             self.stats["tokens_out"] += k
             self.last_tokens[slot, 0] = int(outs[-1, slot])

@@ -248,6 +248,42 @@ def check_shard_group_paged_decode():
     print("PASS shard_group_paged_decode")
 
 
+def check_chunked_prefill_tp2():
+    """Chunked prefill composes with a tp=2 shard group under real
+    shard_map: per-tick chunk budgets drive the bucketed prefill and
+    suffix programs on head-sliced per-shard pools, one control plane —
+    tokens match both single-device monolithic serving and the
+    in-program unrolled-loop tp=2 path."""
+    import dataclasses
+
+    from repro.serving.scheduler import ContinuousBatchingScheduler
+
+    cfg = dataclasses.replace(REDUCED["qwen3-32b"], dtype="float32")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    mesh = make_mesh_for(4, 2)              # ("data", "model"): model axis 2
+    rng = np.random.RandomState(1)
+    trace = [(rng.randint(0, cfg.vocab_size, size=p).astype(np.int32), g)
+             for p, g in ((13, 3), (21, 4), (6, 3))]
+
+    def serve(tp, budget, shard_mesh=None):
+        s = ContinuousBatchingScheduler(
+            cfg, params, max_slots=2, page_size=8, max_seq_len=48,
+            prefix_cache=False, tp=tp, shard_mesh=shard_mesh,
+            prefill_budget=budget)
+        reqs = [s.submit(p, g, arrival_step=i)
+                for i, (p, g) in enumerate(trace)]
+        s.run()
+        assert s.alloc.num_allocated == 0 and s.reserved_pages == 0
+        return [list(r.out_tokens) for r in reqs]
+
+    want = serve(1, None)
+    assert serve(1, 4) == want              # chunked == monolithic, tp=1
+    assert serve(2, 4) == want              # + tp=2 unrolled loop
+    with mesh:
+        assert serve(2, 4, shard_mesh=mesh) == want   # + real shard_map
+    print("PASS chunked_prefill_tp2")
+
+
 if __name__ == "__main__":
     checks = {name[len("check_"):]: fn
               for name, fn in sorted(globals().items())

@@ -27,6 +27,7 @@ and asserts after every step that per-shard free/allocated counts stay
 equal across shards and that an atomic COW (``copy_page`` copies every
 shard's slice in one call) leaves no shard holding stale page contents.
 """
+import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
@@ -34,7 +35,8 @@ from hypothesis import settings, strategies as st
 from hypothesis.stateful import (RuleBasedStateMachine, invariant,
                                  precondition, rule)
 
-from repro.serving.paged_cache import SINK_PAGE, PageAllocator
+from repro.serving.paged_cache import (SINK_PAGE, PageAllocator, PrefixIndex,
+                                       pages_for_len)
 
 
 class AllocatorMachine(RuleBasedStateMachine):
@@ -276,3 +278,160 @@ TestShardedPoolProps = ShardedPoolMachine.TestCase
 TestShardedPoolProps.settings = settings(max_examples=50,
                                          stateful_step_count=40,
                                          deadline=None)
+
+
+class MigrationMachine(RuleBasedStateMachine):
+    """Page migration between two pools (PR 6's disaggregation handoff).
+
+    Two independent allocator+prefix-index pairs model a prefill-role and a
+    decode-role replica. Streams admit on the prefill pool (optionally
+    sharing an earlier stream's pages, the prefix-hit path), migrate —
+    alloc on the decode side, free on the prefill side, exactly the
+    adopt-then-surrender order the scheduler uses — and finish wherever
+    they live. After every step:
+
+    * refcounts are conserved per pool: each allocator's ledger equals the
+      refs implied by the streams currently resident in that pool;
+    * a stream's pages live in exactly one pool — migration leaves nothing
+      behind and nothing half-moved;
+    * no live prefix-index entry references a migrated-away (freed) page:
+      the ``on_free`` hook must kill the donor's entries the moment the
+      handoff releases its pages, or a later admission would share pages
+      whose contents left the pool.
+    """
+
+    PAGE = 4
+    POOL = 16
+
+    def __init__(self):
+        super().__init__()
+        self.pools = {}
+        self.index = {}
+        for side in ("prefill", "decode"):
+            self.pools[side] = PageAllocator(self.POOL)
+            self.index[side] = PrefixIndex(self.PAGE)
+            self.pools[side].on_free = self.index[side].invalidate_page
+        self.streams = {}     # sid -> {"side", "pages", "prompt"}
+        self.refs = {"prefill": {}, "decode": {}}   # shadow ledgers
+        self.sid = 0
+
+    def _new_prompt(self, plen):
+        # distinct prompts per stream: accidental index hits would make the
+        # shadow ledger ambiguous without buying the rules anything
+        p = np.full((plen,), self.sid, np.int32)
+        p[::2] = np.arange(0, plen, 2, dtype=np.int32)
+        return p
+
+    # ------------------------------------------------------------- rules --
+    @rule(plen=st.integers(min_value=4, max_value=20))
+    def admit(self, plen):
+        alloc = self.pools["prefill"]
+        n = pages_for_len(plen + 1, self.PAGE)
+        if not alloc.can_alloc(n):
+            return
+        prompt = self._new_prompt(plen)
+        pages = alloc.alloc(n, owner=self.sid)
+        self.index["prefill"].insert(prompt, pages)
+        self.streams[self.sid] = {"side": "prefill", "pages": pages,
+                                  "prompt": prompt}
+        for p in pages:
+            self.refs["prefill"][p] = self.refs["prefill"].get(p, 0) + 1
+        self.sid += 1
+
+    @precondition(lambda self: any(s["side"] == "prefill"
+                                   for s in self.streams.values()))
+    @rule(data=st.data())
+    def admit_shared(self, data):
+        """A prefix hit on the prefill side: the new stream shares an
+        earlier resident's pages (refcount++), no fresh allocation."""
+        donors = sorted(k for k, s in self.streams.items()
+                        if s["side"] == "prefill")
+        donor = self.streams[data.draw(st.sampled_from(donors),
+                                       label="donor")]
+        pages = list(donor["pages"])
+        self.pools["prefill"].share(pages)
+        self.streams[self.sid] = {"side": "prefill", "pages": pages,
+                                  "prompt": donor["prompt"]}
+        for p in pages:
+            self.refs["prefill"][p] += 1
+        self.sid += 1
+
+    @precondition(lambda self: any(s["side"] == "prefill"
+                                   for s in self.streams.values()))
+    @rule(data=st.data())
+    def migrate(self, data):
+        """Handoff: adopt (alloc + index on the decode side) before
+        surrender (free on the prefill side) — the scheduler's order, so
+        the pages being copied can never be recycled mid-copy."""
+        sids = sorted(k for k, s in self.streams.items()
+                      if s["side"] == "prefill")
+        sid = data.draw(st.sampled_from(sids), label="migrate")
+        stream = self.streams[sid]
+        src = stream["pages"]
+        if not self.pools["decode"].can_alloc(len(src)):
+            return
+        dst = self.pools["decode"].alloc(len(src), owner=sid)
+        self.index["decode"].insert(stream["prompt"], dst)
+        for p in dst:
+            self.refs["decode"][p] = self.refs["decode"].get(p, 0) + 1
+        self.pools["prefill"].free(src)
+        for p in src:
+            self.refs["prefill"][p] -= 1
+            if not self.refs["prefill"][p]:
+                del self.refs["prefill"][p]
+        stream["side"], stream["pages"] = "decode", dst
+
+    @precondition(lambda self: self.streams)
+    @rule(data=st.data())
+    def finish(self, data):
+        sid = data.draw(st.sampled_from(sorted(self.streams)),
+                        label="finish")
+        stream = self.streams.pop(sid)
+        side = stream["side"]
+        self.pools[side].free(stream["pages"])
+        for p in stream["pages"]:
+            self.refs[side][p] -= 1
+            if not self.refs[side][p]:
+                del self.refs[side][p]
+
+    # -------------------------------------------------------- invariants --
+    @invariant()
+    def refcounts_conserved(self):
+        for side in ("prefill", "decode"):
+            assert dict(self.pools[side]._ref) == self.refs[side], \
+                f"{side} pool ledger drifted from resident streams"
+
+    @invariant()
+    def one_pool_per_stream(self):
+        """A stream is wholly resident in one pool: every page it holds is
+        live there, and the total pages the two ledgers carry equal the
+        pages reachable from streams — nothing orphaned by a migration."""
+        for sid, s in self.streams.items():
+            alloc = self.pools[s["side"]]
+            for p in s["pages"]:
+                assert alloc.ref(p) > 0, \
+                    f"stream {sid} holds page {p} not live in its pool"
+        for side in ("prefill", "decode"):
+            reachable = set()
+            for s in self.streams.values():
+                if s["side"] == side:
+                    reachable.update(s["pages"])
+            assert set(self.refs[side]) == reachable, \
+                f"{side} pool holds pages no resident stream reaches"
+
+    @invariant()
+    def index_never_points_at_migrated_pages(self):
+        for side in ("prefill", "decode"):
+            idx, alloc = self.index[side], self.pools[side]
+            for entries in idx._by_page.values():
+                for e in entries:
+                    if e.dead:
+                        continue
+                    assert all(alloc.ref(p) > 0 for p in e.pages), \
+                        f"live {side} index entry references freed pages"
+
+
+TestMigrationProps = MigrationMachine.TestCase
+TestMigrationProps.settings = settings(max_examples=50,
+                                       stateful_step_count=40,
+                                       deadline=None)

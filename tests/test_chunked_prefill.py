@@ -1,0 +1,207 @@
+"""Chunked prefill + prefill/decode disaggregation: byte-identity sweep.
+
+The determinism contract (docs/serving.md): splitting a prompt into
+page-sized chunks interleaved with decode ticks, and handing the prefilled
+KV pages from a prefill-role replica to a decode-role replica, are pure
+*scheduling* changes — at fp32 every serving configuration must emit
+exactly the tokens monolithic colocated serving emits. The sweep covers
+the three cache families (dense attention / hybrid attention+SSM / pure
+MoE), chunking composed with the COW prefix cache, and the failure path:
+a replica preempted mid-chunk restarts its streams elsewhere with
+identical tokens.
+
+MoE archs run with non-binding expert capacity (capacity_factor =
+E / top_k): capacity couples tokens through their grouping, which any
+re-chunking legitimately changes — the same caveat as the prefix cache
+and the fabric's re-prefill (see tests/test_prefix_cache.py).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import REDUCED
+from repro.models import model as M
+from repro.serving.router import ServingRouter
+from repro.serving.scheduler import ContinuousBatchingScheduler
+
+ARCH_SWEEP = ("qwen3-32b", "jamba-v0.1-52b", "qwen2-moe-a2.7b")
+
+
+def _fp32(arch):
+    cfg = dataclasses.replace(REDUCED[arch], dtype="float32")
+    if cfg.n_routed_experts:
+        cfg = dataclasses.replace(
+            cfg, moe_capacity_factor=float(cfg.n_routed_experts)
+            / cfg.moe_top_k)
+    return cfg
+
+
+_PARAMS = {}
+
+
+def _params(arch):
+    if arch not in _PARAMS:
+        cfg = _fp32(arch)
+        _PARAMS[arch] = (cfg, M.init(cfg, jax.random.PRNGKey(0)))
+    return _PARAMS[arch]
+
+
+def _trace(cfg, seed, n=4, p_lo=3, p_hi=26, g_hi=6):
+    rng = np.random.RandomState(seed)
+    out = []
+    for _ in range(n):
+        plen = int(rng.randint(p_lo, p_hi + 1))
+        gen = int(rng.randint(2, g_hi + 1))
+        out.append((rng.randint(0, cfg.vocab_size, size=plen
+                                ).astype(np.int32), gen))
+    return out
+
+
+def _serve_sched(cfg, params, trace, *, budget=None, prefix_cache=False,
+                 slots=3, page_size=8, max_seq=64, arrivals=None):
+    s = ContinuousBatchingScheduler(
+        cfg, params, max_slots=slots, page_size=page_size,
+        max_seq_len=max_seq, prefix_cache=prefix_cache,
+        prefill_budget=budget)
+    reqs = [s.submit(p, g, arrival_step=arrivals[i] if arrivals else i // 2)
+            for i, (p, g) in enumerate(trace)]
+    s.run()
+    return s, [list(r.out_tokens) for r in reqs]
+
+
+def _serve_fleet(cfg, params, trace, *, budget=None, disagg=0, replicas=2,
+                 slots=3, page_size=8, max_seq=64):
+    r = ServingRouter(cfg, params, replicas=replicas, max_slots=slots,
+                      page_size=page_size, max_seq_len=max_seq,
+                      prefix_cache=False, prefill_budget=budget,
+                      disagg=disagg)
+    reqs = [r.submit(p, g, arrival_step=i // 2)
+            for i, (p, g) in enumerate(trace)]
+    r.run()
+    return r, [list(q.out_tokens) for q in reqs]
+
+
+# ------------------------------------------------ chunked == monolithic --
+
+@pytest.mark.parametrize("arch", ARCH_SWEEP)
+def test_chunked_prefill_token_identity(arch):
+    """Acceptance core: any chunk budget emits monolithic's exact tokens.
+
+    Budget 4 forces many mid-prompt chunks (first chunk via the prefill
+    kernel, later ones via the suffix paths); a budget larger than every
+    prompt degenerates to whole-prompt chunks and must *also* match."""
+    cfg, params = _params(arch)
+    trace = _trace(cfg, seed=0)
+    _, base = _serve_sched(cfg, params, trace)
+    budgets = (4, 64) if arch == "qwen3-32b" else (4,)
+    for budget in budgets:
+        s, toks = _serve_sched(cfg, params, trace, budget=budget)
+        assert toks == base, f"budget {budget} changed tokens"
+        assert s.stats["prefill_chunk_tokens"] == sum(
+            len(p) for p, _ in trace)
+        assert s.reserved_pages == 0 and s.alloc.num_allocated == 0
+
+
+def test_chunked_composes_with_prefix_cache():
+    """A chunked admission that hits the COW prefix cache starts its chunk
+    cursor at the hit length — tokens identical, cached pages shared."""
+    cfg, params = _params("qwen3-32b")
+    rng = np.random.RandomState(7)
+    persona = rng.randint(0, cfg.vocab_size, size=18).astype(np.int32)
+    trace = [(np.concatenate([persona, rng.randint(0, cfg.vocab_size,
+                                                   size=3 + u)]).astype(
+                  np.int32), 5) for u in range(3)]
+    # followers arrive after the leader's last chunk lands (a chunked
+    # admission indexes its pages only once the whole prompt is in)
+    arrivals = [0, 8, 10]
+    _, base = _serve_sched(cfg, params, trace, arrivals=arrivals)
+    s, toks = _serve_sched(cfg, params, trace, budget=4, prefix_cache=True,
+                           arrivals=arrivals)
+    assert toks == base
+    assert s.stats["prefix_hits"] >= 2
+    # followers skipped the persona: fewer chunk tokens than total prompt
+    assert s.stats["prefill_chunk_tokens"] < sum(len(p) for p, _ in trace)
+
+
+# ------------------------------------------- disaggregated == colocated --
+
+@pytest.mark.parametrize("arch", ARCH_SWEEP)
+def test_disagg_token_identity(arch):
+    """KV-page handoff is verbatim for every cache family: dense paged KV,
+    hybrid KV + SSM slot state, MoE layers — the adopting decode replica
+    continues each stream byte-identically to colocated serving."""
+    cfg, params = _params(arch)
+    trace = _trace(cfg, seed=1)
+    _, base = _serve_fleet(cfg, params, trace)
+    r, toks = _serve_fleet(cfg, params, trace, disagg=1)
+    assert toks == base
+    assert r.stats["migrations"] == len(trace)   # every stream handed off
+    for rep in r.replicas.values():
+        assert rep.sched.alloc.num_allocated == 0
+        assert rep.sched.reserved_pages == 0
+
+
+def test_disagg_composes_with_chunked():
+    cfg, params = _params("qwen3-32b")
+    trace = _trace(cfg, seed=2, n=5)
+    _, base = _serve_fleet(cfg, params, trace)
+    r, toks = _serve_fleet(cfg, params, trace, budget=4, disagg=1)
+    assert toks == base
+    assert r.stats["migrations"] == len(trace)
+    fleet = r.fleet_stats()
+    assert fleet["prefill_chunk_tokens"] == sum(len(p) for p, _ in trace)
+
+
+# --------------------------------------------------- mid-prefill failure --
+
+def test_mid_prefill_preemption_token_identity():
+    """A replica preempted while a prompt is mid-chunk: the stream restarts
+    (prefill from scratch) on a surviving replica with identical tokens —
+    chunk cursors hold no state the fleet cannot rebuild."""
+    cfg, params = _params("qwen3-32b")
+    trace = _trace(cfg, seed=3, n=4, p_lo=12, p_hi=24)
+    _, base = _serve_fleet(cfg, params, trace)
+
+    r = ServingRouter(cfg, params, replicas=2, max_slots=3, page_size=8,
+                      max_seq_len=64, prefix_cache=False, prefill_budget=4)
+    reqs = [r.submit(p, g, arrival_step=i // 2)
+            for i, (p, g) in enumerate(trace)]
+    victim = None
+    for _ in range(3):                       # land a few 4-token chunks
+        r.step()
+    for rid, rep in r.replicas.items():
+        if any(q is not None and q.prefill_pos is not None
+               for q in rep.sched.slot_req):
+            victim = rid
+            break
+    assert victim is not None, "no replica caught mid-prefill"
+    r.fail_replica(victim)
+    r.run()
+    assert [list(q.out_tokens) for q in reqs] == base
+    assert r.stats["reroutes"] >= 1
+
+
+def test_disagg_prefill_replica_preemption():
+    """Disaggregated fleet: a *prefill-role* replica dies mid-chunk; the
+    surviving prefill replica re-runs its streams and the decode side still
+    sees byte-identical handoffs."""
+    cfg, params = _params("qwen3-32b")
+    trace = _trace(cfg, seed=4, n=4, p_lo=12, p_hi=24)
+    _, base = _serve_fleet(cfg, params, trace)
+
+    r = ServingRouter(cfg, params, replicas=3, max_slots=3, page_size=8,
+                      max_seq_len=64, prefix_cache=False, prefill_budget=4,
+                      disagg=2)
+    reqs = [r.submit(p, g, arrival_step=i // 2)
+            for i, (p, g) in enumerate(trace)]
+    for _ in range(3):
+        r.step()
+    victim = next(rid for rid, rep in r.replicas.items()
+                  if rep.role == "prefill"
+                  and any(q is not None for q in rep.sched.slot_req))
+    r.fail_replica(victim)
+    r.run()
+    assert [list(q.out_tokens) for q in reqs] == base
+    assert r.stats["migrations"] >= len(trace)

@@ -1,0 +1,142 @@
+"""Chunked-prefill scheduler invariants (hypothesis stateful).
+
+``ChunkedSchedulerMachine`` drives the REAL ``ContinuousBatchingScheduler``
+control plane — admission ledger, page allocator, chunk fifo, decode
+masking — through random submit/tick interleavings, with the jit'd compute
+paths stubbed out (prefill/suffix/decode return token 0 and pass the cache
+through untouched). Tokens are irrelevant here; what the machine pins down
+is the *bookkeeping* the byte-identity sweep in tests/test_chunked_prefill.py
+builds on:
+
+* a tick never lands more than ``prefill_budget`` prompt tokens, no matter
+  how many prefills are in flight (the SLO knob is a hard cap);
+* the chunk fifo is FCFS and the head always advances — an admitted
+  prefill can never starve behind later arrivals;
+* the admission ledger stays exact at every step: ``pages_in_use`` equals
+  the allocator's refcount ledger, ``reserved_pages`` equals the per-slot
+  reservations, and reservations never undershoot pages actually held;
+* every PREFILLING slot is on the fifo and vice versa, and PREFILLING
+  slots sit out of decode (their seq_lens stay 0 — masked like empty
+  slots);
+* draining the machine returns every page and every reservation to zero.
+
+The stub subclass overrides only the compiled-function *getters* — every
+line of host-side scheduling logic under test is the production code.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import settings, strategies as st
+from hypothesis.stateful import (RuleBasedStateMachine, invariant,
+                                 precondition, rule)
+
+from repro.configs.registry import get_reduced
+from repro.serving.scheduler import ContinuousBatchingScheduler
+
+PAGE = 4
+SLOTS = 3
+POOL = 40
+MAX_SEQ = 64
+BUDGET = 3
+
+
+class _StubSched(ContinuousBatchingScheduler):
+    """Production scheduler with the jit compute stubbed to no-ops."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self._decode_fn = lambda params, cache, toks, lens, bt, k: (
+            np.zeros((k, toks.shape[0]), np.int32), cache)
+        self._cow_fn = lambda cache, src, dst: cache
+
+    def _prefill_fn(self, n):
+        return lambda params, tokens, plen: (np.int32(0), None)
+
+    def _insert_fn(self, n):
+        return lambda cache, pre, row, slot, plen: cache
+
+    def _suffix_fn(self, n):
+        return lambda params, cache, toks, start, c, row: (np.int32(0),
+                                                           cache)
+
+    def _seq_suffix_fn(self, c):
+        return (lambda params, cache, state, toks, start, row, slot:
+                (np.int32(0), cache))
+
+
+class ChunkedSchedulerMachine(RuleBasedStateMachine):
+    def __init__(self):
+        super().__init__()
+        self.sched = _StubSched(
+            get_reduced("qwen3-32b"), None, max_slots=SLOTS,
+            page_size=PAGE, num_pages=POOL, max_seq_len=MAX_SEQ,
+            prefix_cache=False, prefill_budget=BUDGET)
+
+    # ------------------------------------------------------------- rules --
+    @rule(plen=st.integers(min_value=1, max_value=20),
+          gen=st.integers(min_value=1, max_value=6))
+    def submit(self, plen, gen):
+        prompt = (np.arange(plen, dtype=np.int32) % 97)
+        self.sched.submit(prompt, gen, arrival_step=0)
+
+    @precondition(lambda self: self.sched.waiting or self.sched.num_active)
+    @rule(max_fuse=st.sampled_from([1, 4, 16]))
+    def tick(self, max_fuse):
+        s = self.sched
+        head = s._prefill_fifo[0] if s._prefill_fifo else None
+        head_req = s.slot_req[head] if head is not None else None
+        head_pos = head_req.prefill_pos if head_req is not None else None
+        before = s.stats["prefill_chunk_tokens"]
+        s.step(max_fuse=max_fuse)
+        landed = s.stats["prefill_chunk_tokens"] - before
+        assert landed <= BUDGET, \
+            f"tick landed {landed} chunk tokens > budget {BUDGET}"
+        if head is not None:
+            # FCFS head must have advanced: cursor moved, or it left
+            # PREFILLING entirely (last chunk landed / finished)
+            if head_req.prefill_pos is not None:
+                assert head_req.prefill_pos > head_pos, \
+                    "fifo head starved (cursor did not advance)"
+
+    # -------------------------------------------------------- invariants --
+    @invariant()
+    def ledger_exact(self):
+        s = self.sched
+        assert s.pages_in_use == s.alloc.num_allocated, \
+            "slot pages and allocator refcounts disagree"
+        assert s.reserved_pages == sum(s.slot_reserve), \
+            "reservation ledger drifted from per-slot reservations"
+        assert s.reserved_pages >= s.pages_in_use, \
+            "reservation undershoots pages actually held"
+        assert s.alloc.num_free + s.alloc.num_allocated == POOL - 1
+
+    @invariant()
+    def fifo_matches_prefilling_slots(self):
+        s = self.sched
+        prefilling = [i for i, r in enumerate(s.slot_req)
+                      if r is not None and r.prefill_pos is not None]
+        assert sorted(s._prefill_fifo) == prefilling
+        assert len(set(s._prefill_fifo)) == len(s._prefill_fifo)
+        for slot in prefilling:
+            # masked out of decode until the last chunk lands
+            assert s.seq_lens[slot] == 0
+            assert 0 <= s.slot_req[slot].prefill_pos \
+                < s.slot_req[slot].plen
+
+    def teardown(self):
+        s = self.sched
+        for _ in range(500):
+            if not (s.waiting or s.num_active):
+                break
+            s.step(max_fuse=4)
+        assert not s.waiting and not s.num_active, "machine failed to drain"
+        assert s.alloc.num_allocated == 0, "drained scheduler leaked pages"
+        assert s.reserved_pages == 0, "drained scheduler leaked reservations"
+        super().teardown()
+
+
+TestChunkedSchedulerProps = ChunkedSchedulerMachine.TestCase
+TestChunkedSchedulerProps.settings = settings(max_examples=40,
+                                              stateful_step_count=40,
+                                              deadline=None)

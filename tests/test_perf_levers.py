@@ -72,6 +72,57 @@ def test_int8_cache_decode_close_to_fp32(arch):
     assert any(l.dtype == jnp.int8 for l in flat)
 
 
+def test_chunk_budget_lever_caps_prefill_not_decode():
+    """Chunked prefill (§SLO lever): the per-tick budget exactly caps
+    prompt tokens landed per tick and spreads a long prompt over
+    ceil(plen/budget) chunk ticks — while a co-resident chat stream keeps
+    gaining one token *every* tick and finishes on the same tick as under
+    monolithic prefill. The lever trades prefill latency, never decode
+    progress, and never the tokens themselves."""
+    from repro.serving.scheduler import ContinuousBatchingScheduler
+
+    cfg = dataclasses.replace(REDUCED["qwen3-32b"], dtype="float32")
+    params = M.init(cfg, KEY)
+    rng = np.random.RandomState(3)
+    chat = rng.randint(0, cfg.vocab_size, size=5).astype(np.int32)
+    long_p = rng.randint(0, cfg.vocab_size, size=40).astype(np.int32)
+
+    def serve(budget):
+        s = ContinuousBatchingScheduler(
+            cfg, params, max_slots=2, page_size=8, max_seq_len=64,
+            prefix_cache=False, prefill_budget=budget)
+        a = s.submit(chat, 12, arrival_step=0)
+        b = s.submit(long_p, 2, arrival_step=1)
+        deltas, gains = [], []
+        for _ in range(200):
+            if a.done and b.done:
+                break
+            before = s.stats["prefill_chunk_tokens"]
+            n0 = len(a.out_tokens)
+            decoding = (a.admit_step is not None and a.prefill_pos is None
+                        and not a.done)
+            s.step(max_fuse=1)
+            deltas.append(s.stats["prefill_chunk_tokens"] - before)
+            if decoding:
+                gains.append(len(a.out_tokens) - n0)
+        assert a.done and b.done
+        return [list(a.out_tokens), list(b.out_tokens)], deltas, gains, \
+            a.finish_step
+
+    base, _, _, base_finish = serve(None)
+    # budgets >= chat's plen: the chat stream lands in one chunk, so any
+    # timeline change could only come from the long prompt's chunking
+    for budget in (16, 8):
+        toks, deltas, gains, finish = serve(budget)
+        assert toks == base, f"budget {budget} changed tokens"
+        assert max(deltas) <= budget
+        # one chunk tick for chat + exactly ceil(40/budget) for the long
+        # prompt: the budget is spent, not hoarded
+        assert sum(d > 0 for d in deltas) == 1 + -(-len(long_p) // budget)
+        assert all(g == 1 for g in gains), "decode starved mid-prefill"
+        assert finish == base_finish
+
+
 def test_bf16_serve_params_spec_override():
     from repro.configs.base import SHAPES
     from repro.core.blueprint import suggest_plan

@@ -49,3 +49,8 @@ def test_gpipe_matches_sequential():
 @pytest.mark.slow
 def test_shard_group_paged_decode_shard_map():
     run_check("shard_group_paged_decode")
+
+
+@pytest.mark.slow
+def test_chunked_prefill_composes_with_tp2():
+    run_check("chunked_prefill_tp2")
