@@ -50,6 +50,15 @@ throughput, p50/p99 tick latency, and per-shard page-pool utilisation.
 Byte-identity vs ``tp=1`` is a *hard gate*: any token difference exits
 non-zero (the determinism contract in docs/sharding.md).
 ``--smoke --tp 2`` is the CI shard-group smoke step.
+
+``--trace-out`` / ``--metrics-out`` (any mode) run one extra pass of the
+trace *after* the timed passes with the observability plane attached
+(docs/observability.md) and export the lifecycle trace (Chrome
+trace-event JSON) / the metric registries (Prometheus text). The bench
+validates its own artifacts — an empty or unparsable export exits
+non-zero — which is what the CI obs smoke step leans on. Latency
+percentiles everywhere are nearest-rank (``repro.obs.metrics.percentile``),
+the same estimator the histogram quantiles approximate.
 """
 from __future__ import annotations
 
@@ -64,11 +73,55 @@ import numpy as np
 from repro.configs.registry import REDUCED
 from repro.launch.serve import persona_workload
 from repro.models import model as M
+from repro.obs.metrics import percentile
+from repro.obs.trace import Tracer
 from repro.serving import engine as E
 from repro.serving import paged_cache as PC
 from repro.serving.request import make_request
 from repro.serving.router import ServingRouter
 from repro.serving.scheduler import ContinuousBatchingScheduler
+
+
+def export_obs_artifacts(args, make_engine, workload):
+    """One extra pass of ``workload`` with the observability plane attached
+    (run after the timed passes so artifact export never shares a pass with
+    a timing measurement), writing ``--trace-out`` / ``--metrics-out``.
+
+    The bench validates its own exports — an empty or unparsable artifact
+    is a hard failure, so the CI obs smoke step cannot silently write
+    garbage. Returns the export counts (or None when neither flag is set).
+    """
+    if not (args.trace_out or args.metrics_out):
+        return None
+    eng = make_engine()            # scheduler or router: same surface
+    tracer = Tracer()
+    eng.set_tracer(tracer)
+    base = eng.step_idx
+    for i, (prompt, gen) in enumerate(workload):
+        arrival = base + (i // args.arrivals_per_step
+                          if args.arrivals_per_step else 0)
+        eng.submit(prompt, gen, arrival_step=arrival)
+    eng.run()
+    tracer.finish_open()
+    written = {}
+    if args.trace_out:
+        written["trace_events"] = tracer.write_chrome(args.trace_out)
+        with open(args.trace_out) as fh:
+            data = json.load(fh)       # unparsable -> json error -> nonzero
+        if not [e for e in data.get("traceEvents", [])
+                if e.get("ph") != "M"]:
+            raise SystemExit(f"--trace-out {args.trace_out}: no lifecycle "
+                             "events recorded — tracing wiring broken")
+    if args.metrics_out:
+        text = (eng.expose() if hasattr(eng, "expose")
+                else eng.registry.expose())
+        with open(args.metrics_out, "w") as fh:
+            fh.write(text)
+        written["metrics_written"] = text.count("# TYPE")
+        if not written["metrics_written"]:
+            raise SystemExit(f"--metrics-out {args.metrics_out}: empty "
+                             "exposition — metrics wiring broken")
+    return written
 
 
 def bench_cfg(arch: str, wide: int, deep: int):
@@ -255,8 +308,7 @@ def bench_tp(cfg, params, args, widths):
                 best = res
         best_wall, delta, reqs = best
         tokens[k] = [list(r.out_tokens) for r in reqs]
-        lat = np.asarray([r.finish_step - r.arrival_step for r in reqs],
-                         float)
+        lat = [float(r.finish_step - r.arrival_step) for r in reqs]
         shard = sched.shard_stats()
         per0 = shard["per_shard"][0]
         sides.append({
@@ -264,8 +316,8 @@ def bench_tp(cfg, params, args, widths):
             "useful_tok_per_s": round(gen_total / best_wall, 1),
             "wall_s": round(best_wall, 3),
             "decode_steps": delta["decode_steps"],
-            "p50_latency_ticks": float(np.percentile(lat, 50)),
-            "p99_latency_ticks": float(np.percentile(lat, 99)),
+            "p50_latency_ticks": percentile(lat, 50),
+            "p99_latency_ticks": percentile(lat, 99),
             "peak_pages": sched.stats["peak_pages"],
             "per_shard_pool": {
                 "shards": k,
@@ -351,16 +403,14 @@ def bench_mixed(cfg, params, args):
                 best = res
         wall, reqs, ticks, chunk_tokens = best
         tokens[name] = [list(r.out_tokens) for r in reqs]
-        lat = np.asarray([r.finish_step - r.arrival_step for r in reqs],
-                         float)
-        ticks_a = np.asarray(ticks, float)
+        lat = [float(r.finish_step - r.arrival_step) for r in reqs]
         sides[name] = {
             "useful_tok_per_s": round(gen_total / wall, 1),
             "wall_s": round(wall, 3),
             "ticks": len(ticks),
-            "p50_tick_ms": round(float(np.percentile(ticks_a, 50)) * 1e3, 3),
-            "p99_tick_ms": round(float(np.percentile(ticks_a, 99)) * 1e3, 3),
-            "p99_latency_ticks": float(np.percentile(lat, 99)),
+            "p50_tick_ms": round(percentile(ticks, 50) * 1e3, 3),
+            "p99_tick_ms": round(percentile(ticks, 99) * 1e3, 3),
+            "p99_latency_ticks": percentile(lat, 99),
         }
         if budget is not None:
             sides[name]["prefill_chunk_tokens"] = chunk_tokens
@@ -431,14 +481,14 @@ def bench_fleet(cfg, params, workload, k, args):
         delta, reqs = run_fleet(router, workload, args.arrivals_per_step)
         t = time.time() - t0
         t_best = t if t_best is None else min(t_best, t)
-    lat = np.asarray([r.finish_step - r.arrival_step for r in reqs], float)
+    lat = [float(r.finish_step - r.arrival_step) for r in reqs]
     out = {
         "replicas": k,
         "slots_per_replica": slots,
         "fleet_tok_per_s": round(delta["tokens_out"] / t_best, 1),
         "wall_s": round(t_best, 2),
-        "p50_latency_ticks": float(np.percentile(lat, 50)),
-        "p99_latency_ticks": float(np.percentile(lat, 99)),
+        "p50_latency_ticks": percentile(lat, 50),
+        "p99_latency_ticks": percentile(lat, 99),
         "spillovers": delta["spillovers"],
     }
     imb = router.imbalance()
@@ -497,6 +547,14 @@ def main() -> None:
                     "for every variant so the hardware matches)")
     ap.add_argument("--out", default=None,
                     help="also write the report JSON to this path")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export a request-lifecycle trace (Chrome "
+                    "trace-event JSON) from one extra pass run after the "
+                    "timed passes; the bench fails if the artifact is "
+                    "empty or unparsable")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="export the metric registries (Prometheus text) "
+                    "from the same extra pass; fails if empty")
     ap.add_argument("--shared-prefix", action="store_true",
                     help="shared-prefix mode: persona workload served by "
                     "the paged scheduler with the copy-on-write prefix "
@@ -552,6 +610,18 @@ def main() -> None:
         cfg = dataclasses.replace(cfg, dtype="float32")
         params = M.init(cfg, jax.random.PRNGKey(args.seed))
         out = bench_tp(cfg, params, args, widths)
+        obs = export_obs_artifacts(
+            args,
+            lambda: ContinuousBatchingScheduler(
+                cfg, params, max_slots=args.batch,
+                page_size=args.page_size,
+                max_seq_len=args.prompt_hi + args.gen_hi + 1,
+                tp=widths[-1]),
+            make_workload(cfg, np.random.RandomState(args.seed),
+                          args.requests, args.prompt_lo, args.prompt_hi,
+                          args.gen_lo, args.gen_hi, args.long_frac))
+        if obs:
+            out["obs_artifacts"] = obs
         print(json.dumps(out, indent=2))
         if not out["tokens_identical"]:
             raise SystemExit("shard-group serving changed output tokens "
@@ -571,6 +641,23 @@ def main() -> None:
                 / cfg.moe_top_k)
         params = M.init(cfg, jax.random.PRNGKey(args.seed))
         out = bench_mixed(cfg, params, args)
+        # the traced pass reuses the most featureful variant's fabric so
+        # the exported trace shows chunks (and migrations under --disagg)
+        obs = export_obs_artifacts(
+            args,
+            lambda: ServingRouter(
+                cfg, params,
+                replicas=(args.disagg + 1) if args.disagg else 2,
+                max_slots=args.batch, page_size=args.page_size,
+                max_seq_len=(max(args.long_prompt, args.prompt_hi)
+                             + args.gen_hi + 1),
+                prefill_budget=args.chunk_budget, disagg=args.disagg),
+            make_mixed_workload(cfg, np.random.RandomState(args.seed),
+                                args.requests, args.long_frac,
+                                args.long_prompt, args.prompt_lo,
+                                args.prompt_hi, args.gen_lo, args.gen_hi))
+        if obs:
+            out["obs_artifacts"] = obs
         print(json.dumps(out, indent=2))
         if args.out:
             with open(args.out, "w") as fh:
@@ -605,6 +692,22 @@ def main() -> None:
                 / cfg.moe_top_k)
         params = M.init(cfg, jax.random.PRNGKey(args.seed))
         out = bench_shared_prefix(cfg, params, args)
+        user_hi = max(args.user_len, 2)
+        g_lo = max(args.gen_lo, 1)
+        obs = export_obs_artifacts(
+            args,
+            lambda: ContinuousBatchingScheduler(
+                cfg, params, max_slots=args.batch,
+                page_size=args.page_size,
+                max_seq_len=args.persona_len + user_hi + 2 * g_lo + 1,
+                prefix_cache=True),
+            persona_workload(cfg.vocab_size,
+                             np.random.RandomState(args.seed),
+                             args.personas, args.users_per_persona,
+                             args.persona_len, max(user_hi // 2, 1),
+                             user_hi, g_lo, 2 * g_lo))
+        if obs:
+            out["obs_artifacts"] = obs
         print(json.dumps(out, indent=2))
         if not out["tokens_identical"]:
             raise SystemExit("shared-prefix serving changed output tokens "
@@ -629,6 +732,15 @@ def main() -> None:
                "batch_budget": args.batch, "mode": "fleet",
                "fleet": [bench_fleet(cfg, params, workload, k, args)
                          for k in widths]}
+        obs = export_obs_artifacts(
+            args,
+            lambda: ServingRouter(
+                cfg, params, replicas=widths[-1],
+                max_slots=max(args.batch // widths[-1], 1),
+                page_size=args.page_size, max_seq_len=max_seq),
+            workload)
+        if obs:
+            out["obs_artifacts"] = obs
         print(json.dumps(out, indent=2))
         return
 
@@ -678,6 +790,14 @@ def main() -> None:
                         "paged_peak": paged_bytes,
                         "ratio": round(dense_bytes / max(paged_bytes, 1), 2)},
     }
+    obs = export_obs_artifacts(
+        args,
+        lambda: ContinuousBatchingScheduler(
+            cfg, params, max_slots=args.batch, page_size=args.page_size,
+            max_seq_len=max_seq),
+        workload)
+    if obs:
+        out["obs_artifacts"] = obs
     print(json.dumps(out, indent=2))
     if out["speedup"] <= 1.0:
         import sys

@@ -75,7 +75,7 @@ class AutoscaleController:
                  slots_per_node: Optional[int] = None,
                  node_boot_ticks: int = 0,
                  lifecycle=None, cluster=None, monitor=None,
-                 log: Optional[EventLog] = None):
+                 log: Optional[EventLog] = None, slo_monitors=None):
         self.sched = sched
         self.bands = bands
         self.slot_policy = slot_policy or default_slot_policy(bands)
@@ -83,6 +83,9 @@ class AutoscaleController:
         self.eval_interval = eval_interval
         self.tick_seconds = tick_seconds
         self.bus = TelemetryBus()
+        # SLO burn-rate monitors (repro.obs.slo): sampled each tick, their
+        # signals join the bus so policies can target burn rates directly
+        self.slo_monitors = list(slo_monitors or [])
         self.monitor = monitor
         self.lifecycle = lifecycle
         self.cluster = cluster
@@ -151,6 +154,8 @@ class AutoscaleController:
         sample = sample_scheduler(self.sched)
         sample["demand_per_slot"] = sample["demand"] / max(sample["slots"], 1)
         sample.update(sample_monitor(self.monitor))
+        for m in self.slo_monitors:
+            sample.update(m.sample(t * self.tick_seconds))
         self.bus.record(t * self.tick_seconds, sample)
 
         if t >= self._next_eval:
@@ -185,6 +190,11 @@ class AutoscaleController:
         self.log.emit(d.at, "autoscale", f"scale_{d.direction}",
                       resource=d.resource, desired=d.desired, delta=d.delta,
                       reason=d.reason)
+        if self.sched.tracer is not None:
+            self.sched.tracer.instant(
+                "autoscale", t=self.sched.step_idx,
+                direction=d.direction, resource=d.resource,
+                desired=d.desired, delta=d.delta, reason=d.reason)
 
     # ----------------------------------------------------------- actuate --
     def _scale_slots(self, desired: int) -> None:

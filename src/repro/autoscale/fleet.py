@@ -113,7 +113,7 @@ class FleetController:
                  eval_interval: int = 4, tick_seconds: float = 1.0,
                  lifecycle=None, cluster=None, monitor=None,
                  replica_bands: Optional[CapacityBands] = None,
-                 log: Optional[EventLog] = None):
+                 log: Optional[EventLog] = None, slo_monitors=None):
         self.router = router
         self.tp = router.replica_kw.get("tp", 1)   # nodes per shard group
         self.min_replicas = min_replicas
@@ -134,6 +134,10 @@ class FleetController:
         self.monitor = monitor
         self.replica_bands = replica_bands
         self.bus = TelemetryBus()
+        # SLO burn-rate monitors (repro.obs.slo): sampled every tick, their
+        # slo_<name>_{burn_short,burn_long,firing} signals land on the bus
+        # so a scaling policy can target burn rate like any other metric
+        self.slo_monitors = list(slo_monitors or [])
         self.log = log if log is not None else (
             cluster.log if cluster is not None else EventLog())
         self.decisions: List[ScaleDecision] = []
@@ -207,6 +211,8 @@ class FleetController:
                 "decode_demand": dem,
                 "decode_demand_per_replica": dem / max(n_dec, 1),
             })
+        for m in self.slo_monitors:
+            sample.update(m.sample(self.now))
         self.bus.record(self.now, sample)
         if self.router.step_idx >= self._next_eval:
             self._next_eval = self.router.step_idx + self.eval_interval
@@ -242,6 +248,12 @@ class FleetController:
         self.log.emit(d.at, "autoscale", f"scale_{d.direction}",
                       resource=d.resource, desired=d.desired, delta=d.delta,
                       reason=d.reason)
+        if self.router.tracer is not None:
+            self.router.tracer.instant(
+                "autoscale", t=self.router.step_idx,
+                direction=d.direction, resource=d.resource,
+                desired=d.desired, delta=d.delta, reason=d.reason,
+                role=role)
         if d.delta > 0:
             self._scale_out(d.delta, role=role)
         else:

@@ -99,11 +99,28 @@ class TelemetryBus:
         w = list(self._window(name, horizon))
         return max(v for _, v in w) if w else default
 
-    def rate(self, name: str, horizon: Optional[float] = None) -> float:
+    def rate(self, name: str, horizon: Optional[float] = None, *,
+             default: float = 0.0, min_span_frac: float = 0.25) -> float:
         """Per-clock-unit rate of change of a cumulative counter (e.g.
-        ``tokens_out`` -> tokens/s on the SimCloud clock)."""
+        ``tokens_out`` -> tokens/s on the SimCloud clock).
+
+        Horizon contract: the rate is the counter delta over the trailing
+        ``horizon`` of clock time, differentiated between the window's
+        endpoint samples — so it only means "sustained rate over the
+        horizon" once the recorded samples actually *span* (most of) it.
+        Early in a run they don't: with exactly two samples one tick
+        apart, a single-tick burst of N reads as a steady N/tick and a
+        scale-up policy fires on noise. Until the window covers at least
+        ``min_span_frac`` of the requested horizon, ``default`` is
+        returned instead (with ``horizon=None`` any 2+ samples qualify —
+        the caller asked for the whole-series rate).
+        """
         w = list(self._window(name, horizon))
         if len(w) < 2:
-            return 0.0
+            return default
         (t0, v0), (t1, v1) = w[0], w[-1]
-        return (v1 - v0) / (t1 - t0) if t1 > t0 else 0.0
+        if t1 <= t0:
+            return default
+        if horizon is not None and (t1 - t0) < min_span_frac * horizon:
+            return default
+        return (v1 - v0) / (t1 - t0)

@@ -2,10 +2,21 @@
 
 ``interpret=True`` runs kernel bodies on CPU (how this container validates
 them); on real TPU deployments pass ``interpret=False``.
+
+**Profiling hook** (``set_profile_hook``): an opt-in callback wrapped
+around every public entry point, fed the kind, the post-
+``block_until_ready`` wall seconds, and the call's array arguments (for
+byte accounting) — ``repro.obs.profile.KernelProfiler.hook()`` is the
+intended consumer. The hook only fires for calls with concrete operands:
+a call made *inside* an outer jit trace sees abstract tracers, where wall
+time is meaningless (and a host callback would break tracing), so those
+pass straight through. Hooked or not, results are identical — timing
+reads the clock around the call and touches nothing else.
 """
 from __future__ import annotations
 
 import functools
+import time
 from typing import Optional
 
 import jax
@@ -16,21 +27,57 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import paged_decode as _pd
 from repro.kernels import ssd as _ssd
 
+_PROFILE_HOOK = None
+
+
+def set_profile_hook(hook) -> Optional[object]:
+    """Install ``hook(kind, wall_seconds, args)`` around every public op
+    (None uninstalls); returns the previous hook so callers can restore
+    it (``prev = set_profile_hook(p.hook()) ... set_profile_hook(prev)``)."""
+    global _PROFILE_HOOK
+    prev = _PROFILE_HOOK
+    _PROFILE_HOOK = hook
+    return prev
+
+
+def _traced(tree) -> bool:
+    return any(isinstance(leaf, jax.core.Tracer)
+               for leaf in jax.tree_util.tree_leaves(tree))
+
+
+def _profiled(kind, fn, *args, **kw):
+    hook = _PROFILE_HOOK
+    if hook is None or _traced((args, kw)):
+        return fn(*args, **kw)
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fn(*args, **kw))
+    hook(kind, time.perf_counter() - t0, args)
+    return out
+
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
                                              "scale", "block_q", "block_k",
                                              "interpret"))
-def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
-                    scale=None, block_q=128, block_k=128, interpret=False):
+def _flash_attention_jit(q, k, v, *, causal=True, window=None, softcap=None,
+                         scale=None, block_q=128, block_k=128,
+                         interpret=False):
     return _fa.flash_attention(q, k, v, causal=causal, window=window,
                                softcap=softcap, scale=scale, block_q=block_q,
                                block_k=block_k, interpret=interpret)
 
 
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    scale=None, block_q=128, block_k=128, interpret=False):
+    return _profiled("flash_attention", _flash_attention_jit, q, k, v,
+                     causal=causal, window=window, softcap=softcap,
+                     scale=scale, block_q=block_q, block_k=block_k,
+                     interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("softcap", "scale", "block_k",
                                              "interpret"))
-def decode_attention(q, k_cache, v_cache, *, softcap=None, scale=None,
-                     block_k=512, interpret=False):
+def _decode_attention_jit(q, k_cache, v_cache, *, softcap=None, scale=None,
+                          block_k=512, interpret=False):
     """Flash-decode: partials from the kernel, LSE combine in jnp.
 
     q: (B,H,d); caches (B,S,KVH,d) -> (B,H,d).
@@ -47,6 +94,17 @@ def decode_attention(q, k_cache, v_cache, *, softcap=None, scale=None,
     o_glob = (o * w[..., None]).sum(axis=1)                 # (BK,G,d)
     out = o_glob / jnp.maximum(l_glob, 1e-30)[..., None]
     return out.reshape(B, KVH, G, d).reshape(B, H, d).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, softcap=None, scale=None,
+                     block_k=512, interpret=False):
+    """Flash-decode: partials from the kernel, LSE combine in jnp.
+
+    q: (B,H,d); caches (B,S,KVH,d) -> (B,H,d).
+    """
+    return _profiled("decode_attention", _decode_attention_jit, q, k_cache,
+                     v_cache, softcap=softcap, scale=scale, block_k=block_k,
+                     interpret=interpret)
 
 
 def _paged_decode_one(q, k_pages, v_pages, block_table, seq_lens, *,
@@ -68,6 +126,16 @@ def _paged_decode_one(q, k_pages, v_pages, block_table, seq_lens, *,
 
 @functools.partial(jax.jit, static_argnames=("softcap", "window", "scale",
                                              "interpret"))
+def _paged_decode_attention_jit(q, k_pages, v_pages, block_table, seq_lens, *,
+                                k_scale_pages=None, v_scale_pages=None,
+                                softcap=None, window=None, scale=None,
+                                interpret=False):
+    return _paged_decode_one(q, k_pages, v_pages, block_table, seq_lens,
+                             k_scale_pages=k_scale_pages,
+                             v_scale_pages=v_scale_pages, softcap=softcap,
+                             window=window, scale=scale, interpret=interpret)
+
+
 def paged_decode_attention(q, k_pages, v_pages, block_table, seq_lens, *,
                            k_scale_pages=None, v_scale_pages=None,
                            softcap=None, window=None, scale=None,
@@ -78,19 +146,20 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, seq_lens, *,
     q: (B,H,d); pools (P,ps,KVH,d); block_table (B,n_pg); seq_lens (B,)
     -> (B,H,d). See ``repro.kernels.paged_decode`` for the page gather.
     """
-    return _paged_decode_one(q, k_pages, v_pages, block_table, seq_lens,
-                             k_scale_pages=k_scale_pages,
-                             v_scale_pages=v_scale_pages, softcap=softcap,
-                             window=window, scale=scale, interpret=interpret)
+    return _profiled("paged_decode_attention", _paged_decode_attention_jit,
+                     q, k_pages, v_pages, block_table, seq_lens,
+                     k_scale_pages=k_scale_pages, v_scale_pages=v_scale_pages,
+                     softcap=softcap, window=window, scale=scale,
+                     interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("softcap", "window", "scale",
                                              "interpret"))
-def paged_decode_attention_sharded(q, k_pages, v_pages, block_table,
-                                   seq_lens, *, k_scale_pages=None,
-                                   v_scale_pages=None, softcap=None,
-                                   window=None, scale=None,
-                                   interpret=False):
+def _paged_decode_attention_sharded_jit(q, k_pages, v_pages, block_table,
+                                        seq_lens, *, k_scale_pages=None,
+                                        v_scale_pages=None, softcap=None,
+                                        window=None, scale=None,
+                                        interpret=False):
     """Shard-group paged flash-decode: pools carry a leading shard axis
     (tp, P, ps, KVH/tp, d) and the kernel is invoked once per shard on
     that shard's query-head slice of ``q`` (B, H, d); the head-axis concat
@@ -112,8 +181,23 @@ def paged_decode_attention_sharded(q, k_pages, v_pages, block_table,
     return jnp.concatenate(outs, axis=1)
 
 
+def paged_decode_attention_sharded(q, k_pages, v_pages, block_table,
+                                   seq_lens, *, k_scale_pages=None,
+                                   v_scale_pages=None, softcap=None,
+                                   window=None, scale=None,
+                                   interpret=False):
+    """Shard-group paged flash-decode (see ``_paged_decode_attention_sharded_jit``
+    for the shard/head-slice structure)."""
+    return _profiled("paged_decode_attention_sharded",
+                     _paged_decode_attention_sharded_jit,
+                     q, k_pages, v_pages, block_table, seq_lens,
+                     k_scale_pages=k_scale_pages, v_scale_pages=v_scale_pages,
+                     softcap=softcap, window=window, scale=scale,
+                     interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd(x, dt, A, Bm, Cm, *, chunk=128, h0=None, interpret=False):
+def _ssd_jit(x, dt, A, Bm, Cm, *, chunk=128, h0=None, interpret=False):
     """Full SSD forward via the intra-chunk kernel + jnp inter-chunk scan.
 
     Same contract as ``repro.models.ssm.ssd_chunked``:
@@ -153,3 +237,14 @@ def ssd(x, dt, A, Bm, Cm, *, chunk=128, h0=None, interpret=False):
                        h_prevs, preferred_element_type=jnp.float32)
     y = (y_diag.astype(jnp.float32) + y_off).reshape(B, S, H, P)
     return y.astype(x.dtype), h_final
+
+
+def ssd(x, dt, A, Bm, Cm, *, chunk=128, h0=None, interpret=False):
+    """Full SSD forward via the intra-chunk kernel + jnp inter-chunk scan.
+
+    Same contract as ``repro.models.ssm.ssd_chunked``:
+    x: (B,S,H,P), dt: (B,S,H) fp32, A: (H,), Bm/Cm: (B,S,G,N).
+    Returns (y, h_final).
+    """
+    return _profiled("ssd", _ssd_jit, x, dt, A, Bm, Cm, chunk=chunk, h0=h0,
+                     interpret=interpret)

@@ -15,7 +15,17 @@ Two engines, selectable with ``--engine``:
   With ``--autoscale`` the engine starts at one decode slot and the
   elastic control plane (``repro.autoscale``) grows/shrinks slots and
   page pool with load; ``--events-out run.jsonl`` exports the scale
-  decisions for replay (``EventLog.from_jsonl``).
+  decisions for replay (``EventLog.from_jsonl``). Without ``--autoscale``
+  the same flag exports the request-lifecycle trace as an event log
+  instead (``repro.obs.trace.Tracer.to_event_log``).
+
+Observability (paged/fleet only, see docs/observability.md):
+``--trace-out trace.json`` records per-request lifecycle spans (queued /
+prefill chunks / parked / migration / decode) as Chrome trace-event JSON
+for Perfetto; ``--metrics-out metrics.prom`` dumps the typed metric
+registries in Prometheus text exposition; ``--profile`` wall-times every
+kernel dispatch and reports modeled roofline fractions. All three are
+read-only: emitted tokens are byte-identical with them on or off.
 
 ``--replicas k`` (paged only) serves through the replicated fabric
 instead: a ``ServingRouter`` front-end spreads the workload over k
@@ -57,9 +67,36 @@ import numpy as np
 
 from repro.configs.registry import ARCHS, get_reduced
 from repro.models import model as M
+from repro.obs.metrics import percentile
+from repro.obs.trace import Tracer
 from repro.serving import engine as E
 from repro.serving import paged_cache as PC
 from repro.serving.scheduler import ContinuousBatchingScheduler, supports_paged
+
+
+def _finish_obs(out: dict, args, tracer, profiler, expose_fn,
+                ctl=None) -> None:
+    """Common export tail for the paged/fleet runners: flush the tracer,
+    write the requested artifacts, and fold counts into the result dict."""
+    if tracer is not None:
+        tracer.finish_open()
+    if args.trace_out:
+        out["trace_events"] = tracer.write_chrome(args.trace_out)
+    if args.events_out:
+        # the autoscale control loop owns the event log when present;
+        # otherwise the lifecycle trace is the run's event stream
+        if ctl is not None:
+            out["events_written"] = ctl.log.write_jsonl(args.events_out)
+        else:
+            out["events_written"] = tracer.to_event_log().write_jsonl(
+                args.events_out)
+    if args.metrics_out:
+        text = expose_fn()
+        with open(args.metrics_out, "w") as fh:
+            fh.write(text)
+        out["metrics_written"] = text.count("# TYPE")
+    if profiler is not None:
+        out["profile"] = profiler.summary()
 
 
 def run_static(cfg, params, args) -> dict:
@@ -176,6 +213,11 @@ def run_fleet(cfg, params, args) -> dict:
                            prefix_cache=args.prefix_cache, tp=args.tp,
                            prefill_budget=args.chunked_prefill,
                            disagg=args.disagg)
+    tracer = None
+    if args.trace_out or (args.events_out and not args.autoscale):
+        tracer = Tracer()
+        router.set_tracer(tracer)
+    profiler = router.enable_profiling() if args.profile else None
     ctl = None
     if args.autoscale:
         from repro.autoscale import FleetController
@@ -188,7 +230,7 @@ def run_fleet(cfg, params, args) -> dict:
     done = ctl.run() if ctl else router.run()
     wall = time.time() - t0
     fleet = router.fleet_stats()
-    lat = np.asarray([r.finish_step - r.arrival_step for r in done], float)
+    lat = [float(r.finish_step - r.arrival_step) for r in done]
     out = {
         "engine": "fleet",
         "arch": cfg.name,
@@ -200,8 +242,8 @@ def run_fleet(cfg, params, args) -> dict:
         "tokens_out": fleet["tokens_out"],
         "tok_per_s": round(fleet["tokens_out"] / wall, 1),
         "fleet_ticks": fleet["fleet_ticks"],
-        "p50_latency_ticks": float(np.percentile(lat, 50)),
-        "p99_latency_ticks": float(np.percentile(lat, 99)),
+        "p50_latency_ticks": percentile(lat, 50),
+        "p99_latency_ticks": percentile(lat, 99),
         "spillovers": fleet["spillovers"],
         "reroutes": fleet["reroutes"],
         "generated": [r.out_tokens[:8] for r in done[:4]],
@@ -216,8 +258,7 @@ def run_fleet(cfg, params, args) -> dict:
         out["reserved_page_imbalance"] = fleet["reserved_page_imbalance"]
     if ctl is not None:
         out["autoscale"] = ctl.summary()
-        if args.events_out:
-            out["events_written"] = ctl.log.write_jsonl(args.events_out)
+    _finish_obs(out, args, tracer, profiler, router.expose, ctl=ctl)
     return out
 
 
@@ -233,6 +274,11 @@ def run_paged(cfg, params, args) -> dict:
         num_pages=start_slots * n_pg + 1 if args.autoscale else None,
         max_seq_len=max_seq, prefix_cache=args.prefix_cache, tp=args.tp,
         prefill_budget=args.chunked_prefill)
+    tracer = None
+    if args.trace_out or (args.events_out and not args.autoscale):
+        tracer = Tracer()
+        sched.set_tracer(tracer)
+    profiler = sched.enable_profiling() if args.profile else None
     ctl = None
     if args.autoscale:
         from repro.autoscale import AutoscaleController, CapacityBands
@@ -272,8 +318,7 @@ def run_paged(cfg, params, args) -> dict:
     out.update(_prefix_stats(sched.stats))
     if ctl is not None:
         out["autoscale"] = ctl.summary()
-        if args.events_out:
-            out["events_written"] = ctl.log.write_jsonl(args.events_out)
+    _finish_obs(out, args, tracer, profiler, sched.registry.expose, ctl=ctl)
     return out
 
 
@@ -342,15 +387,31 @@ def main() -> None:
                     "controller moves whole replicas instead (see "
                     "docs/autoscaling.md)")
     ap.add_argument("--events-out", default=None,
-                    help="write the run's event log (scale decisions, "
-                    "lifecycle ops) as JSON lines for replay")
+                    help="write the run's event log as JSON lines for "
+                    "replay: scale decisions under --autoscale, the "
+                    "request-lifecycle trace otherwise")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="paged engine: write the request-lifecycle trace "
+                    "as Chrome trace-event JSON (open in Perfetto / "
+                    "chrome://tracing; see docs/observability.md)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="paged engine: dump the typed metric registries "
+                    "in Prometheus text exposition at end of run")
+    ap.add_argument("--profile", action="store_true",
+                    help="paged engine: wall-time every kernel dispatch "
+                    "and report modeled FLOPs/bytes + roofline fractions "
+                    "in the result JSON (read-only; tokens unchanged)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.autoscale and args.engine != "paged":
         ap.error("--autoscale requires --engine paged")
-    if args.events_out and not args.autoscale:
-        ap.error("--events-out requires --autoscale (the autoscale control "
-                 "loop is what emits events on this path)")
+    for flag, val in (("--events-out", args.events_out),
+                      ("--trace-out", args.trace_out),
+                      ("--metrics-out", args.metrics_out),
+                      ("--profile", args.profile)):
+        if val and args.engine != "paged":
+            ap.error(f"{flag} requires --engine paged (the static engine "
+                     "has no scheduler to observe)")
     if args.replicas > 1 and args.engine != "paged":
         ap.error("--replicas requires --engine paged (the fabric routes "
                  "over paged schedulers)")

@@ -1,0 +1,35 @@
+"""Deterministic observability plane for the serving fleet.
+
+* :mod:`repro.obs.metrics` — typed Counter/Gauge/Histogram registry with
+  log-spaced buckets, Prometheus text exposition, and the shared
+  nearest-rank percentile definition;
+* :mod:`repro.obs.trace` — request-lifecycle spans on the sim tick
+  clock, exported as Chrome trace-event JSON (Perfetto) or JSONL;
+* :mod:`repro.obs.slo` — SLO objectives with multi-window burn-rate
+  alerts feeding the autoscale ``TelemetryBus``;
+* :mod:`repro.obs.profile` — opt-in kernel dispatch timing with modeled
+  bytes/FLOPs and roofline-utilization fractions.
+
+Everything here is read-only over serving state: observability on vs
+off is byte-identical in emitted tokens (see tests/test_obs_plane.py).
+"""
+from repro.obs.metrics import (
+    Counter, Gauge, Histogram, MetricsRegistry, StatsView,
+    TICK_BUCKETS, SECONDS_BUCKETS, log_buckets, nearest_rank, percentile,
+)
+from repro.obs.trace import Tracer, Span, Instant, TICK_US
+from repro.obs.slo import (
+    SLObjective, SLOMonitor, histogram_threshold_source,
+    counter_ratio_source,
+)
+from repro.obs.profile import KernelProfiler, PEAK_FLOPS, HBM_BW
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "StatsView",
+    "TICK_BUCKETS", "SECONDS_BUCKETS", "log_buckets", "nearest_rank",
+    "percentile",
+    "Tracer", "Span", "Instant", "TICK_US",
+    "SLObjective", "SLOMonitor", "histogram_threshold_source",
+    "counter_ratio_source",
+    "KernelProfiler", "PEAK_FLOPS", "HBM_BW",
+]

@@ -1,0 +1,338 @@
+"""Typed metrics registry: counters, gauges, log-bucket histograms.
+
+The serving layers used to keep ad-hoc ``Dict[str, int]`` stats with four
+different shapes (``scheduler.stats``, ``router.stats``, ``fleet_stats``,
+autoscale samples) and every latency percentile came from numpy over
+retained samples in ``benchmarks/serve_bench.py``. This module gives the
+fleet one vocabulary:
+
+* ``Counter`` / ``Gauge`` — a named monotonic total / point-in-time value;
+* ``Histogram`` — fixed log-spaced buckets (``log_buckets``), so p50/p99/
+  p999 are computable in O(buckets) without retaining samples, and two
+  replicas' histograms merge by adding bucket counts (the fleet view);
+* ``MetricsRegistry`` — get-or-create by name, Prometheus-style text
+  exposition (``expose``);
+* ``StatsView`` — a ``MutableMapping`` facade over registry metrics that
+  preserves the existing ``stats`` dict contract (``stats["x"] += 1``,
+  ``dict(stats)``, ``stats.get``) while every mutation lands on a typed
+  metric, so ``stats()`` / ``fleet_stats()`` / ``shard_stats()`` keep
+  their return shapes and the registry sees every count.
+
+One shared percentile definition lives here too: ``percentile`` is the
+nearest-rank estimator used by both the benches (over retained samples)
+and ``Histogram.quantile`` (over bucket counts) — a histogram quantile is
+the containing bucket's upper bound, so it agrees with the sample
+nearest-rank within one bucket's relative error (the bucket growth
+factor; see tests/test_obs_metrics.py).
+"""
+from __future__ import annotations
+
+import bisect
+import math
+import re
+from collections.abc import MutableMapping
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry", "StatsView",
+           "log_buckets", "nearest_rank", "percentile",
+           "TICK_BUCKETS", "SECONDS_BUCKETS"]
+
+
+# ---------------------------------------------------------------- buckets --
+
+def log_buckets(lo: float, hi: float, per_decade: int = 4) -> Tuple[float, ...]:
+    """Strictly increasing log-spaced bucket bounds from ``lo`` until the
+    first bound >= ``hi``, ``per_decade`` buckets per factor of 10.
+
+    The growth factor ``10 ** (1/per_decade)`` bounds the relative error
+    of any quantile read from the histogram: a value lands in the bucket
+    whose upper bound is at most ``factor`` times the value.
+    """
+    if lo <= 0:
+        raise ValueError(f"log buckets need lo > 0, got {lo}")
+    if hi <= lo:
+        raise ValueError(f"log buckets need hi > lo, got [{lo}, {hi}]")
+    if per_decade < 1:
+        raise ValueError("per_decade must be >= 1")
+    step = 10.0 ** (1.0 / per_decade)
+    out = [float(lo)]
+    while out[-1] < hi:
+        out.append(out[-1] * step)
+    return tuple(out)
+
+
+# latency-in-ticks histograms (queue wait, TTFT, request latency): the sim
+# clock is integer ticks, max_seq_len-scale runs stay inside a few thousand
+TICK_BUCKETS = log_buckets(1.0, 4096.0, per_decade=4)
+# wall-clock seconds (per-tick step walls, kernel dispatch walls)
+SECONDS_BUCKETS = log_buckets(1e-6, 64.0, per_decade=4)
+
+
+# ------------------------------------------------------------- percentile --
+
+def nearest_rank(values: Iterable[float], q: float) -> float:
+    """Nearest-rank percentile: the smallest sample with at least ``q``%
+    of the sample at or below it (rank ``ceil(q/100 * N)``, 1-based).
+
+    Unlike ``np.percentile``'s interpolation this always returns an
+    observed value, which is what a bucketed histogram can agree with —
+    the single percentile definition shared by ``benchmarks/serve_bench``
+    and ``Histogram.quantile``.
+    """
+    vals = sorted(float(v) for v in values)
+    if not vals:
+        raise ValueError("percentile of an empty sample")
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"percentile q must be in [0, 100], got {q}")
+    rank = max(1, math.ceil(q / 100.0 * len(vals)))
+    return vals[rank - 1]
+
+
+percentile = nearest_rank
+
+
+# ---------------------------------------------------------------- metrics --
+
+class Counter:
+    """Monotonic total. ``value`` is directly settable so ``StatsView``
+    can preserve the ``stats[k] += n`` idiom."""
+    kind = "counter"
+    __slots__ = ("name", "help", "unit", "value")
+
+    def __init__(self, name: str, help: str = "", unit: str = ""):
+        self.name = name
+        self.help = help
+        self.unit = unit
+        self.value = 0
+
+    def inc(self, n=1) -> None:
+        self.value += n
+
+
+class Gauge:
+    """Point-in-time value (e.g. ``peak_pages``, live slot count)."""
+    kind = "gauge"
+    __slots__ = ("name", "help", "unit", "value")
+
+    def __init__(self, name: str, help: str = "", unit: str = ""):
+        self.name = name
+        self.help = help
+        self.unit = unit
+        self.value = 0
+
+    def set(self, v) -> None:
+        self.value = v
+
+
+class Histogram:
+    """Fixed-bound histogram: ``counts[i]`` observations in
+    ``(bounds[i-1], bounds[i]]`` plus one overflow bucket past the end.
+
+    ``quantile`` is nearest-rank over the cumulative counts and returns
+    the containing bucket's *upper bound* (``inf`` for overflow) — an
+    upper estimate within one bucket's relative error of the sample
+    percentile for values inside the bucket range.
+    """
+    kind = "histogram"
+    __slots__ = ("name", "help", "unit", "bounds", "counts", "sum")
+
+    def __init__(self, name: str, buckets: Sequence[float],
+                 help: str = "", unit: str = ""):
+        bounds = tuple(float(b) for b in buckets)
+        if not bounds:
+            raise ValueError(f"histogram {name}: needs at least one bucket")
+        if any(b2 <= b1 for b1, b2 in zip(bounds, bounds[1:])):
+            raise ValueError(
+                f"histogram {name}: bounds must be strictly increasing, "
+                f"got {bounds}")
+        self.name = name
+        self.help = help
+        self.unit = unit
+        self.bounds = bounds
+        self.counts: List[int] = [0] * (len(bounds) + 1)
+        self.sum = 0.0
+
+    @property
+    def count(self) -> int:
+        return sum(self.counts)
+
+    def observe(self, v) -> None:
+        v = float(v)
+        self.sum += v
+        self.counts[bisect.bisect_left(self.bounds, v)] += 1
+
+    def merge(self, other: "Histogram") -> "Histogram":
+        """Add ``other``'s counts into this histogram (the per-replica ->
+        fleet aggregation); bounds must match exactly."""
+        if other.bounds != self.bounds:
+            raise ValueError(
+                f"cannot merge histogram {other.name} into {self.name}: "
+                f"bucket bounds differ")
+        self.counts = [a + b for a, b in zip(self.counts, other.counts)]
+        self.sum += other.sum
+        return self
+
+    def quantile(self, q: float) -> float:
+        """O(buckets) nearest-rank quantile; 0.0 on an empty histogram,
+        ``inf`` when the rank lands in the overflow bucket."""
+        n = self.count
+        if n == 0:
+            return 0.0
+        if not 0.0 <= q <= 100.0:
+            raise ValueError(f"quantile q must be in [0, 100], got {q}")
+        rank = max(1, math.ceil(q / 100.0 * n))
+        cum = 0
+        for i, c in enumerate(self.counts):
+            cum += c
+            if cum >= rank:
+                return self.bounds[i] if i < len(self.bounds) else math.inf
+        return math.inf                      # pragma: no cover - unreachable
+
+
+# ----------------------------------------------------------------- registry --
+
+_NAME_RE = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def _expo_val(v) -> str:
+    f = float(v)
+    if math.isinf(f):
+        return "+Inf"
+    if f.is_integer():
+        return str(int(f))
+    return repr(f)
+
+
+def _expo_labels(labels: Dict[str, str]) -> str:
+    if not labels:
+        return ""
+    inner = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+    return "{" + inner + "}"
+
+
+class MetricsRegistry:
+    """Named metrics with get-or-create semantics and text exposition.
+
+    One registry per control plane: each scheduler owns one (its replica's
+    metrics), the router owns a fleet-level one; ``labels`` (e.g.
+    ``{"replica": "2", "role": "decode"}``) are applied to every sample at
+    exposition time so the fleet's concatenated output stays unambiguous.
+    """
+
+    def __init__(self, namespace: str = "repro",
+                 labels: Optional[Dict[str, str]] = None):
+        self.namespace = namespace
+        self.labels: Dict[str, str] = dict(labels or {})
+        self._metrics: Dict[str, object] = {}
+
+    def _get(self, cls, name: str, help: str, unit: str, **kw):
+        m = self._metrics.get(name)
+        if m is None:
+            m = cls(name, help=help, unit=unit, **kw)
+            self._metrics[name] = m
+        elif not isinstance(m, cls):
+            raise TypeError(
+                f"metric {name!r} already registered as {m.kind}, "
+                f"not {cls.kind}")
+        return m
+
+    def counter(self, name: str, help: str = "", unit: str = "") -> Counter:
+        return self._get(Counter, name, help, unit)
+
+    def gauge(self, name: str, help: str = "", unit: str = "") -> Gauge:
+        return self._get(Gauge, name, help, unit)
+
+    def histogram(self, name: str,
+                  buckets: Sequence[float] = TICK_BUCKETS,
+                  help: str = "", unit: str = "") -> Histogram:
+        return self._get(Histogram, name, help, unit, buckets=buckets)
+
+    def get(self, name: str):
+        return self._metrics.get(name)
+
+    def metrics(self) -> List[object]:
+        return list(self._metrics.values())
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._metrics
+
+    # -------------------------------------------------------- exposition --
+    def expose(self, extra_labels: Optional[Dict[str, str]] = None) -> str:
+        """Prometheus text exposition of every registered metric."""
+        labels = {**self.labels, **(extra_labels or {})}
+        lines: List[str] = []
+        for m in self._metrics.values():
+            full = _NAME_RE.sub("_", f"{self.namespace}_{m.name}")
+            if m.help:
+                lines.append(f"# HELP {full} {m.help}")
+            lines.append(f"# TYPE {full} {m.kind}")
+            if isinstance(m, Histogram):
+                cum = 0
+                for bound, c in zip(m.bounds, m.counts):
+                    cum += c
+                    lab = _expo_labels({**labels, "le": _expo_val(bound)})
+                    lines.append(f"{full}_bucket{lab} {cum}")
+                lab = _expo_labels({**labels, "le": "+Inf"})
+                lines.append(f"{full}_bucket{lab} {m.count}")
+                lines.append(f"{full}_sum{_expo_labels(labels)} "
+                             f"{_expo_val(m.sum)}")
+                lines.append(f"{full}_count{_expo_labels(labels)} {m.count}")
+            else:
+                lines.append(f"{full}{_expo_labels(labels)} "
+                             f"{_expo_val(m.value)}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
+
+# ---------------------------------------------------------------- StatsView --
+
+class StatsView(MutableMapping):
+    """The scheduler/router ``stats`` dict, re-plumbed onto the registry.
+
+    Every existing idiom keeps working — ``stats["x"] += 1`` (read +
+    write-back through the metric), ``stats["peak"] = max(...)``,
+    ``dict(stats)``, ``stats.get(k, 0)``, stat-delta dict comprehensions —
+    while each key is backed by a live ``Counter``/``Gauge``, so the typed
+    registry (and its exposition) sees the same numbers the legacy dict
+    consumers do. The key set is fixed at construction: adding or deleting
+    keys raises, which is what kept the four ad-hoc dicts shape-compatible
+    by convention and is now enforced.
+    """
+
+    def __init__(self, metrics: Dict[str, object]):
+        self._m = dict(metrics)
+
+    def __getitem__(self, key):
+        return self._m[key].value
+
+    def __setitem__(self, key, value) -> None:
+        try:
+            self._m[key].value = value
+        except KeyError:
+            raise KeyError(
+                f"stats key {key!r} is not registered (keys are fixed at "
+                f"construction: {sorted(self._m)})") from None
+
+    def __delitem__(self, key) -> None:
+        raise TypeError("stats keys are fixed; cannot delete")
+
+    def __iter__(self):
+        return iter(self._m)
+
+    def __len__(self) -> int:
+        return len(self._m)
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, (dict, StatsView)):
+            return dict(self) == dict(other)
+        return NotImplemented
+
+    def __ne__(self, other) -> bool:
+        eq = self.__eq__(other)
+        return eq if eq is NotImplemented else not eq
+
+    def metric(self, key: str):
+        """The underlying ``Counter``/``Gauge`` object for ``key``."""
+        return self._m[key]
+
+    def __repr__(self) -> str:
+        return f"StatsView({dict(self)!r})"

@@ -1,0 +1,143 @@
+"""Opt-in kernel profiling: wall time + modeled bytes/FLOPs per dispatch.
+
+``KernelProfiler`` records every paged-decode / prefill dispatch the
+serving stack makes: per-call wall time (after ``jax.block_until_ready``
+so async dispatch doesn't under-report), plus *modeled* work — FLOPs
+from the active-parameter count and bytes-moved from the weight +
+paged-KV traffic the call implies. Dividing modeled work by the machine
+peaks gives a roofline-utilization fraction per kernel kind:
+
+    frac = max(flops / PEAK_FLOPS, bytes / HBM_BW) / wall_seconds
+
+i.e. how close the call came to the speed-of-light time its heavier
+bottleneck allows (1.0 = on the roofline; CPU interpret-mode runs will
+sit far below it, which is itself the point of reporting the fraction).
+
+Two attachment styles:
+
+* scheduler-level — ``ContinuousBatchingScheduler.enable_profiling()``
+  times whole dispatches with token/context detail (decode batch size,
+  prefill chunk length);
+* ops-level — ``repro.kernels.ops.set_profile_hook(profiler.hook())``
+  times individual kernel entry points with byte counts taken from the
+  actual array arguments.
+
+Profiling is read-only: it never touches model state, so profiled runs
+emit byte-identical tokens (same contract as tracing).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+__all__ = ["KernelProfiler", "PEAK_FLOPS", "HBM_BW"]
+
+# Modeled accelerator peaks (bf16 FLOPs, HBM bytes/s). These mirror the
+# planning constants in repro/launch/dryrun.py — duplicated here rather
+# than imported because dryrun sets XLA_FLAGS to force a 512-device host
+# platform at import time, which must never happen as a side effect of
+# turning profiling on.
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+class KernelProfiler:
+    """Accumulates per-kind dispatch timings and modeled work.
+
+    ``cfg`` (a model config) enables the modeled-bytes/FLOPs defaults:
+    2 * active_params FLOPs per generated token, weight bytes + paged-KV
+    bytes per token of attended context. Without ``cfg`` only wall time
+    and explicitly-passed work are recorded.
+    """
+
+    def __init__(self, cfg: Any = None, *, tp: int = 1,
+                 dtype_bytes: int = 2, peak_flops: float = PEAK_FLOPS,
+                 hbm_bw: float = HBM_BW) -> None:
+        self.cfg = cfg
+        self.tp = max(1, int(tp))
+        self.peak_flops = float(peak_flops) * self.tp
+        self.hbm_bw = float(hbm_bw) * self.tp
+        self.enabled = True
+        self._param_bytes = 0.0
+        self._active_params = 0.0
+        self._kv_bytes_per_token = 0.0
+        if cfg is not None:
+            # late import keeps `import repro.obs` free of serving deps
+            from repro.serving import paged_cache as PC
+            self._active_params = float(cfg.active_param_count())
+            self._param_bytes = self._active_params * dtype_bytes
+            self._kv_bytes_per_token = float(PC.page_bytes_per_token(cfg))
+        self.records: Dict[str, Dict[str, float]] = {}
+
+    # ------------------------------------------------------------ record --
+    def _bucket(self, kind: str) -> Dict[str, float]:
+        return self.records.setdefault(kind, {
+            "calls": 0.0, "wall_s": 0.0,
+            "modeled_flops": 0.0, "modeled_bytes": 0.0,
+        })
+
+    def record(self, kind: str, wall_s: float, *, tokens: int = 0,
+               ctx_tokens: int = 0, flops: Optional[float] = None,
+               bytes_moved: Optional[float] = None) -> None:
+        """One dispatch: ``tokens`` generated/processed, ``ctx_tokens`` of
+        KV context attended. FLOPs/bytes default to the cfg-derived model
+        and can be overridden per call."""
+        if not self.enabled:
+            return
+        if flops is None:
+            flops = 2.0 * self._active_params * tokens
+        if bytes_moved is None:
+            bytes_moved = (self._param_bytes
+                           + self._kv_bytes_per_token * (tokens + ctx_tokens))
+        b = self._bucket(kind)
+        b["calls"] += 1
+        b["wall_s"] += float(wall_s)
+        b["modeled_flops"] += float(flops)
+        b["modeled_bytes"] += float(bytes_moved)
+
+    def record_op(self, kind: str, wall_s: float, args: Any) -> None:
+        """Ops-level record: bytes = actual array traffic (sum of argument
+        buffer sizes), no FLOP model."""
+        if not self.enabled:
+            return
+        nbytes = sum(getattr(leaf, "nbytes", 0)
+                     for leaf in jax.tree_util.tree_leaves(args))
+        self.record(kind, wall_s, flops=0.0, bytes_moved=float(nbytes))
+
+    def hook(self) -> Callable[[str, float, Any], None]:
+        """Adapter for ``repro.kernels.ops.set_profile_hook``."""
+        return self.record_op
+
+    def timed(self, kind: str, fn: Callable[..., Any], *args: Any,
+              tokens: int = 0, ctx_tokens: int = 0, **kw: Any) -> Any:
+        """Call ``fn``, block on its outputs, record the wall time."""
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        out = jax.block_until_ready(out)
+        self.record(kind, time.perf_counter() - t0,
+                    tokens=tokens, ctx_tokens=ctx_tokens)
+        return out
+
+    # ----------------------------------------------------------- report --
+    def summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-kind totals plus the roofline-utilization fraction:
+        modeled speed-of-light time (max of compute- and bandwidth-bound
+        times) over measured wall time."""
+        out: Dict[str, Dict[str, float]] = {}
+        for kind, b in sorted(self.records.items()):
+            wall = b["wall_s"]
+            sol = max(b["modeled_flops"] / self.peak_flops,
+                      b["modeled_bytes"] / self.hbm_bw)
+            out[kind] = {
+                "calls": int(b["calls"]),
+                "wall_s": wall,
+                "modeled_flops": b["modeled_flops"],
+                "modeled_bytes": b["modeled_bytes"],
+                "roofline_frac": (sol / wall) if wall > 0 else 0.0,
+            }
+        return out
+
+    def reset(self) -> None:
+        self.records.clear()

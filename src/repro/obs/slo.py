@@ -1,0 +1,171 @@
+"""SLO objectives and multi-window burn-rate monitors.
+
+An ``SLObjective`` states a target fraction of *good* events (e.g. "99%
+of ticks complete within 8 simulated ticks of latency", "99.5% of
+admissions are not blocked"). An ``SLOMonitor`` watches a cumulative
+``(bad, total)`` counter pair and computes the **burn rate** over two
+windows:
+
+    burn = (bad / total) / (1 - target)
+
+A burn of 1.0 consumes the error budget exactly at the sustainable pace;
+a burn of 2.0 exhausts it in half the period. Following the multi-window
+pattern (Google SRE workbook), the alert *fires* only when BOTH a short
+window (fast reaction) and a long window (sustained evidence, not a
+blip) exceed ``fire_burn``, and *clears* only when both drop below
+``clear_burn`` — the fire/clear gap is the hysteresis that keeps a burn
+hovering near threshold from flapping the alert.
+
+Monitors plug into the autoscale loop: ``FleetController.tick()`` /
+``AutoscaleController.tick()`` call ``sample(now)`` and merge the
+returned ``slo_<name>_*`` signals into the ``TelemetryBus`` sample, so
+scaling policies can target burn rates and alert state exactly like any
+other telemetry signal (``Threshold("slo_ttft_firing", hi=0.5)``).
+
+Sources adapt the metrics registry to the ``(bad, total)`` contract:
+
+* ``histogram_threshold_source(hist, threshold)`` — bad = observations
+  in buckets at or above ``threshold``;
+* ``counter_ratio_source(bad, total)`` — e.g. admission blocks over
+  admission attempts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Tuple
+
+from repro.obs.metrics import Counter, Histogram
+
+__all__ = [
+    "SLObjective", "SLOMonitor",
+    "histogram_threshold_source", "counter_ratio_source",
+]
+
+# (time, bad_cum, total_cum)
+_Sample = Tuple[float, float, float]
+
+
+@dataclasses.dataclass(frozen=True)
+class SLObjective:
+    """A good-fraction target: ``target`` of all events should be good."""
+    name: str
+    target: float                       # e.g. 0.99 -> 1% error budget
+    description: str = ""
+
+    def __post_init__(self) -> None:
+        if not 0.0 < self.target < 1.0:
+            raise ValueError(
+                f"SLO target must be in (0, 1), got {self.target} "
+                f"for {self.name!r}")
+
+    @property
+    def error_budget(self) -> float:
+        return 1.0 - self.target
+
+
+class SLOMonitor:
+    """Multi-window burn-rate alert over a cumulative (bad, total) source.
+
+    ``source()`` must return monotonically non-decreasing cumulative
+    counts; the monitor differentiates them over the short and long
+    windows itself. Windows are in the same time unit as the ``t``
+    passed to ``sample`` (controller ticks by default).
+    """
+
+    def __init__(self, slo: SLObjective,
+                 source: Callable[[], Tuple[float, float]], *,
+                 short_window: float = 20.0, long_window: float = 100.0,
+                 fire_burn: float = 2.0, clear_burn: float = 1.0) -> None:
+        if short_window <= 0 or long_window < short_window:
+            raise ValueError(
+                f"need 0 < short_window <= long_window, got "
+                f"{short_window}/{long_window}")
+        if clear_burn > fire_burn:
+            raise ValueError(
+                f"clear_burn {clear_burn} must not exceed fire_burn "
+                f"{fire_burn} (the gap is the hysteresis)")
+        self.slo = slo
+        self.source = source
+        self.short_window = float(short_window)
+        self.long_window = float(long_window)
+        self.fire_burn = float(fire_burn)
+        self.clear_burn = float(clear_burn)
+        self.firing = False
+        self.transitions: List[Dict[str, Any]] = []
+        self._samples: List[_Sample] = []
+
+    def _burn(self, now: float, window: float) -> float:
+        """Burn rate over [now - window, now] from the cumulative samples."""
+        if not self._samples:
+            return 0.0
+        lo = now - window
+        # oldest sample still inside the window; fall back to the earliest
+        # so startup (short history) uses what it has
+        base = self._samples[0]
+        for s in self._samples:
+            if s[0] >= lo:
+                base = s
+                break
+        t1, bad1, total1 = self._samples[-1]
+        _, bad0, total0 = base
+        d_total = total1 - total0
+        if d_total <= 0:
+            return 0.0
+        bad_frac = (bad1 - bad0) / d_total
+        return bad_frac / self.slo.error_budget
+
+    def sample(self, now: float) -> Dict[str, float]:
+        """Pull the source, update alert state, return bus signals."""
+        bad, total = self.source()
+        self._samples.append((float(now), float(bad), float(total)))
+        # keep just enough history to cover the long window
+        lo = now - self.long_window
+        while len(self._samples) > 2 and self._samples[1][0] <= lo:
+            self._samples.pop(0)
+
+        short = self._burn(now, self.short_window)
+        long_ = self._burn(now, self.long_window)
+        if not self.firing and short > self.fire_burn and long_ > self.fire_burn:
+            self.firing = True
+            self.transitions.append({"t": now, "to": "firing",
+                                     "short": short, "long": long_})
+        elif self.firing and short < self.clear_burn and long_ < self.clear_burn:
+            self.firing = False
+            self.transitions.append({"t": now, "to": "clear",
+                                     "short": short, "long": long_})
+        n = self.slo.name
+        return {f"slo_{n}_burn_short": short,
+                f"slo_{n}_burn_long": long_,
+                f"slo_{n}_firing": 1.0 if self.firing else 0.0}
+
+
+def histogram_threshold_source(hist: Histogram,
+                               threshold: float) -> Callable[[], Tuple[float, float]]:
+    """(bad, total) from a histogram: bad = observations that landed in a
+    bucket whose *lower* bound is at or above ``threshold`` — i.e. values
+    guaranteed to exceed it. Observations inside the bucket containing
+    the threshold count as good (conservative-under: the monitor never
+    over-reports badness because of bucket granularity)."""
+    bounds = hist.bounds
+
+    def source() -> Tuple[float, float]:
+        bad = 0.0
+        for i, c in enumerate(hist.counts):
+            lower = bounds[i - 1] if i > 0 else 0.0
+            if i == len(bounds):        # overflow bucket: above every bound
+                lower = bounds[-1]
+            if lower >= threshold:
+                bad += c
+        return bad, float(hist.count)
+
+    return source
+
+
+def counter_ratio_source(bad: Counter,
+                         total: Counter) -> Callable[[], Tuple[float, float]]:
+    """(bad, total) straight from two cumulative counters — e.g.
+    ``serving_admit_blocked`` over admission attempts."""
+    def source() -> Tuple[float, float]:
+        return float(bad.value), float(total.value)
+
+    return source

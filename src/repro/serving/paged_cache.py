@@ -890,3 +890,11 @@ def dense_cache_bytes(cfg: ModelConfig, batch: int, capacity: int) -> int:
     """Footprint of the dense engine's capacity-padded ring buffers, for the
     memory comparison in ``benchmarks/serve_bench.py``."""
     return page_bytes_per_token(cfg) * batch * capacity
+
+
+def migration_bytes(cfg: ModelConfig, num_pages: int, page_size: int) -> int:
+    """KV bytes a disaggregation page handoff moves for ``num_pages``
+    donor pages — all layers, all shards (the whole logical page travels
+    whatever the tp split is). The router's trace detail for
+    ``page_migration`` events."""
+    return page_bytes_per_token(cfg) * num_pages * page_size

@@ -46,6 +46,12 @@ class ServingReplica:
             raise ValueError("pass hostname or hostnames, not both")
         self.replica_id = replica_id
         self.sched = sched
+        # the observability plane's identity for this member: lifecycle
+        # spans carry the replica id, and the registry's exposition labels
+        # every sample so a fleet's concatenated /metrics stays unambiguous
+        sched.replica_id = replica_id
+        sched.registry.labels.update({"replica": str(replica_id),
+                                      "role": sched.role})
         self.hostnames: List[str] = (list(hostnames) if hostnames
                                      else [hostname] if hostname else [])
         if sched.tp > 1 and self.hostnames \

@@ -65,6 +65,9 @@ import time
 from typing import Any, Deque, Dict, List, Optional, Sequence
 
 from repro.configs.base import ModelConfig
+from repro.obs.metrics import (Histogram, MetricsRegistry, StatsView,
+                               SECONDS_BUCKETS, TICK_BUCKETS)
+from repro.serving import paged_cache as PC
 from repro.serving.replica import ServingReplica
 from repro.serving.request import Request, make_request, worst_case_pages
 from repro.serving.scheduler import supports_paged
@@ -122,9 +125,25 @@ class ServingRouter:
         self._arrival: Dict[int, int] = {}   # rid -> fleet arrival tick
         # continuation -> original request (re-routes after a replica loss)
         self._parents: Dict[int, Request] = {}
-        self.stats: Dict[str, int] = {"routed": 0, "spillovers": 0,
-                                      "reroutes": 0, "replicas_added": 0,
-                                      "replicas_removed": 0, "migrations": 0}
+        # fleet-level observability plane (repro.obs): the router's own
+        # counters live on a fleet registry (StatsView keeps the dict
+        # idioms), plus fleet-clock latency and per-replica step-wall
+        # histograms. ``set_tracer`` threads one lifecycle tracer through
+        # every replica on the *fleet* clock; ``enable_profiling`` shares
+        # one kernel profiler fleet-wide. All of it is read-only.
+        self.registry = MetricsRegistry(labels={"plane": "fleet"})
+        self.stats = StatsView({
+            k: self.registry.counter(f"fleet_{k}")
+            for k in ("routed", "spillovers", "reroutes", "replicas_added",
+                      "replicas_removed", "migrations")})
+        self.h_latency = self.registry.histogram(
+            "fleet_latency_ticks", TICK_BUCKETS, unit="ticks",
+            help="fleet-clock ticks from arrival to finish")
+        self.h_tick_wall = self.registry.histogram(
+            "fleet_tick_wall_seconds", SECONDS_BUCKETS, unit="seconds",
+            help="wall seconds of one replica step within a fleet tick")
+        self.tracer = None
+        self._profiler = None
         # per-tick per-replica step wall times (seconds), recorded only when
         # a bench turns it on: [{replica_id: (role, dt)}, ...]
         self.record_timing = False
@@ -132,6 +151,9 @@ class ServingRouter:
         # counters of replicas that already left the fleet, so fleet totals
         # survive drain-remove and failure
         self._retired_stats: Dict[str, int] = {}
+        # same, for departed replicas' latency histograms (bucket counts
+        # merge exactly, so fleet quantiles survive churn too)
+        self._retired_hists: Dict[str, Histogram] = {}
         # (tick, [reserved_pages per live replica]) when >= 2 are live and
         # every one has work — the steady-state balance samples
         self.balance_log: List[tuple] = []
@@ -161,7 +183,62 @@ class ServingRouter:
         self.replicas[rep.replica_id] = rep
         self._next_replica += 1
         self.stats["replicas_added"] += 1
+        self._wire_obs(rep)
         return rep
+
+    # ------------------------------------------------------- observability --
+    def _wire_obs(self, rep: ServingReplica) -> None:
+        """Thread the fleet tracer/profiler into a (new) replica."""
+        if self.tracer is not None:
+            rep.sched.set_tracer(self.tracer, own_clock=False)
+            self.tracer.set_process_name(
+                rep.replica_id, f"replica-{rep.replica_id} ({rep.role})")
+        if self._profiler is not None:
+            rep.sched.profiler = self._profiler
+
+    def set_tracer(self, tracer) -> None:
+        """Attach one lifecycle tracer fleet-wide. Every replica's hooks
+        stamp the *fleet* clock (replica clocks drift through idle-gap
+        skipping), so all spans share a single timeline."""
+        self.tracer = tracer
+        for rep in self.replicas.values():
+            self._wire_obs(rep)
+
+    def enable_profiling(self, profiler=None):
+        """One shared kernel profiler across the fleet (fleet-total
+        dispatch timings; see ``repro.obs.profile``)."""
+        if profiler is None:
+            from repro.obs.profile import KernelProfiler
+            profiler = KernelProfiler(self.cfg, tp=self.replica_kw["tp"])
+        self._profiler = profiler
+        for rep in self.replicas.values():
+            rep.sched.profiler = profiler
+        return profiler
+
+    def expose(self) -> str:
+        """Prometheus text exposition: the fleet registry plus every live
+        replica's registry (labeled per replica by ``ServingReplica``)."""
+        parts = [self.registry.expose()]
+        for rep in sorted(self.replicas.values(),
+                          key=lambda r: r.replica_id):
+            parts.append(rep.sched.registry.expose())
+        return "".join(parts)
+
+    def fleet_histogram(self, name: str) -> Optional[Histogram]:
+        """Fleet-wide merge of a per-replica histogram (live replicas plus
+        retired ones); None if no replica ever registered it."""
+        agg: Optional[Histogram] = None
+        sources = [rep.sched.registry.get(name)
+                   for rep in sorted(self.replicas.values(),
+                                     key=lambda r: r.replica_id)]
+        sources.append(self._retired_hists.get(name))
+        for m in sources:
+            if not isinstance(m, Histogram):
+                continue
+            if agg is None:
+                agg = Histogram(name, m.bounds, help=m.help, unit=m.unit)
+            agg.merge(m)
+        return agg
 
     def drain_replica(self, replica_id: int) -> ServingReplica:
         rep = self.replicas[replica_id]
@@ -189,6 +266,12 @@ class ServingRouter:
     def _retire_stats(self, rep: ServingReplica) -> None:
         for k, v in rep.stats().items():
             self._retired_stats[k] = self._retired_stats.get(k, 0) + v
+        for m in rep.sched.registry.metrics():
+            if isinstance(m, Histogram):
+                agg = self._retired_hists.setdefault(
+                    m.name, Histogram(m.name, m.bounds, help=m.help,
+                                      unit=m.unit))
+                agg.merge(m)
 
     def fail_replica(self, replica_id: int) -> List[Request]:
         """Replica death (heartbeat DEAD / spot preemption): surrender its
@@ -203,6 +286,9 @@ class ServingRouter:
             self.stats["replicas_removed"] += 1
             return []
         lost = rep.fail()
+        if self.tracer is not None:
+            self.tracer.instant("failover", t=self.step_idx,
+                                replica=replica_id, lost=len(lost))
         rerouted = []
         for req in lost:
             rerouted.append(self._requeue(req))
@@ -226,6 +312,11 @@ class ServingRouter:
     def _requeue(self, req: Request) -> Request:
         """Queue the continuation of a lost stream at the *front* (it has
         already waited once; re-prefill as soon as capacity exists)."""
+        tr = self.tracer
+        if tr is not None:
+            # the lost stream's open span (whichever state it died in)
+            for name in ("decode", "parked", "queued"):
+                tr.end(name, req.rid, t=self.step_idx, lost=True)
         orig = self._parents.pop(req.rid, req)   # chain continuations
         orig.replica = None
         orig.reroutes += 1
@@ -242,6 +333,11 @@ class ServingRouter:
         self._rid += 1
         self._parents[cont.rid] = orig
         self.waiting.appendleft(cont)
+        if tr is not None:
+            tr.instant("reroute", rid=req.rid, t=self.step_idx,
+                       cont=cont.rid,
+                       emitted=len(orig.out_tokens))
+            tr.begin("queued", cont.rid, t=self.step_idx)
         return cont
 
     # --------------------------------------------------------- submission --
@@ -264,6 +360,8 @@ class ServingRouter:
                 "prefill")
         self._arrival[req.rid] = arrival_step
         self.waiting.append(req)
+        if self.tracer is not None:
+            self.tracer.begin("queued", req.rid, t=arrival_step)
         return req
 
     # ------------------------------------------------------------ routing --
@@ -310,6 +408,11 @@ class ServingRouter:
                 if rep.fits(req):
                     if i > 0:
                         self.stats["spillovers"] += 1
+                    if self.tracer is not None:
+                        self.tracer.instant("routed", rid=req.rid,
+                                            t=self.step_idx,
+                                            replica=rep.replica_id,
+                                            spillover=i > 0)
                     rep.accept(req)
                     routed += 1
                     placed = True
@@ -338,6 +441,7 @@ class ServingRouter:
         req.finish_step = self.step_idx
         req.arrival_step = self._arrival.pop(req.rid, req.arrival_step)
         self.finished.append(req)
+        self.h_latency.observe(req.finish_step - req.arrival_step)
 
     def _migrate_ready(self) -> int:
         """Hand parked prefilled streams to decode-capable replicas.
@@ -360,8 +464,18 @@ class ServingRouter:
                     key=lambda r: (r.outstanding_pages, r.replica_id))
                 for t in targets:
                     if t.can_adopt(req):
+                        n_pages = len(donor.sched.slot_pages[slot])
                         t.adopt(req, donor, slot)
                         moved += 1
+                        if self.tracer is not None:
+                            self.tracer.instant(
+                                "page_migration", rid=req.rid,
+                                t=self.step_idx, replica=t.replica_id,
+                                src=donor.replica_id, dst=t.replica_id,
+                                pages=n_pages,
+                                bytes=PC.migration_bytes(
+                                    self.cfg, n_pages,
+                                    self.replica_kw["page_size"]))
                         break
         self.stats["migrations"] += moved
         return moved
@@ -371,6 +485,8 @@ class ServingRouter:
         migrate parked prefilled streams to decode replicas, collect
         finishes (joining re-routed continuations to their originals),
         advance the fleet clock."""
+        if self.tracer is not None:
+            self.tracer.set_tick(self.step_idx)
         self.route_due()
         done_now: List[Request] = []
         timing: Dict[int, tuple] = {}
@@ -378,12 +494,12 @@ class ServingRouter:
                           key=lambda r: r.replica_id):
             if rep.failed:
                 continue
-            if self.record_timing:
-                t0 = time.perf_counter()
+            t0 = time.perf_counter()
             stepped = rep.step(max_fuse=max_fuse)
+            dt = time.perf_counter() - t0
+            self.h_tick_wall.observe(dt)
             if self.record_timing:
-                timing[rep.replica_id] = (rep.role,
-                                          time.perf_counter() - t0)
+                timing[rep.replica_id] = (rep.role, dt)
             for req in stepped:
                 orig = self._parents.pop(req.rid, None)
                 if orig is not None:

@@ -89,6 +89,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.models.transformer import lm_forward
+from repro.obs.metrics import MetricsRegistry, StatsView, TICK_BUCKETS
 from repro.parallel.context import ShardGroup
 from repro.serving import paged_cache as PC
 from repro.serving.request import Request, make_request
@@ -204,14 +205,39 @@ class ContinuousBatchingScheduler:
         # a controller may promise future pool growth up to this many pages
         # so submit() validates against the band ceiling, not today's pool
         self.capacity_hint: Optional[int] = None
-        self.stats: Dict[str, int] = {"decode_steps": 0, "tokens_out": 0,
-                                      "prefills": 0, "peak_pages": 0,
-                                      "admit_blocked": 0, "resizes": 0,
-                                      "prefix_hits": 0, "prefix_misses": 0,
-                                      "cached_tokens": 0, "cow_forks": 0,
-                                      "prefill_chunk_tokens": 0,
-                                      "migrations_in": 0,
-                                      "migrations_out": 0}
+        # observability plane (repro.obs): every legacy ``stats`` key is
+        # backed by a typed registry metric — StatsView keeps the dict
+        # idioms (``stats["x"] += 1``, ``dict(stats)``) working while the
+        # registry gains Prometheus exposition and latency histograms.
+        # All hooks are read-only over scheduler state: tracing/metrics/
+        # profiling on vs off is byte-identical in emitted tokens.
+        self.replica_id: Optional[int] = None   # set by ServingReplica
+        self.tracer = None                      # set via set_tracer
+        self._trace_own_clock = True            # router flips: fleet clock
+        self.profiler = None                    # set via enable_profiling
+        self.registry = MetricsRegistry()
+        _gauges = ("peak_pages",)
+        self.stats = StatsView({
+            k: (self.registry.gauge if k in _gauges
+                else self.registry.counter)(f"serving_{k}", unit=u)
+            for k, u in (("decode_steps", "ticks"), ("tokens_out", "tokens"),
+                         ("prefills", "requests"), ("peak_pages", "pages"),
+                         ("admit_blocked", "ticks"), ("resizes", ""),
+                         ("prefix_hits", "requests"),
+                         ("prefix_misses", "requests"),
+                         ("cached_tokens", "tokens"), ("cow_forks", "pages"),
+                         ("prefill_chunk_tokens", "tokens"),
+                         ("migrations_in", "streams"),
+                         ("migrations_out", "streams"))})
+        self.h_queue_wait = self.registry.histogram(
+            "serving_queue_wait_ticks", TICK_BUCKETS, unit="ticks",
+            help="ticks from due arrival to admission")
+        self.h_ttft = self.registry.histogram(
+            "serving_ttft_ticks", TICK_BUCKETS, unit="ticks",
+            help="ticks from due arrival to first output token")
+        self.h_latency = self.registry.histogram(
+            "serving_latency_ticks", TICK_BUCKETS, unit="ticks",
+            help="ticks from due arrival to finish")
 
         # donate the cache: pools are sized to fill HBM, so the step must
         # update them in place rather than double-buffer (cf. trainer.py)
@@ -347,6 +373,39 @@ class ContinuousBatchingScheduler:
             self._seq_suffix_fns[s] = jax.jit(fn, donate_argnums=(1,))
         return self._seq_suffix_fns[s]
 
+    # ------------------------------------------------------- observability --
+    def set_tracer(self, tracer, *, own_clock: bool = True) -> None:
+        """Attach a lifecycle tracer (``repro.obs.trace.Tracer``).
+
+        ``own_clock=False`` means somebody else — the fabric router —
+        drives ``tracer.t`` on the fleet clock, so hooks stamp that;
+        otherwise they stamp this scheduler's own ``step_idx``.
+        """
+        self.tracer = tracer
+        self._trace_own_clock = own_clock
+
+    def _tnow(self) -> float:
+        return (float(self.step_idx) if self._trace_own_clock
+                else self.tracer.t)
+
+    def enable_profiling(self, profiler=None):
+        """Opt-in kernel dispatch timing (``repro.obs.profile``): every
+        prefill/suffix/decode dispatch is wall-timed after
+        ``block_until_ready`` with its token/context detail. Read-only —
+        profiled runs emit byte-identical tokens."""
+        if profiler is None:
+            from repro.obs.profile import KernelProfiler
+            profiler = KernelProfiler(self.cfg, tp=self.tp)
+        self.profiler = profiler
+        return profiler
+
+    def _timed(self, kind: str, fn, *args, tokens: int = 0,
+               ctx_tokens: int = 0, **kw):
+        if self.profiler is None:
+            return fn(*args, **kw)
+        return self.profiler.timed(kind, fn, *args, tokens=tokens,
+                                   ctx_tokens=ctx_tokens, **kw)
+
     # ---------------------------------------------------------- submission --
     def submit(self, prompt, max_new_tokens: int,
                arrival_step: int = 0) -> Request:
@@ -375,6 +434,11 @@ class ContinuousBatchingScheduler:
                 f"request reserves {worst} pages but the pool only holds "
                 f"{cap} — it could never be admitted")
         self.waiting.append(req)
+        if self.tracer is not None:
+            # no-op when the fabric router already opened this span at its
+            # own submit (first opener wins — fleet clock beats replica's)
+            self.tracer.begin("queued", req.rid, t=req.arrival_step,
+                              replica=self.replica_id)
         return req
 
     # ----------------------------------------------------------- admission --
@@ -485,11 +549,29 @@ class ContinuousBatchingScheduler:
         req.out_tokens.append(first)
         self.stats["prefills"] += 1
         self.stats["tokens_out"] += 1
+        self.h_queue_wait.observe(req.admit_step - req.arrival_step)
+        self.h_ttft.observe(self.step_idx - req.arrival_step)
+        tr = self.tracer
+        if tr is not None:
+            now = self._tnow()
+            tr.end("queued", req.rid, t=now)
+            tr.instant("admitted", rid=req.rid, t=now,
+                       replica=self.replica_id, slot=slot, pages=len(pages),
+                       shared_pages=shared, cached_tokens=req.cached_tokens,
+                       prefix_hit=hit is not None)
+            tr.span("prefill", req.rid, now, now + 1,
+                    replica=self.replica_id, tokens=plen,
+                    cached_tokens=req.cached_tokens, pages=len(pages),
+                    shared_pages=shared)
         if req.done:                        # max_new_tokens == 1
             self._finish(slot)
             self._admit_done.append(req)
         elif self.role == "prefill":
             self.slot_parked[slot] = True   # awaiting page handoff
+            if tr is not None:
+                tr.begin("parked", req.rid, t=now, replica=self.replica_id)
+        elif tr is not None:
+            tr.begin("decode", req.rid, t=now, replica=self.replica_id)
 
     def _admit_full(self, req: Request, slot: int):
         """Prefix-cache miss (or caching off): full bucketed prefill."""
@@ -497,8 +579,9 @@ class ContinuousBatchingScheduler:
         n = self._bucket(plen)
         tokens = np.zeros((1, n), np.int32)
         tokens[0, :plen] = req.prompt
-        first, pre = self._prefill_fn(n)(self.params, jnp.asarray(tokens),
-                                         jnp.asarray(plen, jnp.int32))
+        first, pre = self._timed("prefill", self._prefill_fn(n),
+                                 self.params, jnp.asarray(tokens),
+                                 jnp.asarray(plen, jnp.int32), tokens=plen)
         pages = self.alloc.alloc(PC.pages_for_len(plen + 1, self.page_size),
                                  owner=req.rid)
         row = np.full((self.n_pg,), PC.SINK_PAGE, np.int32)
@@ -532,18 +615,20 @@ class ContinuousBatchingScheduler:
         suffix = np.asarray(req.prompt[L:], np.int32)
         s = suffix.shape[0]
         if self.exact_prefill:
-            first, self.cache = self._seq_suffix_fn(s)(
+            first, self.cache = self._timed(
+                "prefill_seq", self._seq_suffix_fn(s),
                 self.params, self.cache, hit.state, jnp.asarray(suffix),
                 jnp.asarray(L, jnp.int32), jnp.asarray(row),
-                jnp.asarray(slot, jnp.int32))
+                jnp.asarray(slot, jnp.int32), tokens=s, ctx_tokens=L)
         else:
             n = self._bucket(s)
             toks = np.zeros((n,), np.int32)
             toks[:s] = suffix
-            first, self.cache = self._suffix_fn(n)(
+            first, self.cache = self._timed(
+                "prefill_suffix", self._suffix_fn(n),
                 self.params, self.cache, jnp.asarray(toks),
                 jnp.asarray(L, jnp.int32), jnp.asarray(s, jnp.int32),
-                jnp.asarray(row))
+                jnp.asarray(row), tokens=s, ctx_tokens=L)
         if not self._has_ssm:
             # extend the index with this prompt's own (longer) chain; hybrid
             # entries need a state snapshot, which only full prefills have
@@ -600,6 +685,15 @@ class ContinuousBatchingScheduler:
         req.admit_step = self.step_idx
         req.prefill_pos = start
         self._prefill_fifo.append(slot)
+        self.h_queue_wait.observe(req.admit_step - req.arrival_step)
+        tr = self.tracer
+        if tr is not None:
+            now = self._tnow()
+            tr.end("queued", req.rid, t=now)
+            tr.instant("admitted", rid=req.rid, t=now,
+                       replica=self.replica_id, slot=slot, chunked=True,
+                       pages=len(pages), shared_pages=shared,
+                       cached_tokens=start, prefix_hit=hit is not None)
 
     def _advance_prefills(self) -> None:
         """Spend this tick's chunk budget FCFS over in-flight prefills.
@@ -637,8 +731,9 @@ class ContinuousBatchingScheduler:
             n = self._bucket(c)
             tokens = np.zeros((1, n), np.int32)
             tokens[0, :c] = chunk
-            tok, pre = self._prefill_fn(n)(self.params, jnp.asarray(tokens),
-                                           jnp.asarray(c, jnp.int32))
+            tok, pre = self._timed("prefill", self._prefill_fn(n),
+                                   self.params, jnp.asarray(tokens),
+                                   jnp.asarray(c, jnp.int32), tokens=c)
             self.cache = self._insert_fn(n)(self.cache, pre,
                                             jnp.asarray(row),
                                             jnp.asarray(slot, jnp.int32),
@@ -647,18 +742,27 @@ class ContinuousBatchingScheduler:
             state = self.slot_resume_state[slot]
             if state is None and self._has_ssm:
                 state = PC.extract_ssm_slot(self.cache, slot)
-            tok, self.cache = self._seq_suffix_fn(c)(
+            tok, self.cache = self._timed(
+                "prefill_seq", self._seq_suffix_fn(c),
                 self.params, self.cache, state, jnp.asarray(chunk),
                 jnp.asarray(pos, jnp.int32), jnp.asarray(row),
-                jnp.asarray(slot, jnp.int32))
+                jnp.asarray(slot, jnp.int32), tokens=c, ctx_tokens=pos)
         else:
             n = self._bucket(c)
             toks = np.zeros((n,), np.int32)
             toks[:c] = chunk
-            tok, self.cache = self._suffix_fn(n)(
+            tok, self.cache = self._timed(
+                "prefill_suffix", self._suffix_fn(n),
                 self.params, self.cache, jnp.asarray(toks),
                 jnp.asarray(pos, jnp.int32), jnp.asarray(c, jnp.int32),
-                jnp.asarray(row))
+                jnp.asarray(row), tokens=c, ctx_tokens=pos)
+        tr = self.tracer
+        if tr is not None:
+            now = self._tnow()
+            tr.span("prefill_chunk", req.rid, now, now + 1,
+                    replica=self.replica_id,
+                    chunk=tr.next_index(req.rid, "prefill_chunk"),
+                    pos=pos, tokens=c)
         if pos + c < req.plen:
             req.prefill_pos = pos + c
             if self._has_ssm:
@@ -681,6 +785,7 @@ class ContinuousBatchingScheduler:
         req.out_tokens.append(first)
         self.stats["prefills"] += 1
         self.stats["tokens_out"] += 1
+        self.h_ttft.observe(self.step_idx - req.arrival_step)
         if self.prefix_cache:
             state = (PC.extract_ssm_slot(self.cache, slot)
                      if self._has_ssm else None)
@@ -690,6 +795,10 @@ class ContinuousBatchingScheduler:
             self._admit_done.append(req)
         elif self.role == "prefill":
             self.slot_parked[slot] = True   # awaiting page handoff
+            if tr is not None:
+                tr.begin("parked", req.rid, t=now, replica=self.replica_id)
+        elif tr is not None:
+            tr.begin("decode", req.rid, t=now, replica=self.replica_id)
 
     # ------------------------------------------------- disaggregation hand --
     def handoff_ready(self) -> List[int]:
@@ -743,6 +852,11 @@ class ContinuousBatchingScheduler:
             self.index.insert(req.prompt, pages, state=state)
         req.migrations += 1
         self.stats["migrations_in"] += 1
+        tr = self.tracer
+        if tr is not None:
+            now = self._tnow()
+            tr.end("parked", req.rid, t=now, pages=len(pages))
+            tr.begin("decode", req.rid, t=now, replica=self.replica_id)
         return slot
 
     def surrender_slot(self, slot: int) -> Request:
@@ -794,6 +908,14 @@ class ContinuousBatchingScheduler:
         if slot in self._prefill_fifo:
             self._prefill_fifo.remove(slot)
         self.finished.append(req)
+        self.h_latency.observe(req.finish_step - req.arrival_step)
+        tr = self.tracer
+        if tr is not None:
+            now = self._tnow()
+            tr.end("decode", req.rid, t=now, tokens=len(req.out_tokens))
+            tr.end("parked", req.rid, t=now)    # safety: finish while parked
+            tr.instant("finish", rid=req.rid, t=now,
+                       replica=self.replica_id, tokens=len(req.out_tokens))
 
     def _grow_pages(self, k: int = 1) -> None:
         """Ensure each active slot owns the pages its next ``k`` tokens land
@@ -967,9 +1089,10 @@ class ContinuousBatchingScheduler:
                     toks[i, 0] = 0          # identical to an empty slot: the
                     lens[i] = 0             # garbage token lands on the sink
                     bt[i] = PC.SINK_PAGE    # page, masked out of attention
-        outs, self.cache = self._decode_fn(
-            self.params, self.cache, jnp.asarray(toks),
-            jnp.asarray(lens), jnp.asarray(bt), k=k)
+        outs, self.cache = self._timed(
+            "decode", self._decode_fn, self.params, self.cache,
+            jnp.asarray(toks), jnp.asarray(lens), jnp.asarray(bt), k=k,
+            tokens=k * len(decoding), ctx_tokens=int(np.sum(lens)))
         outs = np.asarray(outs)             # (k, max_slots)
         self.stats["decode_steps"] += k
         self.step_idx += k                  # before _finish: finish_step must

@@ -1,0 +1,192 @@
+"""Typed metrics registry: bucket math, nearest-rank percentiles,
+histogram quantiles and merges, the registry's get-or-create + exposition
+contract, and the StatsView facade that keeps the legacy ``stats`` dict
+idioms working on top of typed metrics (docs/observability.md)."""
+import math
+
+import pytest
+
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               StatsView, log_buckets, nearest_rank,
+                               percentile)
+
+
+# ---------------------------------------------------------------- buckets --
+
+def test_log_buckets_monotone_and_cover():
+    b = log_buckets(1.0, 4096.0, per_decade=4)
+    assert all(b2 > b1 for b1, b2 in zip(b, b[1:]))
+    assert b[0] == 1.0 and b[-1] >= 4096.0
+    # growth factor is exactly 10^(1/per_decade)
+    step = 10.0 ** 0.25
+    for b1, b2 in zip(b, b[1:]):
+        assert b2 / b1 == pytest.approx(step)
+
+
+@pytest.mark.parametrize("lo,hi,per", [(0.0, 1.0, 4), (-1.0, 1.0, 4),
+                                       (2.0, 1.0, 4), (1.0, 2.0, 0)])
+def test_log_buckets_rejects_bad_args(lo, hi, per):
+    with pytest.raises(ValueError):
+        log_buckets(lo, hi, per_decade=per)
+
+
+# ------------------------------------------------------------- percentile --
+
+def test_nearest_rank_basics():
+    vals = list(range(1, 11))                 # 1..10
+    assert nearest_rank(vals, 50) == 5        # rank ceil(5) = 5
+    assert nearest_rank(vals, 0) == 1         # rank clamps to 1
+    assert nearest_rank(vals, 100) == 10
+    assert nearest_rank([7.0], 99) == 7.0
+    assert percentile is nearest_rank         # one shared definition
+
+
+def test_nearest_rank_rejects_empty_and_out_of_range():
+    with pytest.raises(ValueError):
+        nearest_rank([], 50)
+    with pytest.raises(ValueError):
+        nearest_rank([1.0], 101)
+    with pytest.raises(ValueError):
+        nearest_rank([1.0], -1)
+
+
+# --------------------------------------------------------------- histogram --
+
+def test_histogram_bucket_semantics():
+    h = Histogram("h", (1.0, 10.0, 100.0))
+    # a value equal to a bound lands in that bound's bucket: (lo, bound]
+    h.observe(0.5)
+    h.observe(1.0)
+    h.observe(10.0)
+    h.observe(10.5)
+    h.observe(1000.0)                         # overflow
+    assert h.counts == [2, 1, 1, 1]
+    assert h.count == 5
+    assert h.sum == pytest.approx(0.5 + 1.0 + 10.0 + 10.5 + 1000.0)
+
+
+def test_histogram_quantile_edges():
+    h = Histogram("h", (1.0, 10.0))
+    assert h.quantile(99) == 0.0              # empty histogram
+    h.observe(0.5)
+    assert h.quantile(50) == 1.0              # containing bucket upper bound
+    h2 = Histogram("h2", (1.0,))
+    h2.observe(5.0)
+    assert h2.quantile(99) == math.inf        # overflow has no upper bound
+    with pytest.raises(ValueError):
+        h.quantile(101)
+
+
+def test_histogram_quantile_agrees_with_nearest_rank_within_a_bucket():
+    """The contract the benches rely on: a histogram quantile is an upper
+    estimate of the sample nearest-rank within one bucket growth factor."""
+    import random
+    rng = random.Random(0)
+    bounds = log_buckets(1.0, 4096.0, per_decade=4)
+    h = Histogram("lat", bounds)
+    samples = [rng.uniform(1.0, 3000.0) for _ in range(500)]
+    for v in samples:
+        h.observe(v)
+    step = 10.0 ** 0.25
+    for q in (50, 90, 99, 99.9):
+        exact = nearest_rank(samples, q)
+        approx = h.quantile(q)
+        assert exact <= approx <= exact * step, (q, exact, approx)
+
+
+def test_histogram_merge_adds_counts_and_rejects_mismatched_bounds():
+    a = Histogram("a", (1.0, 2.0))
+    b = Histogram("b", (1.0, 2.0))
+    a.observe(0.5)
+    b.observe(1.5)
+    b.observe(9.0)
+    out = a.merge(b)
+    assert out is a
+    assert a.counts == [1, 1, 1] and a.count == 3
+    assert a.sum == pytest.approx(11.0)
+    with pytest.raises(ValueError):
+        a.merge(Histogram("c", (1.0, 3.0)))
+
+
+def test_histogram_rejects_bad_bounds():
+    with pytest.raises(ValueError):
+        Histogram("h", ())
+    with pytest.raises(ValueError):
+        Histogram("h", (1.0, 1.0))
+
+
+# ---------------------------------------------------------------- registry --
+
+def test_registry_get_or_create_and_kind_mismatch():
+    reg = MetricsRegistry()
+    c = reg.counter("tokens_out", help="tokens")
+    assert reg.counter("tokens_out") is c     # same object, help kept
+    assert reg.get("tokens_out") is c and "tokens_out" in reg
+    assert reg.get("nope") is None and "nope" not in reg
+    reg.gauge("peak")
+    reg.histogram("lat", (1.0, 2.0))
+    assert {m.name for m in reg.metrics()} == {"tokens_out", "peak", "lat"}
+    with pytest.raises(TypeError):
+        reg.gauge("tokens_out")               # registered as a counter
+    with pytest.raises(TypeError):
+        reg.counter("lat")
+
+
+def test_registry_exposition_format():
+    reg = MetricsRegistry(labels={"replica": "2", "role": "decode"})
+    reg.counter("tokens_out", help="total tokens").inc(7)
+    reg.gauge("peak_pages").set(3)
+    h = reg.histogram("latency_ticks", (1.0, 10.0), unit="ticks")
+    h.observe(0.5)
+    h.observe(5.0)
+    h.observe(99.0)
+    text = reg.expose()
+    assert "# HELP repro_tokens_out total tokens" in text
+    assert "# TYPE repro_tokens_out counter" in text
+    assert 'repro_tokens_out{replica="2",role="decode"} 7' in text
+    assert "# TYPE repro_peak_pages gauge" in text
+    assert "# TYPE repro_latency_ticks histogram" in text
+    # cumulative buckets, +Inf, sum and count
+    assert 'le="1"' in text and 'le="10"' in text and 'le="+Inf"' in text
+    assert text.index('le="1"') < text.index('le="10"')
+    assert 'repro_latency_ticks_count{replica="2",role="decode"} 3' in text
+    assert "repro_latency_ticks_sum" in text
+    # extra labels merge in at exposition time
+    assert 'plane="fleet"' in reg.expose(extra_labels={"plane": "fleet"})
+
+
+# ---------------------------------------------------------------- StatsView --
+
+def _view():
+    reg = MetricsRegistry()
+    return StatsView({"tokens_out": reg.counter("tokens_out"),
+                      "peak_pages": reg.gauge("peak_pages")}), reg
+
+
+def test_stats_view_preserves_dict_idioms():
+    stats, reg = _view()
+    stats["tokens_out"] += 5                  # read-modify-write
+    stats["tokens_out"] += 2
+    stats["peak_pages"] = max(stats["peak_pages"], 9)
+    assert stats["tokens_out"] == 7
+    assert dict(stats) == {"tokens_out": 7, "peak_pages": 9}
+    assert stats == {"tokens_out": 7, "peak_pages": 9}   # __eq__ vs dict
+    assert stats.get("missing", 0) == 0
+    assert len(stats) == 2 and set(stats) == {"tokens_out", "peak_pages"}
+    # a stats-delta comprehension (the bench idiom) still works
+    before = dict(stats)
+    stats["tokens_out"] += 3
+    assert {k: stats[k] - before[k] for k in before} == {"tokens_out": 3,
+                                                         "peak_pages": 0}
+    # and the registry saw every mutation
+    assert reg.get("tokens_out").value == 10
+
+
+def test_stats_view_key_set_is_fixed():
+    stats, _ = _view()
+    with pytest.raises(KeyError):
+        stats["new_key"] = 1
+    with pytest.raises(TypeError):
+        del stats["tokens_out"]
+    assert isinstance(stats.metric("tokens_out"), Counter)
+    assert isinstance(stats.metric("peak_pages"), Gauge)

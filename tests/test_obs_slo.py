@@ -1,0 +1,194 @@
+"""SLO burn-rate monitors: objective validation, the multi-window
+fire/clear hysteresis, the (bad, total) source adapters over the metrics
+registry, the TelemetryBus.rate() startup guard (S3), and the autoscale
+controller merging ``slo_*`` signals into its telemetry bus."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.autoscale import AutoscaleController, CapacityBands
+from repro.autoscale.metrics import TelemetryBus
+from repro.configs.registry import REDUCED
+from repro.models import model as M
+from repro.obs.metrics import Histogram, MetricsRegistry
+from repro.obs.slo import (SLObjective, SLOMonitor, counter_ratio_source,
+                           histogram_threshold_source)
+from repro.serving.scheduler import ContinuousBatchingScheduler
+
+CFG = dataclasses.replace(REDUCED["qwen3-32b"], dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init(CFG, jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------------------- objective --
+
+def test_objective_validates_target_and_exposes_budget():
+    slo = SLObjective("ttft", 0.99)
+    assert slo.error_budget == pytest.approx(0.01)
+    for bad in (0.0, 1.0, -0.5, 1.5):
+        with pytest.raises(ValueError):
+            SLObjective("x", bad)
+
+
+def test_monitor_rejects_bad_windows_and_inverted_hysteresis():
+    slo = SLObjective("x", 0.9)
+    src = lambda: (0.0, 0.0)                               # noqa: E731
+    with pytest.raises(ValueError):
+        SLOMonitor(slo, src, short_window=0, long_window=10)
+    with pytest.raises(ValueError):
+        SLOMonitor(slo, src, short_window=10, long_window=5)
+    with pytest.raises(ValueError):
+        SLOMonitor(slo, src, fire_burn=1.0, clear_burn=2.0)
+
+
+# ---------------------------------------------------------- burn + alert --
+
+class _Feed:
+    """A scripted cumulative (bad, total) source."""
+
+    def __init__(self):
+        self.bad = 0.0
+        self.total = 0.0
+
+    def tick(self, bad_frac, n=10):
+        self.bad += bad_frac * n
+        self.total += n
+
+    def __call__(self):
+        return self.bad, self.total
+
+
+def test_monitor_fire_requires_both_windows():
+    """A single-tick blip saturates the short window but not the long one
+    — the multi-window pattern's whole point is not alerting on it."""
+    feed = _Feed()
+    mon = SLOMonitor(SLObjective("lat", 0.9), feed,
+                     short_window=2, long_window=40)
+    for t in range(1, 30):
+        feed.tick(0.0)
+        mon.sample(t)
+    feed.tick(1.0)                             # one terrible tick
+    sig = mon.sample(30)
+    assert sig["slo_lat_burn_short"] > 2.0     # short window saturated
+    assert sig["slo_lat_burn_long"] < 2.0      # diluted over the long one
+    assert sig["slo_lat_firing"] == 0.0 and not mon.firing
+
+
+def test_monitor_fire_and_clear_hysteresis():
+    feed = _Feed()
+    mon = SLOMonitor(SLObjective("lat", 0.9), feed,
+                     short_window=5, long_window=20,
+                     fire_burn=2.0, clear_burn=1.0)
+    t = 0
+    for _ in range(10):                        # healthy warmup
+        t += 1
+        feed.tick(0.0)
+        mon.sample(t)
+    assert not mon.firing
+    for _ in range(25):                        # sustained 5x burn
+        t += 1
+        feed.tick(0.5)
+        mon.sample(t)
+    assert mon.firing
+    assert [tr["to"] for tr in mon.transitions] == ["firing"]
+    for _ in range(25):                        # hover between clear and fire
+        t += 1
+        feed.tick(0.15)                        # burn 1.5: in the gap
+        sig = mon.sample(t)
+    assert mon.firing                          # hysteresis holds the alert
+    assert 1.0 < sig["slo_lat_burn_short"] < 2.0
+    for _ in range(30):                        # genuinely healthy again
+        t += 1
+        feed.tick(0.0)
+        mon.sample(t)
+    assert not mon.firing
+    assert [tr["to"] for tr in mon.transitions] == ["firing", "clear"]
+
+
+def test_burn_is_zero_without_traffic():
+    feed = _Feed()
+    mon = SLOMonitor(SLObjective("lat", 0.9), feed)
+    assert mon.sample(1)["slo_lat_burn_short"] == 0.0
+    mon2 = SLOMonitor(SLObjective("lat", 0.9), lambda: (0.0, 5.0))
+    mon2.sample(1)
+    assert mon2.sample(2)["slo_lat_burn_long"] == 0.0   # no new total
+
+
+# ----------------------------------------------------------------- sources --
+
+def test_histogram_threshold_source_is_conservative_under():
+    h = Histogram("lat", (1.0, 10.0, 100.0))
+    src = histogram_threshold_source(h, 10.0)
+    for v in (0.5, 5.0, 50.0, 500.0):
+        h.observe(v)
+    bad, total = src()
+    # 5.0 lands in (1, 10] whose lower bound 1 < threshold: counted good
+    # even though the threshold cuts through its bucket; 50 and 500 are in
+    # buckets whose lower bounds (10, 100) guarantee exceedance
+    assert (bad, total) == (2.0, 4.0)
+
+
+def test_counter_ratio_source_reads_live_counters():
+    reg = MetricsRegistry()
+    bad, total = reg.counter("blocked"), reg.counter("attempts")
+    src = counter_ratio_source(bad, total)
+    assert src() == (0.0, 0.0)
+    total.inc(8)
+    bad.inc(2)
+    assert src() == (2.0, 8.0)
+
+
+# ----------------------------------------------------- rate startup guard --
+
+def test_bus_rate_guards_short_spans():
+    """Regression (S3): two samples one tick apart used to read a burst as
+    a sustained rate over any horizon; now the window must span at least
+    ``min_span_frac`` of the horizon before a rate is reported."""
+    bus = TelemetryBus()
+    bus.record(0, {"tokens_out": 0})
+    assert bus.rate("tokens_out", 20) == 0.0          # single sample
+    bus.record(1, {"tokens_out": 100})
+    # a 1-tick span is noise against a 20-tick horizon
+    assert bus.rate("tokens_out", 20) == 0.0
+    assert bus.rate("tokens_out", 20, default=-1.0) == -1.0
+    # an explicit whole-series read (horizon=None) still works at 2 samples
+    assert bus.rate("tokens_out", None) == pytest.approx(100.0)
+    for t in range(2, 11):
+        bus.record(t, {"tokens_out": 100 * t})
+    assert bus.rate("tokens_out", 20) == pytest.approx(100.0)
+    # degenerate clock (no forward motion) stays on the default
+    bus2 = TelemetryBus()
+    bus2.record(5, {"x": 1})
+    bus2.record(5, {"x": 9})
+    assert bus2.rate("x", None) == 0.0
+
+
+# ------------------------------------------------------------ integration --
+
+def test_controller_merges_slo_signals_into_bus(params):
+    sched = ContinuousBatchingScheduler(CFG, params, max_slots=2,
+                                        page_size=8, max_seq_len=48)
+    slo = SLObjective("ttft", 0.5, "half of requests admit within 2 ticks")
+    mon = SLOMonitor(slo, histogram_threshold_source(sched.h_ttft, 2.0),
+                     short_window=4, long_window=8)
+    bands = CapacityBands(min_slots=1, max_slots=2, min_pages=7,
+                          max_pages=15)
+    ctl = AutoscaleController(sched, bands, eval_interval=2,
+                              slo_monitors=[mon])
+    rng = np.random.RandomState(0)
+    for i in range(8):
+        sched.submit(rng.randint(0, CFG.vocab_size, size=6), 5,
+                     arrival_step=i // 2)
+    done = ctl.run()
+    assert len(done) == 8
+    for sig in ("slo_ttft_burn_short", "slo_ttft_burn_long",
+                "slo_ttft_firing"):
+        assert sig in ctl.bus.series, sorted(ctl.bus.series)
+        assert len(ctl.bus.series[sig]) > 0
+    # the firing signal is a clean 0/1 the policies can threshold on
+    assert set(v for _, v in ctl.bus.series["slo_ttft_firing"]) <= {0.0, 1.0}
