@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 
 def _round_up(x: int, m: int) -> int:
@@ -88,7 +88,8 @@ class ModelConfig:
 
     # --- perf levers (§Perf; defaults = paper-faithful baseline) ----------------
     moe_combine: str = "gather"      # gather | scatter (partial-sum + psum)
-    cache_quant: bool = False        # int8 KV cache (serving)
+    cache_quant: Any = False         # KV cache quant (serving): False |
+                                     # True/"int8" | "fp8" (float8_e4m3)
     attn_mask_opt: bool = False      # skip masking on interior causal blocks
     mla_shard: str = "lora"          # lora | heads (Megatron column-parallel
                                      # up-projections: no per-layer AR)

@@ -16,8 +16,10 @@ reads the clock around the call and touches nothing else.
 from __future__ import annotations
 
 import functools
+import json
+import os
 import time
-from typing import Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +27,7 @@ import jax.numpy as jnp
 from repro.kernels import decode_attention as _fd
 from repro.kernels import flash_attention as _fa
 from repro.kernels import paged_decode as _pd
+from repro.kernels import paged_prefill as _pp
 from repro.kernels import ssd as _ssd
 
 _PROFILE_HOOK = None
@@ -194,6 +197,151 @@ def paged_decode_attention_sharded(q, k_pages, v_pages, block_table,
                      k_scale_pages=k_scale_pages, v_scale_pages=v_scale_pages,
                      softcap=softcap, window=window, scale=scale,
                      interpret=interpret)
+
+
+# --- paged prefill (chunked flash-prefill with direct-to-page KV writes) ---
+
+# Autotuned block sizes, keyed by shape signature (see prefill_tuning_key).
+# benchmarks/prefill_autotune.py sweeps candidates and writes the cache
+# JSON; it is consumed here either via register_prefill_tuning() or lazily
+# from $REPRO_PREFILL_TUNE / ./BENCH_prefill_tune.json on first lookup.
+_PREFILL_TUNE: Dict[str, Dict] = {}
+_PREFILL_TUNE_LOADED = False
+_PREFILL_TUNE_DEFAULT_PATH = "BENCH_prefill_tune.json"
+
+
+def prefill_tuning_key(H: int, d: int, KVH: int, chunk: int,
+                       page_size: int) -> str:
+    return f"h{H}xd{d}xkv{KVH}|chunk{chunk}|ps{page_size}"
+
+
+def register_prefill_tuning(table: Dict[str, Dict]) -> Dict[str, Dict]:
+    """Install autotuned prefill configs ({key: {"block_q": int, ...}});
+    returns the previous table. Entries merge over defaults — an unknown
+    key falls back to block_q=min(chunk, 128)."""
+    global _PREFILL_TUNE, _PREFILL_TUNE_LOADED
+    prev = _PREFILL_TUNE
+    _PREFILL_TUNE = dict(table)
+    _PREFILL_TUNE_LOADED = True
+    return prev
+
+
+def _prefill_tuned_block_q(H, d, KVH, chunk, page_size) -> int:
+    global _PREFILL_TUNE_LOADED
+    if not _PREFILL_TUNE_LOADED:
+        _PREFILL_TUNE_LOADED = True
+        path = os.environ.get("REPRO_PREFILL_TUNE", _PREFILL_TUNE_DEFAULT_PATH)
+        if path and os.path.exists(path):
+            try:
+                with open(path) as f:
+                    _PREFILL_TUNE.update(json.load(f).get("entries", {}))
+            except (OSError, ValueError):
+                pass
+    entry = _PREFILL_TUNE.get(prefill_tuning_key(H, d, KVH, chunk, page_size))
+    if entry and "block_q" in entry:
+        return int(entry["block_q"])
+    return min(chunk, 128)
+
+
+def _paged_prefill_one(q, k_new, v_new, pool, block_table, start, chunk_lens,
+                       *, quant, softcap, window, scale, block_q, interpret):
+    """One pool's fused chunk prefill: write kernel then attend kernel.
+
+    The write must land first — the attend kernel streams the chunk's own
+    K/V back out of the pages (which is also what gives quantised pools
+    the same quantise->dequantise roundtrip as the XLA scatter+gather
+    path)."""
+    new_pool = _pp.paged_prefill_write(
+        k_new, v_new, pool["k_pages"], pool["v_pages"], block_table, start,
+        chunk_lens, k_scale_pages=pool.get("k_scale_pages"),
+        v_scale_pages=pool.get("v_scale_pages"), quant=quant,
+        interpret=interpret)
+    o = _pp.paged_prefill_attend(
+        q, new_pool["k_pages"], new_pool["v_pages"], block_table, start,
+        chunk_lens, k_scale_pages=new_pool.get("k_scale_pages"),
+        v_scale_pages=new_pool.get("v_scale_pages"), softcap=softcap,
+        window=window, scale=scale, block_q=block_q, interpret=interpret)
+    return o, new_pool
+
+
+@functools.partial(jax.jit, static_argnames=("quant", "softcap", "window",
+                                             "scale", "block_q", "interpret"))
+def _paged_prefill_jit(q, k_new, v_new, pool, block_table, start, chunk_lens,
+                       *, quant=None, softcap=None, window=None, scale=None,
+                       block_q=None, interpret=False):
+    return _paged_prefill_one(q, k_new, v_new, pool, block_table, start,
+                              chunk_lens, quant=quant, softcap=softcap,
+                              window=window, scale=scale, block_q=block_q,
+                              interpret=interpret)
+
+
+def paged_prefill(q, k_new, v_new, pool, block_table, start, chunk_lens, *,
+                  quant=None, softcap=None, window=None, scale=None,
+                  block_q=None, interpret=False):
+    """Fused chunked prefill: scatter the chunk's K/V directly into the
+    pool pages (no contiguous intermediate, no post-hoc ``write_prefill``
+    copy), then flash-attend prefix+chunk from the pages.
+
+    q: (B,S,H,d); k_new/v_new: (B,S,KVH,d); ``pool`` dict holds one
+    layer's pages (k_pages/v_pages (P,ps,KVH,d) + scale planes when
+    ``quant``); start/chunk_lens: (B,) int32. Returns (o (B,S,H,d),
+    new_pool). ``block_q`` defaults to the autotuned value for the shape
+    (benchmarks/prefill_autotune.py).
+    """
+    if block_q is None:
+        B, S, H, d = q.shape
+        block_q = _prefill_tuned_block_q(H, d, k_new.shape[2], S,
+                                         pool["k_pages"].shape[1])
+    return _profiled("paged_prefill", _paged_prefill_jit, q, k_new, v_new,
+                     pool, block_table, start, chunk_lens, quant=quant,
+                     softcap=softcap, window=window, scale=scale,
+                     block_q=block_q, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("quant", "softcap", "window",
+                                             "scale", "block_q", "interpret"))
+def _paged_prefill_sharded_jit(q, k_new, v_new, pool, block_table, start,
+                               chunk_lens, *, quant=None, softcap=None,
+                               window=None, scale=None, block_q=None,
+                               interpret=False):
+    """Shard-group fused prefill: pool leaves carry a leading shard axis
+    (tp, P, ps, KVH/tp, d); shard ``s`` runs the write+attend pair on its
+    query/kv head slices and the head-axis concat is the group's
+    all_gather (same structure as ``_paged_decode_attention_sharded_jit``)."""
+    tp = pool["k_pages"].shape[0]
+    B, S, H, d = q.shape
+    KVH = k_new.shape[2]
+    Hs, KVHs = H // tp, KVH // tp
+    outs, pools = [], []
+    for s in range(tp):
+        o_s, pool_s = _paged_prefill_one(
+            q[:, :, s * Hs:(s + 1) * Hs],
+            k_new[:, :, s * KVHs:(s + 1) * KVHs],
+            v_new[:, :, s * KVHs:(s + 1) * KVHs],
+            {k: v[s] for k, v in pool.items()}, block_table, start,
+            chunk_lens, quant=quant, softcap=softcap, window=window,
+            scale=scale, block_q=block_q, interpret=interpret)
+        outs.append(o_s)
+        pools.append(pool_s)
+    new_pool = {k: jnp.stack([pools[s][k] for s in range(tp)])
+                for k in pool}
+    return jnp.concatenate(outs, axis=2), new_pool
+
+
+def paged_prefill_sharded(q, k_new, v_new, pool, block_table, start,
+                          chunk_lens, *, quant=None, softcap=None,
+                          window=None, scale=None, block_q=None,
+                          interpret=False):
+    """Shard-group fused chunked prefill (see ``_paged_prefill_sharded_jit``
+    for the shard/head-slice structure)."""
+    if block_q is None:
+        B, S, H, d = q.shape
+        block_q = _prefill_tuned_block_q(H, d, k_new.shape[2], S,
+                                         pool["k_pages"].shape[2])
+    return _profiled("paged_prefill_sharded", _paged_prefill_sharded_jit,
+                     q, k_new, v_new, pool, block_table, start, chunk_lens,
+                     quant=quant, softcap=softcap, window=window, scale=scale,
+                     block_q=block_q, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

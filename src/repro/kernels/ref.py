@@ -83,6 +83,83 @@ def paged_decode_attention_ref(q, k_pages, v_pages, block_table, seq_lens, *,
     return o.reshape(B, H, d).astype(q.dtype)
 
 
+def paged_prefill_write_ref(k_new, v_new, pool, block_table, start,
+                            chunk_lens, *, quant=None):
+    """Oracle for the paged-prefill write kernel: quantise + scatter.
+
+    k_new/v_new: (B,S,KVH,d) chunk K/V (rows past chunk_lens[b] are
+    padding); pool: dict with k_pages/v_pages (P,ps,KVH,d) and, when
+    ``quant`` ("int8"/"fp8") is set, fp32 scale planes (P,ps,KVH).
+    Chunk token t of sequence b lands at absolute position start[b]+t in
+    the pages named by block_table[b]. Returns the updated pool dict.
+    """
+    from repro.models.attention import quantize_kv
+    B, S = k_new.shape[:2]
+    ps = pool["k_pages"].shape[1]
+    n_pg = block_table.shape[1]
+    pos = start[:, None] + jnp.arange(S, dtype=jnp.int32)[None]     # (B,S)
+    live = jnp.arange(S, dtype=jnp.int32)[None] < chunk_lens[:, None]
+    # dead rows route to sink (0, 0) and re-write its existing value, so
+    # they can never clobber a live row's slot via scatter duplicate-index
+    pg_idx = jnp.clip(pos // ps, 0, n_pg - 1)
+    page = jnp.where(live, jnp.take_along_axis(block_table, pg_idx, axis=1), 0)
+    slot = jnp.where(live, pos % ps, 0)
+    out = dict(pool)
+    for name, val in (("k", k_new), ("v", v_new)):
+        if quant:
+            qv, sc = quantize_kv(val, quant)
+            old_q = out[f"{name}_pages"][page, slot]
+            old_s = out[f"{name}_scale_pages"][page, slot]
+            qv = jnp.where(live[..., None, None], qv, old_q)
+            sc = jnp.where(live[..., None], sc, old_s)
+            out[f"{name}_pages"] = out[f"{name}_pages"].at[page, slot].set(qv)
+            out[f"{name}_scale_pages"] = \
+                out[f"{name}_scale_pages"].at[page, slot].set(sc)
+        else:
+            dt = out[f"{name}_pages"].dtype
+            old = out[f"{name}_pages"][page, slot]
+            vv = jnp.where(live[..., None, None], val.astype(dt), old)
+            out[f"{name}_pages"] = out[f"{name}_pages"].at[page, slot].set(vv)
+    return out
+
+
+def paged_prefill_attention_ref(q, k_pages, v_pages, block_table, start,
+                                chunk_lens, *, k_scale_pages=None,
+                                v_scale_pages=None, softcap=None,
+                                window=None, scale=None):
+    """Oracle for the paged-prefill attend kernel (call after the write):
+    gather the pages (prefix AND chunk tokens), dequantise, mask per
+    absolute query position, attend.
+
+    q: (B,S,H,d) — query t of sequence b sits at absolute position
+    start[b]+t; rows past chunk_lens[b] are padding (output unspecified).
+    """
+    B, S, H, d = q.shape
+    ps, KVH = k_pages.shape[1], k_pages.shape[2]
+    n_pg = block_table.shape[1]
+    G = H // KVH
+    sc = scale if scale is not None else 1.0 / math.sqrt(d)
+    k = k_pages[block_table].reshape(B, n_pg * ps, KVH, d).astype(jnp.float32)
+    v = v_pages[block_table].reshape(B, n_pg * ps, KVH, d).astype(jnp.float32)
+    if k_scale_pages is not None:
+        k = k * k_scale_pages[block_table].reshape(B, n_pg * ps, KVH)[..., None]
+        v = v * v_scale_pages[block_table].reshape(B, n_pg * ps, KVH)[..., None]
+    qf = q.astype(jnp.float32).reshape(B, S, KVH, G, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k) * sc
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_abs = start[:, None] + jnp.arange(S, dtype=jnp.int32)[None]   # (B,S)
+    k_pos = jnp.arange(n_pg * ps, dtype=jnp.int32)
+    ok = (k_pos[None, None] <= q_abs[..., None]) \
+        & (k_pos[None, None] < (start + chunk_lens)[:, None, None])
+    if window is not None:
+        ok &= (q_abs[..., None] - k_pos[None, None]) < window
+    s = jnp.where(ok[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return o.reshape(B, S, H, d).astype(q.dtype)
+
+
 def ssd_ref(x, dt, A, Bm, Cm, h0=None):
     """Sequential SSD recurrence (exact oracle).
 

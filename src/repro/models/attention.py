@@ -293,12 +293,46 @@ def gqa_prefill(cfg: ModelConfig, p, x, cos, sin, *, local: bool):
     return y, {"k": k, "v": v}
 
 
-def quantize_kv(x: jnp.ndarray):
-    """Per-(position, kv-head) symmetric int8. x: (..., hd)."""
-    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
-    scale = jnp.maximum(scale, 1e-12)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
-                 -127, 127).astype(jnp.int8)
+FP8_MAX = 448.0  # float8_e4m3 largest finite value
+
+
+def kv_quant_mode(cfg: ModelConfig) -> Optional[str]:
+    """Resolve ``cfg.cache_quant`` to a quantisation mode.
+
+    ``False`` -> None, ``True``/``"int8"`` -> "int8", ``"fp8"`` -> "fp8"
+    (float8_e4m3 values + fp32 scales). Non-empty strings are truthy, so
+    every existing ``if cfg.cache_quant:`` branch keeps working for fp8.
+    """
+    q = cfg.cache_quant
+    if not q:
+        return None
+    if q is True:
+        return "int8"
+    if q not in ("int8", "fp8"):
+        raise ValueError(f"cache_quant must be bool, 'int8' or 'fp8': {q!r}")
+    return q
+
+
+def quantize_kv(x: jnp.ndarray, mode: str = "int8"):
+    """Per-(position, kv-head) symmetric quantisation. x: (..., hd).
+
+    "int8": values in [-127, 127], scale = absmax/127. "fp8": values cast
+    to float8_e4m3fn after scaling absmax onto the format's max normal
+    (448) — the cast itself performs the 4-bit-mantissa rounding. Both
+    return (q, fp32 scale) with dequant ``q.astype(f32) * scale``.
+    """
+    a = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    # explicit reciprocal multiply: XLA strength-reduces x/const to it
+    # under jit anyway — writing it out keeps eager calls and the Pallas
+    # in-kernel quantisation bit-identical to the jitted path
+    if mode == "fp8":
+        scale = jnp.maximum(a * jnp.float32(1.0 / FP8_MAX), 1e-12)
+        q = (x.astype(jnp.float32) / scale[..., None]).astype(
+            jnp.float8_e4m3fn)
+    else:
+        scale = jnp.maximum(a * jnp.float32(1.0 / 127.0), 1e-12)
+        q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                     -127, 127).astype(jnp.int8)
     return q, scale
 
 
@@ -317,8 +351,9 @@ def gqa_decode(cfg: ModelConfig, p, x, cos, sin, cache: Dict[str, jnp.ndarray],
     cap = cache["k"].shape[1]
     slot = (cur_len % cap).astype(jnp.int32)
     if cfg.cache_quant:
-        k8, ks = quantize_kv(k_new)
-        v8, vs_ = quantize_kv(v_new)
+        mode = kv_quant_mode(cfg)
+        k8, ks = quantize_kv(k_new, mode)
+        v8, vs_ = quantize_kv(v_new, mode)
         k_cache = jax.lax.dynamic_update_slice(cache["k"], k8, (0, slot, 0, 0))
         v_cache = jax.lax.dynamic_update_slice(cache["v"], v8, (0, slot, 0, 0))
         k_scale = jax.lax.dynamic_update_slice(cache["k_scale"], ks,
@@ -364,8 +399,9 @@ def _paged_write_attend(cfg: ModelConfig, pool: Dict[str, jnp.ndarray],
                                axis=1)[:, 0]
     slot = pos % ps
     if cfg.cache_quant:
-        k8, ks = quantize_kv(k_new)
-        v8, vs_ = quantize_kv(v_new)
+        mode = kv_quant_mode(cfg)
+        k8, ks = quantize_kv(k_new, mode)
+        v8, vs_ = quantize_kv(v_new, mode)
         k_pages = pool["k_pages"].at[page, slot].set(k8[:, 0])
         v_pages = pool["v_pages"].at[page, slot].set(v8[:, 0])
         k_sc = pool["k_scale_pages"].at[page, slot].set(ks[:, 0])
@@ -530,6 +566,164 @@ def gqa_paged_decode(cfg: ModelConfig, p, x, cos, sin,
     return y, new_cache
 
 
+def _chunk_attend(q, k, v, *, q_abs, total, window, softcap, scale=None):
+    """Masked direct-softmax attention for a prompt chunk over the gathered
+    (dequantised) pages. q: (B,S,H,hd); k/v: (B,K,KVH,hd); q_abs: (B,S)
+    absolute query positions; total: (B,) live token count after the chunk
+    lands (= start + chunk_len). Same einsum/precision structure as
+    ``decode_attend``, batched over the chunk's query rows."""
+    B, S, H, hd = q.shape
+    K, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qr = q.reshape(B, S, KVH, G, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = soft_cap(s, softcap)
+    k_pos = jnp.arange(K, dtype=jnp.int32)
+    ok = (k_pos[None, None] <= q_abs[..., None]) \
+        & (k_pos[None, None] < total[:, None, None])
+    if window is not None:
+        ok &= (q_abs[..., None] - k_pos[None, None]) < window
+    s = jnp.where(ok[:, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, H, hd).astype(v.dtype)
+
+
+def _paged_prefill_write_attend(cfg: ModelConfig, pool: Dict[str, jnp.ndarray],
+                                q: jnp.ndarray, k_new: jnp.ndarray,
+                                v_new: jnp.ndarray, start: jnp.ndarray,
+                                chunk_len: jnp.ndarray,
+                                block_table: jnp.ndarray, *, local: bool):
+    """Write one prompt chunk's K/V into its pages, then attend
+    prefix+chunk — the chunk-width sibling of ``_paged_write_attend``.
+
+    q: (B,S,H',hd); k_new/v_new: (B,S,KVH',hd) — chunk token ``t`` lands
+    at absolute position ``start[b] + t``; rows past ``chunk_len[b]`` are
+    padding (not written, output rows unspecified). Head-width-agnostic
+    like the decode core, so the tp loop/shard paths reuse it per shard.
+
+    With ``repro.models.flags.prefill_kernel()`` set (a trace-time flag)
+    the Pallas write+attend pair from ``repro.kernels.paged_prefill``
+    computes the same function without materialising the gathered cache.
+    """
+    from repro.models import flags
+    B, S = q.shape[0], q.shape[1]
+    dt = q.dtype
+    mode = kv_quant_mode(cfg)
+    window = cfg.sliding_window if (local and cfg.sliding_window) else None
+    if flags.prefill_kernel():
+        from repro.kernels import ops as kops
+        o, new_pool = kops.paged_prefill(
+            q, k_new, v_new, pool, block_table, start, chunk_len,
+            quant=mode, softcap=cfg.attn_softcap, window=window,
+            interpret=True)
+        return o.astype(dt), new_pool
+    ps = pool["k_pages"].shape[1]
+    n_pg = block_table.shape[1]
+    pos = start[:, None] + jnp.arange(S, dtype=jnp.int32)[None]     # (B,S)
+    live = jnp.arange(S, dtype=jnp.int32)[None] < chunk_len[:, None]
+    # dead rows route to the sink page's slot 0 re-writing its own value,
+    # so scatter duplicate-index resolution can't clobber a live slot
+    pg_idx = jnp.clip(pos // ps, 0, n_pg - 1)
+    page = jnp.where(live, jnp.take_along_axis(block_table, pg_idx, axis=1), 0)
+    slot = jnp.where(live, pos % ps, 0)
+    if mode:
+        k8, ks = quantize_kv(k_new, mode)
+        v8, vs_ = quantize_kv(v_new, mode)
+        sink_k = pool["k_pages"][0, 0]
+        sink_v = pool["v_pages"][0, 0]
+        sink_ks = pool["k_scale_pages"][0, 0]
+        sink_vs = pool["v_scale_pages"][0, 0]
+        k8 = jnp.where(live[..., None, None], k8, sink_k)
+        v8 = jnp.where(live[..., None, None], v8, sink_v)
+        ks = jnp.where(live[..., None], ks, sink_ks)
+        vs_ = jnp.where(live[..., None], vs_, sink_vs)
+        k_pages = pool["k_pages"].at[page, slot].set(k8)
+        v_pages = pool["v_pages"].at[page, slot].set(v8)
+        k_sc = pool["k_scale_pages"].at[page, slot].set(ks)
+        v_sc = pool["v_scale_pages"].at[page, slot].set(vs_)
+        k_deq = (k_pages[block_table].astype(dt)
+                 * k_sc[block_table][..., None].astype(dt))
+        v_deq = (v_pages[block_table].astype(dt)
+                 * v_sc[block_table][..., None].astype(dt))
+        new_pool = {"k_pages": k_pages, "v_pages": v_pages,
+                    "k_scale_pages": k_sc, "v_scale_pages": v_sc}
+    else:
+        pdt = pool["k_pages"].dtype
+        sink_k = pool["k_pages"][0, 0]
+        sink_v = pool["v_pages"][0, 0]
+        kw = jnp.where(live[..., None, None], k_new.astype(pdt), sink_k)
+        vw = jnp.where(live[..., None, None], v_new.astype(pdt), sink_v)
+        k_pages = pool["k_pages"].at[page, slot].set(kw)
+        v_pages = pool["v_pages"].at[page, slot].set(vw)
+        k_deq = k_pages[block_table]
+        v_deq = v_pages[block_table]
+        new_pool = {"k_pages": k_pages, "v_pages": v_pages}
+    KVH, hd = k_deq.shape[-2], k_deq.shape[-1]
+    k_deq = k_deq.reshape(B, n_pg * ps, KVH, hd)
+    v_deq = v_deq.reshape(B, n_pg * ps, KVH, hd)
+    o = _chunk_attend(q, k_deq, v_deq, q_abs=pos,
+                      total=start + chunk_len, window=window,
+                      softcap=cfg.attn_softcap)
+    return o, new_pool
+
+
+def _gqa_paged_prefill_loop(cfg, p, x, cos, sin, cache, start, chunk_len,
+                            block_table, *, local, tp):
+    """Unrolled shard-group fused prefill: the per-shard body runs ``tp``
+    times in one program (mirrors ``_gqa_paged_decode_loop`` — prefill
+    always takes the loop path; chunk dispatches are rare enough that a
+    shard_map variant buys nothing on the simulator)."""
+    B, S = x.shape[:2]
+    Hs = cfg.n_heads // tp
+    KVHs = cfg.n_kv_heads // tp
+    o_parts, pools = [], []
+    for s in range(tp):
+        p_s = shard_gqa_params(cfg, p, s, tp)
+        pool_s = {k: v[s] for k, v in cache.items()}
+        q, k_new, v_new = _qkv(cfg, p_s, x, cos, sin,
+                               n_heads=Hs, n_kv_heads=KVHs)
+        o_s, pool_s = _paged_prefill_write_attend(
+            cfg, pool_s, q, k_new, v_new, start, chunk_len, block_table,
+            local=local)
+        o_parts.append(o_s)
+        pools.append(pool_s)
+    o = jnp.concatenate(o_parts, axis=2)         # head-axis "all_gather"
+    new_cache = {k: jnp.stack([pools[s][k] for s in range(tp)])
+                 for k in cache}
+    y = o.reshape(B, S, -1) @ p["wo"].astype(x.dtype)
+    return y, new_cache
+
+
+def gqa_paged_prefill(cfg: ModelConfig, p, x, cos, sin,
+                      cache: Dict[str, jnp.ndarray], start: jnp.ndarray,
+                      chunk_len: jnp.ndarray, block_table: jnp.ndarray, *,
+                      local: bool, shard=None):
+    """Fused chunked-prefill step: write the chunk's K/V directly into its
+    pages and attend prefix+chunk in one pass — no dense intermediate, no
+    post-hoc ``write_prefill`` copy.
+
+    x: (B,S,D) chunk hidden states; start: (B,) tokens already in the
+    pages; chunk_len: (B,) live rows of this chunk; block_table: (B,n_pg).
+    Returns (y (B,S,D), new_cache). ``shard`` with tp > 1 runs the
+    head-sharded loop path (byte-identical to tp=1, like decode).
+    """
+    if shard is not None and shard.tp > 1:
+        return _gqa_paged_prefill_loop(cfg, p, x, cos, sin, cache, start,
+                                       chunk_len, block_table, local=local,
+                                       tp=shard.tp)
+    B, S = x.shape[:2]
+    q, k_new, v_new = _qkv(cfg, p, x, cos, sin)
+    o, new_cache = _paged_prefill_write_attend(cfg, cache, q, k_new, v_new,
+                                               start, chunk_len, block_table,
+                                               local=local)
+    y = o.reshape(B, S, -1) @ p["wo"].astype(x.dtype)
+    return y, new_cache
+
+
 # ---------------------------------------------------------------------------
 # MLA (deepseek-v2): low-rank kv compression + decoupled rope
 # ---------------------------------------------------------------------------
@@ -676,6 +870,15 @@ def attn_paged_decode(cfg, p, x, cos, sin, cache, seq_lens, block_table, *,
                             local=local, shard=shard)
 
 
+def attn_paged_prefill(cfg, p, x, cos, sin, cache, start, chunk_len,
+                       block_table, *, local=False, shard=None):
+    if cfg.attn_impl == "mla":
+        raise NotImplementedError(
+            "fused paged prefill covers GQA; MLA serves via the dense path")
+    return gqa_paged_prefill(cfg, p, x, cos, sin, cache, start, chunk_len,
+                             block_table, local=local, shard=shard)
+
+
 def kv_cache_spec(cfg: ModelConfig, batch: int, capacity: int,
                   local: bool = False) -> Dict[str, Any]:
     """(shape, dtype, logical axes) for one layer's cache entries."""
@@ -690,7 +893,8 @@ def kv_cache_spec(cfg: ModelConfig, batch: int, capacity: int,
     hd = cfg.resolved_head_dim
     cap = min(capacity, cfg.sliding_window) if (local and cfg.sliding_window) \
         else capacity
-    kv_dt = "int8" if cfg.cache_quant else dt
+    mode = kv_quant_mode(cfg)
+    kv_dt = {"int8": "int8", "fp8": "float8_e4m3fn", None: dt}[mode]
     out = {
         "k": ((batch, cap, cfg.n_kv_heads, hd),
               ("batch", "cache_seq", "kv_heads", None), kv_dt),

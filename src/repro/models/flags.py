@@ -6,6 +6,13 @@ dry-run's roofline measurement: XLA's cost_analysis counts a while-loop body
 once, so accurate FLOP/byte/collective accounting needs unrolled HLO. The
 dry-run compiles unrolled 1-period and 2-period depth variants and
 extrapolates linearly (exact for homogeneous periods).
+
+``prefill_kernel`` — when True, the fused chunked-prefill path
+(``attention._paged_prefill_write_attend``) dispatches the Pallas
+write+attend kernel pair (``repro.kernels.paged_prefill``) instead of the
+XLA scatter+gather. Consulted at *trace* time, so wrap the flag around the
+jit'd call (the scheduler bakes it into each cached program — the flag
+value is part of the program-cache key).
 """
 from __future__ import annotations
 
@@ -27,3 +34,17 @@ def use_unrolled_scans(on: bool = True):
         yield
     finally:
         _STATE.unroll = prev
+
+
+def prefill_kernel() -> bool:
+    return getattr(_STATE, "prefill_kernel", False)
+
+
+@contextlib.contextmanager
+def use_prefill_kernel(on: bool = True):
+    prev = prefill_kernel()
+    _STATE.prefill_kernel = on
+    try:
+        yield
+    finally:
+        _STATE.prefill_kernel = prev

@@ -140,6 +140,26 @@ def paged_decode_step(cfg: ModelConfig, params, cache, tokens: jnp.ndarray,
     return lg, new_cache
 
 
+def paged_prefill_step(cfg: ModelConfig, params, cache, tokens: jnp.ndarray,
+                       start: jnp.ndarray, chunk_len: jnp.ndarray,
+                       block_table: jnp.ndarray, shard=None):
+    """Fused chunked-prefill step: land one prompt chunk per sequence
+    directly in its pages and attend prefix+chunk in the same program.
+
+    tokens: (B,S) chunk token ids (rows past ``chunk_len[b]`` are padding);
+    start: (B,) tokens already in the pages; block_table: (B, n_pg).
+    -> (hidden (B,S,D), new_cache). Returns hidden states, not logits —
+    callers slice the last live row first (``final_logits`` over a full
+    chunk of rows would be wasted vocab-width work; only the final chunk's
+    last row seeds decoding).
+    """
+    hidden, _, new_cache = lm_forward(cfg, params, tokens,
+                                      mode="paged_prefill", cache=cache,
+                                      cur_len=start, chunk_len=chunk_len,
+                                      block_table=block_table, shard=shard)
+    return hidden, new_cache
+
+
 # ---------------------------------------------------------------------------
 # cache schema (ParamSpec tree -> reuse init/abstract machinery)
 # ---------------------------------------------------------------------------

@@ -87,16 +87,23 @@ def block_apply(cfg: ModelConfig, p: Dict[str, Any], x: jnp.ndarray, idx: int,
                 cos, sin, mode: str, cache: Optional[Dict] = None,
                 cur_len: Optional[jnp.ndarray] = None,
                 block_table: Optional[jnp.ndarray] = None,
-                shard=None):
+                shard=None, chunk_len: Optional[jnp.ndarray] = None):
     """-> (x, aux, cache_update). ``shard`` (a ShardGroup) activates the
     tensor-parallel paged-decode path: head-sharded attention over per-shard
     page pools, expert-sharded MoE; SSM mixers stay replicated (their state
-    is O(1) per sequence — nothing to split)."""
+    is O(1) per sequence — nothing to split). ``mode == "paged_prefill"``
+    lands a prompt chunk (x: (B,S,D), live rows per ``chunk_len``) directly
+    into the pages at offset ``cur_len`` (attention-only archs — SSM/MoE
+    archs keep the exact sequential prefill path, see scheduler)."""
     kind = cfg.block_kind(idx)
     local = kind == "attn_local"
     h = rmsnorm(x, p["ln1"], cfg.rms_eps)
     cache_update = None
     if kind == "ssm":
+        if mode == "paged_prefill":
+            raise NotImplementedError(
+                "fused paged prefill covers attention-only archs; SSM archs "
+                "use the exact sequential chunk path")
         if mode == "train":
             mix = ssm_mod.ssm_train(cfg, p["mixer"], h)
         elif mode == "prefill":
@@ -113,6 +120,10 @@ def block_apply(cfg: ModelConfig, p: Dict[str, Any], x: jnp.ndarray, idx: int,
             mix, cache_update = attn.attn_paged_decode(
                 cfg, p["mixer"], h, cos, sin, cache, cur_len, block_table,
                 local=local, shard=shard)
+        elif mode == "paged_prefill":
+            mix, cache_update = attn.attn_paged_prefill(
+                cfg, p["mixer"], h, cos, sin, cache, cur_len, chunk_len,
+                block_table, local=local, shard=shard)
         else:
             mix, cache_update = attn.attn_decode(cfg, p["mixer"], h, cos, sin,
                                                  cache, cur_len, local=local)
@@ -168,7 +179,7 @@ def lm_forward(cfg: ModelConfig, params: Dict[str, Any], tokens: jnp.ndarray,
                positions: Optional[jnp.ndarray] = None, *, mode: str = "train",
                cache: Optional[Dict] = None, cur_len=None,
                block_table: Optional[jnp.ndarray] = None,
-               remat: str = "none", shard=None):
+               remat: str = "none", shard=None, chunk_len=None):
     """Decoder-only forward.
 
     train        -> (hidden, aux)
@@ -182,13 +193,25 @@ def lm_forward(cfg: ModelConfig, params: Dict[str, Any], tokens: jnp.ndarray,
         ``shard`` (a ``repro.parallel.context.ShardGroup``, tp > 1) selects
         the tensor-parallel path: pool leaves carry a leading shard axis
         and attention/MoE split across the group (docs/sharding.md).
+    paged_prefill -> (hidden, aux, cache)  tokens: (B, S) one prompt chunk
+        per sequence; ``cur_len`` (B,) tokens already landed in the pages
+        (chunk row t sits at absolute position cur_len+t), ``chunk_len``
+        (B,) live rows. The chunk's K/V is written directly into the pages
+        and its queries attend prefix+chunk in the same pass (fused
+        chunked prefill — no dense intermediate, no ``write_prefill``).
     """
     assert not cfg.is_encdec
     B, S = tokens.shape
-    decoding = mode in ("decode", "paged_decode")
+    decoding = mode in ("decode", "paged_decode", "paged_prefill")
     prefix, period, n_periods = depth_plan(cfg)
     if positions is None:
-        if decoding:
+        if mode == "paged_prefill":
+            cl = jnp.asarray(cur_len, jnp.int32).reshape(-1)
+            base = cl[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+            positions = jnp.broadcast_to(base, (B, S))
+            if cfg.rope_variant == "mrope":
+                positions = jnp.broadcast_to(positions[None], (3, B, S))
+        elif decoding:
             cl = jnp.asarray(cur_len, jnp.int32)
             base = jnp.broadcast_to(
                 cl[None, None] if cl.ndim == 0 else
@@ -210,7 +233,7 @@ def lm_forward(cfg: ModelConfig, params: Dict[str, Any], tokens: jnp.ndarray,
         c_in = cache["prefix"][str(i)] if (cache and decoding) else None
         x, aux, c_out = block_apply(cfg, params["prefix"][str(i)], x, i,
                                     cos, sin, mode, c_in, cur_len,
-                                    block_table, shard)
+                                    block_table, shard, chunk_len=chunk_len)
         aux_total = aux_total + aux
         if c_out is not None:
             prefix_cache_out[str(i)] = c_out
@@ -253,14 +276,15 @@ def lm_forward(cfg: ModelConfig, params: Dict[str, Any], tokens: jnp.ndarray,
         if prefix_cache_out:
             cache_out["prefix"] = prefix_cache_out
 
-    else:  # decode / paged_decode
+    else:  # decode / paged_decode / paged_prefill
         def body(xx, xs_p):
             ps, cs = xs_p
             new_cs = {}
             for p in range(period):
                 xx, _, c_out = block_apply(cfg, ps[str(p)], xx, prefix + p,
                                            cos, sin, mode, cs[str(p)],
-                                           cur_len, block_table, shard)
+                                           cur_len, block_table, shard,
+                                           chunk_len=chunk_len)
                 new_cs[str(p)] = c_out
             return xx, new_cs
 

@@ -57,7 +57,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import ssm as ssm_mod
-from repro.models.attention import quantize_kv
+from repro.models.attention import kv_quant_mode, quantize_kv
 from repro.models.transformer import depth_plan
 
 SINK_PAGE = 0
@@ -468,7 +468,9 @@ def _attn_pool_leaves(cfg: ModelConfig, num_pages: int, page_size: int,
             "compressed-cache path (see docs/serving.md)")
     hd = cfg.resolved_head_dim
     KVH = cfg.n_kv_heads
-    kv_dt = jnp.int8 if cfg.cache_quant else jnp.dtype(cfg.dtype)
+    mode = kv_quant_mode(cfg)
+    kv_dt = {"int8": jnp.int8, "fp8": jnp.float8_e4m3fn,
+             None: jnp.dtype(cfg.dtype)}[mode]
     if tp > 1 and KVH % tp:
         raise ValueError(f"tp={tp} must divide n_kv_heads {KVH}")
     shard = (tp,) if tp > 1 else ()
@@ -562,7 +564,7 @@ def _write_attn_prefill(cfg: ModelConfig, node: Dict[str, jnp.ndarray],
         kv = pre[name][..., 0, :n_write, :, :] if stacked \
             else pre[name][0, :n_write]                   # ([L,]n,KVH,hd)
         if cfg.cache_quant:
-            q8, sc = quantize_kv(kv)
+            q8, sc = quantize_kv(kv, kv_quant_mode(cfg))
             if tp > 1:
                 q8, sc = _shard_kv(q8, tp, stacked), _shard_kv(
                     sc[..., None], tp, stacked)[..., 0]

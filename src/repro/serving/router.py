@@ -593,7 +593,8 @@ class ServingRouter:
         for key in ("tokens_out", "decode_steps", "prefills",
                     "prefix_hits", "cached_tokens", "cow_forks",
                     "prefill_chunk_tokens", "migrations_in",
-                    "migrations_out"):
+                    "migrations_out", "prefill_dispatches",
+                    "prefill_compiles"):
             out[key] = (sum(s.get(key, 0) for s in per_replica.values())
                         + self._retired_stats.get(key, 0))
         out["prefix_hit_rate"] = round(self.prefix_hit_rate(), 3)

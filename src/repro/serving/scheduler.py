@@ -87,6 +87,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.models import flags as model_flags
 from repro.models import model as M
 from repro.models.transformer import lm_forward
 from repro.obs.metrics import MetricsRegistry, StatsView, TICK_BUCKETS
@@ -97,7 +98,29 @@ from repro.serving.request import Request, make_request
 DEFAULT_BUCKETS = (8, 16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512)
 
 __all__ = ["ContinuousBatchingScheduler", "DEFAULT_BUCKETS", "Request",
-           "supports_paged"]
+           "clear_program_cache", "program_cache_size", "supports_paged"]
+
+# Compiled prefill-family programs shared across *every* scheduler instance
+# in the process. A fleet of replicas (router / autoscaler / disaggregation
+# benches) builds schedulers with identical (cfg, bucket, tp) shapes; before
+# this cache each instance held private ``{n: jit fn}`` dicts and re-traced
+# the same programs per replica — the direct cause of the chunked-prefill
+# throughput gap serve_bench measured (415.8 -> 192.2 tok/s), since a
+# benchmark sweep rebuilds its scheduler per scenario. Keyed on everything
+# a program closes over: kind, padded length, the (hashable) ModelConfig,
+# page size, the shard group's identity, and the baked-in prefill-kernel
+# flag. jit itself dedups by argument shape under each entry, so differing
+# block-table widths (max_seq_len) share one entry without confusion.
+_PROGRAM_CACHE: Dict[Any, Any] = {}
+
+
+def program_cache_size() -> int:
+    return len(_PROGRAM_CACHE)
+
+
+def clear_program_cache() -> None:
+    """Drop every cached prefill program (tests / leak-hunting hook)."""
+    _PROGRAM_CACHE.clear()
 
 
 def supports_paged(cfg: ModelConfig) -> bool:
@@ -119,7 +142,8 @@ class ContinuousBatchingScheduler:
                  prefill_buckets: Sequence[int] = DEFAULT_BUCKETS,
                  prefix_cache: Optional[bool] = None, tp: int = 1,
                  shard_mesh=None, prefill_budget: Optional[int] = None,
-                 role: str = "mixed"):
+                 role: str = "mixed", prefill_fused: Optional[bool] = None,
+                 prefill_kernel: bool = False):
         if not supports_paged(cfg):
             raise NotImplementedError(
                 f"{cfg.name}: paged serving covers decoder-only non-MLA "
@@ -157,6 +181,19 @@ class ContinuousBatchingScheduler:
         self._has_ssm = any(cfg.block_kind(i) == "ssm"
                             for i in range(cfg.n_layers))
         self.exact_prefill = cfg.n_routed_experts > 0 or self._has_ssm
+        # fused prefill: land prompt tokens directly in their pages with
+        # paged_prefill_step — one dispatch per chunk instead of the
+        # prefill+insert pair (first chunk) or the batched-rows suffix trick
+        # (every row a full-pool gather). Exact-prefill archs keep the
+        # sequential paths: an SSM state must fold tokens in order, and MoE
+        # capacity grouping differs between the fused chunk and the decode
+        # steps the byte-determinism contract compares against.
+        if prefill_fused is None:
+            prefill_fused = not self.exact_prefill
+        self.prefill_fused = bool(prefill_fused) and not self.exact_prefill
+        # bake the Pallas write+attend kernel pair into the fused programs
+        # (interpret-mode on CPU; flags.use_prefill_kernel at trace time)
+        self.prefill_kernel = bool(prefill_kernel)
         self.buckets = tuple(sorted(b for b in prefill_buckets
                                     if b <= max_seq_len))
         # shared-prefix cache: admission shares the longest cached prefix's
@@ -228,7 +265,9 @@ class ContinuousBatchingScheduler:
                          ("cached_tokens", "tokens"), ("cow_forks", "pages"),
                          ("prefill_chunk_tokens", "tokens"),
                          ("migrations_in", "streams"),
-                         ("migrations_out", "streams"))})
+                         ("migrations_out", "streams"),
+                         ("prefill_compiles", "programs"),
+                         ("prefill_dispatches", "dispatches"))})
         self.h_queue_wait = self.registry.histogram(
             "serving_queue_wait_ticks", TICK_BUCKETS, unit="ticks",
             help="ticks from due arrival to admission")
@@ -244,10 +283,11 @@ class ContinuousBatchingScheduler:
         self._decode_fn = jax.jit(
             functools.partial(self._decode_multi, cfg, self.shard),
             static_argnames=("k",), donate_argnums=(1,))
-        self._prefill_fns: Dict[int, Any] = {}
-        self._insert_fns: Dict[int, Any] = {}
-        self._suffix_fns: Dict[int, Any] = {}
-        self._seq_suffix_fns: Dict[int, Any] = {}
+        # prefill-family programs live in the module-level _PROGRAM_CACHE,
+        # shared across instances; this key captures what they close over
+        self._shard_key = (None if self.shard is None
+                           else (self.shard.tp, self.shard.axis,
+                                 self.shard.mesh))
         self._cow_fn = jax.jit(functools.partial(PC.copy_page, tp=tp),
                                donate_argnums=(0,))
         self._rid = 0
@@ -275,12 +315,26 @@ class ContinuousBatchingScheduler:
             body, (tokens, seq_lens, cache), None, length=k)
         return outs, new_cache
 
+    def _get_program(self, kind: str, n: int, build):
+        """Fetch (or build and share) the compiled program ``kind``@``n``.
+
+        Misses count as ``prefill_compiles``; a second scheduler with the
+        same (cfg, tp, page size, kernel flag) reuses the entry for free.
+        """
+        key = (kind, n, self.cfg, self.page_size, self._shard_key,
+               self.prefill_kernel)
+        fn = _PROGRAM_CACHE.get(key)
+        if fn is None:
+            fn = _PROGRAM_CACHE[key] = build()
+            self.stats["prefill_compiles"] += 1
+        return fn
+
     def _prefill_fn(self, n: int):
         """Batch-1 prefill at padded length ``n``; logits taken at the live
         prompt's last position (right padding is causally invisible)."""
-        if n not in self._prefill_fns:
-            cfg = self.cfg
+        cfg = self.cfg
 
+        def build():
             def fn(params, tokens, plen):
                 positions = None
                 if cfg.rope_variant == "mrope":
@@ -296,19 +350,52 @@ class ContinuousBatchingScheduler:
                 tok = jnp.argmax(lg[0, -1, :cfg.vocab_size]).astype(jnp.int32)
                 return tok, pre
 
-            self._prefill_fns[n] = jax.jit(fn)
-        return self._prefill_fns[n]
+            return jax.jit(fn)
+
+        return self._get_program("prefill", n, build)
 
     def _insert_fn(self, n: int):
-        if n not in self._insert_fns:
-            cfg, ps, tp = self.cfg, self.page_size, self.tp
+        cfg, ps, tp = self.cfg, self.page_size, self.tp
 
+        def build():
             def fn(cache, pre, block_row, slot, plen):
                 return PC.write_prefill(cfg, cache, pre, block_row, slot,
                                         plen, n, ps, tp=tp)
 
-            self._insert_fns[n] = jax.jit(fn, donate_argnums=(0,))
-        return self._insert_fns[n]
+            return jax.jit(fn, donate_argnums=(0,))
+
+        return self._get_program("insert", n, build)
+
+    def _chunk_fn(self, n: int):
+        """Fused chunk program at padded length ``n`` (dense archs).
+
+        One dispatch lands ``s_live`` prompt tokens at position ``start``
+        directly in the sequence's pages (``M.paged_prefill_step``: scatter
+        or the Pallas write kernel, then prefix+chunk attention over the
+        pages — no contiguous KV intermediate, no separate insert call) and
+        reads the next-token logits at the chunk's last live row. Serves
+        monolithic admission (start=0, s_live=plen), shared-prefix suffixes,
+        and every chunked-prefill chunk — replacing the prefill+insert pair
+        and the batched-rows suffix trick (whose ``n`` rows each gathered
+        the full pool). ``self.prefill_kernel`` is baked in at trace time.
+        """
+        cfg, shard, kernel = self.cfg, self.shard, self.prefill_kernel
+
+        def build():
+            def fn(params, cache, tokens, start, s_live, row):
+                with model_flags.use_prefill_kernel(kernel):
+                    hidden, cache = M.paged_prefill_step(
+                        cfg, params, cache, tokens[None], start[None],
+                        s_live[None], row[None], shard=shard)
+                h_last = jax.lax.dynamic_slice_in_dim(hidden[0], s_live - 1,
+                                                      1, axis=0)
+                lg = M.final_logits(cfg, params, h_last[None])
+                tok = jnp.argmax(lg[0, -1, :cfg.vocab_size]).astype(jnp.int32)
+                return tok, cache
+
+            return jax.jit(fn, donate_argnums=(1,))
+
+        return self._get_program("chunk", n, build)
 
     def _suffix_fn(self, n: int):
         """Batched suffix prefill at padded length ``n`` (dense archs).
@@ -322,9 +409,9 @@ class ContinuousBatchingScheduler:
         routed to the sink page (position 0) and discarded; logits are read
         at the live suffix's last row.
         """
-        if n not in self._suffix_fns:
-            cfg, shard = self.cfg, self.shard
+        cfg, shard = self.cfg, self.shard
 
+        def build():
             def fn(params, cache, tokens, start, s_live, row):
                 i = jnp.arange(n, dtype=jnp.int32)
                 live = i < s_live
@@ -339,8 +426,9 @@ class ContinuousBatchingScheduler:
                 tok = jnp.argmax(last[0, :cfg.vocab_size]).astype(jnp.int32)
                 return tok, cache
 
-            self._suffix_fns[n] = jax.jit(fn, donate_argnums=(1,))
-        return self._suffix_fns[n]
+            return jax.jit(fn, donate_argnums=(1,))
+
+        return self._get_program("suffix", n, build)
 
     def _seq_suffix_fn(self, s: int):
         """Sequential suffix continuation at exact length ``s`` (SSM and
@@ -349,9 +437,9 @@ class ContinuousBatchingScheduler:
         None for pure-MoE archs, whose suffix still must step one token at
         a time so expert capacity groups match decode's) and writes each
         suffix token's K/V into the sequence's pages."""
-        if s not in self._seq_suffix_fns:
-            cfg, shard = self.cfg, self.shard
+        cfg, shard = self.cfg, self.shard
 
+        def build():
             def fn(params, cache, state, tokens, start, row, slot):
                 view = PC.ssm_slot_view(cache, state)
                 bt = row[None, :].astype(jnp.int32)
@@ -370,8 +458,9 @@ class ContinuousBatchingScheduler:
                     return tok, view
                 return tok, PC.merge_ssm_slot(cache, view, slot)
 
-            self._seq_suffix_fns[s] = jax.jit(fn, donate_argnums=(1,))
-        return self._seq_suffix_fns[s]
+            return jax.jit(fn, donate_argnums=(1,))
+
+        return self._get_program("seq_suffix", s, build)
 
     # ------------------------------------------------------- observability --
     def set_tracer(self, tracer, *, own_clock: bool = True) -> None:
@@ -574,23 +663,41 @@ class ContinuousBatchingScheduler:
             tr.begin("decode", req.rid, t=now, replica=self.replica_id)
 
     def _admit_full(self, req: Request, slot: int):
-        """Prefix-cache miss (or caching off): full bucketed prefill."""
+        """Prefix-cache miss (or caching off): full bucketed prefill.
+
+        Fused: pages are allocated *first* and the whole prompt lands in
+        them through one ``_chunk_fn`` dispatch (start=0). Legacy: dense
+        prefill to a contiguous cache, then the ``write_prefill`` copy.
+        """
         plen = req.plen
         n = self._bucket(plen)
-        tokens = np.zeros((1, n), np.int32)
-        tokens[0, :plen] = req.prompt
-        first, pre = self._timed("prefill", self._prefill_fn(n),
-                                 self.params, jnp.asarray(tokens),
-                                 jnp.asarray(plen, jnp.int32), tokens=plen)
         pages = self.alloc.alloc(PC.pages_for_len(plen + 1, self.page_size),
                                  owner=req.rid)
         row = np.full((self.n_pg,), PC.SINK_PAGE, np.int32)
         row[:len(pages)] = pages
-        self.cache = self._insert_fn(n)(self.cache, pre, jnp.asarray(row),
-                                        jnp.asarray(slot, jnp.int32),
-                                        jnp.asarray(plen, jnp.int32))
-        if self.prefix_cache:
+        if self.prefill_fused:
+            toks = np.zeros((n,), np.int32)
+            toks[:plen] = req.prompt
+            self.stats["prefill_dispatches"] += 1
+            first, self.cache = self._timed(
+                "prefill", self._chunk_fn(n), self.params, self.cache,
+                jnp.asarray(toks), jnp.asarray(0, jnp.int32),
+                jnp.asarray(plen, jnp.int32), jnp.asarray(row), tokens=plen)
+            state = None
+        else:
+            tokens = np.zeros((1, n), np.int32)
+            tokens[0, :plen] = req.prompt
+            self.stats["prefill_dispatches"] += 2    # prefill + insert
+            first, pre = self._timed("prefill", self._prefill_fn(n),
+                                     self.params, jnp.asarray(tokens),
+                                     jnp.asarray(plen, jnp.int32),
+                                     tokens=plen)
+            self.cache = self._insert_fn(n)(self.cache, pre,
+                                            jnp.asarray(row),
+                                            jnp.asarray(slot, jnp.int32),
+                                            jnp.asarray(plen, jnp.int32))
             state = PC.extract_ssm_state(pre) if self._has_ssm else None
+        if self.prefix_cache:
             self.index.insert(req.prompt, pages, state=state)
             self.stats["prefix_misses"] += 1
         return int(first), pages, 0, row
@@ -614,6 +721,7 @@ class ContinuousBatchingScheduler:
         row[:len(pages)] = pages
         suffix = np.asarray(req.prompt[L:], np.int32)
         s = suffix.shape[0]
+        self.stats["prefill_dispatches"] += 1
         if self.exact_prefill:
             first, self.cache = self._timed(
                 "prefill_seq", self._seq_suffix_fn(s),
@@ -624,8 +732,10 @@ class ContinuousBatchingScheduler:
             n = self._bucket(s)
             toks = np.zeros((n,), np.int32)
             toks[:s] = suffix
+            fn = (self._chunk_fn(n) if self.prefill_fused
+                  else self._suffix_fn(n))
             first, self.cache = self._timed(
-                "prefill_suffix", self._suffix_fn(n),
+                "prefill_suffix", fn,
                 self.params, self.cache, jnp.asarray(toks),
                 jnp.asarray(L, jnp.int32), jnp.asarray(s, jnp.int32),
                 jnp.asarray(row), tokens=s, ctx_tokens=L)
@@ -727,10 +837,24 @@ class ContinuousBatchingScheduler:
         """
         row = self.block_table[slot]
         chunk = np.asarray(req.prompt[pos:pos + c], np.int32)
-        if pos == 0:
+        if self.prefill_fused:
+            n = self._bucket(c)
+            toks = np.zeros((n,), np.int32)
+            toks[:c] = chunk
+            self.stats["prefill_dispatches"] += 1
+            # first chunks keep the "prefill" profiler/metrics kind the
+            # monolithic path established; continuations are suffixes
+            tok, self.cache = self._timed(
+                "prefill" if pos == 0 else "prefill_suffix",
+                self._chunk_fn(n),
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(pos, jnp.int32), jnp.asarray(c, jnp.int32),
+                jnp.asarray(row), tokens=c, ctx_tokens=pos)
+        elif pos == 0:
             n = self._bucket(c)
             tokens = np.zeros((1, n), np.int32)
             tokens[0, :c] = chunk
+            self.stats["prefill_dispatches"] += 2    # prefill + insert
             tok, pre = self._timed("prefill", self._prefill_fn(n),
                                    self.params, jnp.asarray(tokens),
                                    jnp.asarray(c, jnp.int32), tokens=c)
@@ -742,6 +866,7 @@ class ContinuousBatchingScheduler:
             state = self.slot_resume_state[slot]
             if state is None and self._has_ssm:
                 state = PC.extract_ssm_slot(self.cache, slot)
+            self.stats["prefill_dispatches"] += 1
             tok, self.cache = self._timed(
                 "prefill_seq", self._seq_suffix_fn(c),
                 self.params, self.cache, state, jnp.asarray(chunk),
@@ -751,6 +876,7 @@ class ContinuousBatchingScheduler:
             n = self._bucket(c)
             toks = np.zeros((n,), np.int32)
             toks[:c] = chunk
+            self.stats["prefill_dispatches"] += 1
             tok, self.cache = self._timed(
                 "prefill_suffix", self._suffix_fn(n),
                 self.params, self.cache, jnp.asarray(toks),

@@ -60,6 +60,10 @@ class _StubSched(ContinuousBatchingScheduler):
         return lambda params, cache, toks, start, c, row: (np.int32(0),
                                                            cache)
 
+    def _chunk_fn(self, n):
+        return lambda params, cache, toks, start, c, row: (np.int32(0),
+                                                           cache)
+
     def _seq_suffix_fn(self, c):
         return (lambda params, cache, state, toks, start, row, slot:
                 (np.int32(0), cache))

@@ -1,0 +1,393 @@
+"""Chunked flash-prefill kernel suite (direct-to-page KV writes).
+
+Covers the PR's byte-identity contracts end to end:
+
+* write kernel vs the ``ref.py`` scatter oracle — bit-identical payloads
+  *and* scale planes for fp32/int8/fp8 pools, over ragged chunk lengths
+  and page-boundary-crossing starts;
+* attend kernel vs the gather+softmax oracle under causal, sliding-window
+  and softcap masks, quantised and not;
+* the fused ``ops.paged_prefill`` entry (write then attend) and its tp=2
+  shard-group variant vs tp=1 — outputs and reassembled pools byte-equal;
+* the model-level fused path vs the legacy dense-prefill +
+  ``write_prefill`` copy route (layer-0 pool bytes identical, next token
+  identical);
+* scheduler-level identity gates: fused on/off, Pallas kernel on/off,
+  fp8 pools kernel on/off, tp=1 vs tp=2 — all at fp32 activations, the
+  same contract the serving gates in benchmarks/serve_bench.py enforce;
+* the cross-instance compiled-program cache (a second scheduler compiles
+  nothing) and the dispatch counters behind BENCH_prefill.json.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import REDUCED
+from repro.kernels import ops, ref
+from repro.kernels import paged_prefill as pp
+from repro.models import model as M
+from repro.serving import paged_cache as PC
+from repro.serving import scheduler as SCH
+from repro.serving.scheduler import ContinuousBatchingScheduler
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand(shape, i, scale=1.0):
+    return jax.random.normal(jax.random.fold_in(KEY, i), shape,
+                             jnp.float32) * scale
+
+
+def make_pool(P, ps, KVH, d, quant, seed=100):
+    """A pool with non-zero prior contents (the prefix the attend kernel
+    must stream alongside the chunk)."""
+    if quant:
+        kq = jax.random.randint(jax.random.fold_in(KEY, seed),
+                                (P, ps, KVH, d), -127, 128, jnp.int32)
+        vq = jax.random.randint(jax.random.fold_in(KEY, seed + 1),
+                                (P, ps, KVH, d), -127, 128, jnp.int32)
+        dt = jnp.int8 if quant == "int8" else jnp.float8_e4m3fn
+        return {
+            "k_pages": kq.astype(dt), "v_pages": vq.astype(dt),
+            "k_scale_pages": jnp.abs(rand((P, ps, KVH), seed + 2)) + 1e-3,
+            "v_scale_pages": jnp.abs(rand((P, ps, KVH), seed + 3)) + 1e-3,
+        }
+    return {"k_pages": rand((P, ps, KVH, d), seed),
+            "v_pages": rand((P, ps, KVH, d), seed + 1)}
+
+
+def pool_equal(a, b):
+    return all(bool(jnp.array_equal(a[k], b[k])) for k in a)
+
+
+# ---------------------------------------------------------- write kernel --
+
+@pytest.mark.parametrize("quant", [None, "int8", "fp8"])
+def test_write_kernel_bit_identical_to_oracle(quant):
+    """Ragged starts/lengths crossing page boundaries: the Pallas scatter
+    lands byte-for-byte what the XLA oracle lands — including the fp32
+    scale planes (reciprocal-multiply quantisation on both sides)."""
+    B, S, KVH, d, ps, P, n_pg = 3, 7, 2, 16, 4, 20, 5
+    k_new, v_new = rand((B, S, KVH, d), 1), rand((B, S, KVH, d), 2)
+    # start mid-page (5), page-aligned (0, 8); lens ragged incl. 0-padding
+    start = jnp.asarray([5, 0, 8], jnp.int32)
+    lens = jnp.asarray([7, 5, 3], jnp.int32)
+    bt = jnp.asarray(np.random.RandomState(0).choice(
+        np.arange(1, P), (B, n_pg), replace=False), jnp.int32)
+    pool = make_pool(P, ps, KVH, d, quant)
+
+    got = pp.paged_prefill_write(
+        k_new, v_new, pool["k_pages"], pool["v_pages"], bt, start, lens,
+        k_scale_pages=pool.get("k_scale_pages"),
+        v_scale_pages=pool.get("v_scale_pages"), quant=quant,
+        interpret=True)
+    want = ref.paged_prefill_write_ref(k_new, v_new, pool, bt, start, lens,
+                                       quant=quant)
+    assert pool_equal(got, want)
+
+
+def test_write_kernel_preserves_untouched_rows():
+    """Rows outside [start, start+len) — the already-prefilled prefix and
+    the pages beyond the chunk — keep their previous bytes."""
+    B, S, KVH, d, ps, P, n_pg = 1, 4, 2, 16, 4, 8, 4
+    pool = make_pool(P, ps, KVH, d, None)
+    before = jax.tree_util.tree_map(jnp.copy, pool)
+    bt = jnp.asarray([[2, 3, 4, 5]], jnp.int32)
+    got = pp.paged_prefill_write(
+        rand((B, S, KVH, d), 1), rand((B, S, KVH, d), 2),
+        pool["k_pages"], pool["v_pages"], bt,
+        jnp.asarray([6], jnp.int32), jnp.asarray([4], jnp.int32),
+        interpret=True)
+    # positions 6..9 span pages bt[1] rows 2..3 and bt[2] rows 0..1;
+    # pages 0,1 (sink + unowned), bt[0], bt[3] and the prefix rows of
+    # bt[1] must be untouched
+    for key in ("k_pages", "v_pages"):
+        assert bool(jnp.array_equal(got[key][0:2], before[key][0:2]))
+        assert bool(jnp.array_equal(got[key][2], before[key][2]))
+        assert bool(jnp.array_equal(got[key][5], before[key][5]))
+        assert bool(jnp.array_equal(got[key][3, :2], before[key][3, :2]))
+        assert not bool(jnp.array_equal(got[key][3, 2:], before[key][3, 2:]))
+
+
+# --------------------------------------------------------- attend kernel --
+
+@pytest.mark.parametrize("quant", [None, "int8", "fp8"])
+@pytest.mark.parametrize("softcap,window", [(None, None), (None, 3),
+                                            (30.0, None), (30.0, 3)])
+def test_attend_kernel_matches_oracle(quant, softcap, window):
+    """Post-write attention over prefix+chunk pages: causal, windowed and
+    softcapped variants vs the gather oracle, quantised and not."""
+    B, S, H, KVH, d, ps, P, n_pg = 2, 6, 4, 2, 16, 4, 10, 4
+    start = jnp.asarray([5, 0], jnp.int32)
+    lens = jnp.asarray([6, 4], jnp.int32)
+    bt = jnp.asarray(np.random.RandomState(1).choice(
+        np.arange(1, P), (B, n_pg), replace=False), jnp.int32)
+    pool = make_pool(P, ps, KVH, d, quant)
+    # land a chunk first so its K/V stream back from the pages
+    pool = ref.paged_prefill_write_ref(
+        rand((B, S, KVH, d), 20), rand((B, S, KVH, d), 21), pool, bt,
+        start, lens, quant=quant)
+    q = rand((B, S, H, d), 22)
+
+    got = pp.paged_prefill_attend(
+        q, pool["k_pages"], pool["v_pages"], bt, start, lens,
+        k_scale_pages=pool.get("k_scale_pages"),
+        v_scale_pages=pool.get("v_scale_pages"), softcap=softcap,
+        window=window, block_q=4, interpret=True)
+    want = ref.paged_prefill_attention_ref(
+        q, pool["k_pages"], pool["v_pages"], bt, start, lens,
+        k_scale_pages=pool.get("k_scale_pages"),
+        v_scale_pages=pool.get("v_scale_pages"), softcap=softcap,
+        window=window)
+    # compare live rows only (padding rows are unspecified)
+    for b in range(B):
+        n = int(lens[b])
+        np.testing.assert_allclose(np.asarray(got[b, :n]),
+                                   np.asarray(want[b, :n]),
+                                   rtol=2e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("block_q", [2, 4, 8])
+def test_attend_block_q_invariant(block_q):
+    """The autotuned block size changes the grid, never the math."""
+    B, S, H, KVH, d, ps, P, n_pg = 1, 6, 4, 2, 16, 4, 8, 3
+    start, lens = jnp.asarray([3], jnp.int32), jnp.asarray([6], jnp.int32)
+    bt = jnp.asarray([[1, 2, 3]], jnp.int32)
+    pool = make_pool(P, ps, KVH, d, None)
+    pool = ref.paged_prefill_write_ref(
+        rand((B, S, KVH, d), 30), rand((B, S, KVH, d), 31), pool, bt,
+        start, lens)
+    q = rand((B, S, H, d), 32)
+    want = ref.paged_prefill_attention_ref(q, pool["k_pages"],
+                                           pool["v_pages"], bt, start, lens)
+    got = pp.paged_prefill_attend(q, pool["k_pages"], pool["v_pages"], bt,
+                                  start, lens, block_q=block_q,
+                                  interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-4)
+
+
+# --------------------------------------------- fused op + shard identity --
+
+@pytest.mark.parametrize("quant", [None, "fp8"])
+def test_ops_paged_prefill_fused(quant):
+    """The registered ``ops.paged_prefill`` entry = write-ref then
+    attend-ref, pools bit-identical, outputs allclose."""
+    B, S, H, KVH, d, ps, P, n_pg = 2, 5, 4, 2, 16, 4, 9, 4
+    start = jnp.asarray([2, 0], jnp.int32)
+    lens = jnp.asarray([5, 3], jnp.int32)
+    bt = jnp.asarray(np.random.RandomState(2).choice(
+        np.arange(1, P), (B, n_pg), replace=False), jnp.int32)
+    pool = make_pool(P, ps, KVH, d, quant)
+    q = rand((B, S, H, d), 40)
+    k_new, v_new = rand((B, S, KVH, d), 41), rand((B, S, KVH, d), 42)
+
+    o, new_pool = ops.paged_prefill(q, k_new, v_new, pool, bt, start, lens,
+                                    quant=quant, interpret=True)
+    want_pool = ref.paged_prefill_write_ref(k_new, v_new, pool, bt, start,
+                                            lens, quant=quant)
+    assert pool_equal(new_pool, want_pool)
+    want_o = ref.paged_prefill_attention_ref(
+        q, want_pool["k_pages"], want_pool["v_pages"], bt, start, lens,
+        k_scale_pages=want_pool.get("k_scale_pages"),
+        v_scale_pages=want_pool.get("v_scale_pages"))
+    for b in range(B):
+        n = int(lens[b])
+        np.testing.assert_allclose(np.asarray(o[b, :n]),
+                                   np.asarray(want_o[b, :n]),
+                                   rtol=2e-5, atol=1e-4)
+
+
+def test_ops_paged_prefill_sharded_byte_identical():
+    """tp=2 shard-group fused prefill == tp=1: concatenated head outputs
+    and per-shard pools reassemble bit-identically."""
+    B, S, H, KVH, d, ps, P, n_pg, tp = 2, 5, 4, 2, 16, 4, 9, 4, 2
+    start = jnp.asarray([3, 0], jnp.int32)
+    lens = jnp.asarray([5, 2], jnp.int32)
+    bt = jnp.asarray(np.random.RandomState(3).choice(
+        np.arange(1, P), (B, n_pg), replace=False), jnp.int32)
+    pool1 = make_pool(P, ps, KVH, d, None)
+    q = rand((B, S, H, d), 50)
+    k_new, v_new = rand((B, S, KVH, d), 51), rand((B, S, KVH, d), 52)
+
+    o1, new1 = ops.paged_prefill(q, k_new, v_new, pool1, bt, start, lens,
+                                 interpret=True)
+    KVHs = KVH // tp
+    pool2 = {k: jnp.stack([v[:, :, s * KVHs:(s + 1) * KVHs]
+                           for s in range(tp)])
+             for k, v in pool1.items()}
+    o2, new2 = ops.paged_prefill_sharded(q, k_new, v_new, pool2, bt, start,
+                                         lens, interpret=True)
+    assert bool(jnp.array_equal(o1, o2))
+    for k in new1:
+        merged = jnp.concatenate([new2[k][s] for s in range(tp)], axis=2)
+        assert bool(jnp.array_equal(new1[k], merged))
+
+
+def test_prefill_autotune_registry():
+    """Registered tuning entries steer block_q; unknown keys fall back."""
+    key = ops.prefill_tuning_key(4, 16, 2, 8, 4)
+    prev = ops.register_prefill_tuning({key: {"block_q": 2}})
+    try:
+        assert ops._prefill_tuned_block_q(4, 16, 2, 8, 4) == 2
+        assert ops._prefill_tuned_block_q(4, 16, 2, 64, 4) == 64
+    finally:
+        ops.register_prefill_tuning(prev)
+
+
+# --------------------------------------- model path vs write_prefill copy --
+
+@pytest.mark.parametrize("quant", [False, "int8", "fp8"])
+def test_direct_write_matches_write_prefill_route(quant):
+    """Fused paged prefill == the legacy dense-prefill + ``write_prefill``
+    copy route: identical next token, and the first layer's landed pool
+    bytes identical (deeper layers' K/V inherit attention's float error,
+    which fp32 keeps far from any argmax tie)."""
+    cfg = dataclasses.replace(REDUCED["qwen3-32b"], dtype="float32",
+                              cache_quant=quant)
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    plen, ps, num_pages = 11, 4, 16
+    toks = jax.random.randint(jax.random.fold_in(KEY, 60), (1, plen), 0,
+                              cfg.vocab_size)
+    n_pg = PC.pages_for_len(plen + 1, ps)
+    row = jnp.asarray([list(range(1, n_pg + 1))
+                       + [0] * (6 - n_pg)][:1], jnp.int32) \
+        if n_pg < 6 else jnp.asarray([list(range(1, n_pg + 1))], jnp.int32)
+
+    # legacy: dense prefill -> page-copy insert
+    lg_l, pre = M.prefill(cfg, params, {"tokens": toks})
+    cache_l = PC.init_paged_cache(cfg, num_pages, ps, 1)
+    cache_l = PC.write_prefill(cfg, cache_l, pre, row[0], 0, plen, plen, ps)
+    tok_l = int(jnp.argmax(lg_l[0, -1, :cfg.vocab_size]))
+
+    # fused: direct page writes, one call
+    cache_f = PC.init_paged_cache(cfg, num_pages, ps, 1)
+    hidden, cache_f = M.paged_prefill_step(
+        cfg, params, cache_f, toks, jnp.asarray([0], jnp.int32),
+        jnp.asarray([plen], jnp.int32), row)
+    lg_f = M.final_logits(cfg, params, hidden[:, plen - 1:plen])
+    tok_f = int(jnp.argmax(lg_f[0, -1, :cfg.vocab_size]))
+
+    assert tok_f == tok_l
+    # layer 0: same K/V inputs, same quantisation -> byte-identical pages
+    for leaf in ("k_pages", "v_pages"):
+        a = cache_f["stack"]["0"][leaf][0]
+        b = cache_l["stack"]["0"][leaf][0]
+        assert bool(jnp.array_equal(a, b)), f"layer-0 {leaf} differ"
+
+
+# ------------------------------------------------------- scheduler gates --
+
+def _mk_sched(cfg, params, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_seq_len", 64)
+    return ContinuousBatchingScheduler(cfg, params, **kw)
+
+
+def _serve(cfg, params, prompts, gens, **kw):
+    s = _mk_sched(cfg, params, **kw)
+    reqs = [s.submit(p, g) for p, g in zip(prompts, gens)]
+    s.run()
+    return [list(r.out_tokens) for r in reqs], s
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = dataclasses.replace(REDUCED["qwen3-32b"], dtype="float32")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(7)
+    prompts = [rng.randint(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 13, 21)]
+    gens = [5, 4, 6]
+    return cfg, params, prompts, gens
+
+
+def test_scheduler_fused_matches_legacy(dense_setup):
+    cfg, params, prompts, gens = dense_setup
+    legacy, _ = _serve(cfg, params, prompts, gens, prefill_fused=False)
+    fused, _ = _serve(cfg, params, prompts, gens, prefill_fused=True)
+    chunked, _ = _serve(cfg, params, prompts, gens, prefill_fused=True,
+                        prefill_budget=6)
+    assert fused == legacy
+    assert chunked == legacy
+
+
+def test_scheduler_kernel_matches_xla(dense_setup):
+    cfg, params, prompts, gens = dense_setup
+    xla, _ = _serve(cfg, params, prompts, gens, prefill_budget=8)
+    kern, _ = _serve(cfg, params, prompts, gens, prefill_budget=8,
+                     prefill_kernel=True)
+    assert kern == xla
+
+
+@pytest.mark.parametrize("quant", ["int8", "fp8"])
+def test_scheduler_quant_kernel_matches_xla(quant, dense_setup):
+    """Quantised pools: kernel on/off byte-identical at matching pool
+    dtype (the in-kernel quantisation is bit-equal to quantize_kv)."""
+    cfg, params, prompts, gens = dense_setup
+    qcfg = dataclasses.replace(cfg, cache_quant=quant)
+    xla, _ = _serve(qcfg, params, prompts[:2], gens[:2], prefill_budget=8)
+    kern, _ = _serve(qcfg, params, prompts[:2], gens[:2], prefill_budget=8,
+                     prefill_kernel=True)
+    assert kern == xla
+
+
+def test_scheduler_fused_tp2_matches_tp1(dense_setup):
+    cfg, params, prompts, gens = dense_setup
+    t1, _ = _serve(cfg, params, prompts, gens, prefill_budget=8)
+    t2, _ = _serve(cfg, params, prompts, gens, prefill_budget=8, tp=2)
+    assert t2 == t1
+
+
+def test_exact_prefill_archs_keep_sequential_path():
+    cfg = REDUCED["jamba-v0.1-52b"]
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    s = _mk_sched(cfg, params, prefill_fused=True)   # silently disabled
+    assert not s.prefill_fused
+
+
+# ------------------------------------------------- program cache + stats --
+
+def test_program_cache_shared_across_instances(dense_setup):
+    cfg, params, prompts, gens = dense_setup
+    SCH.clear_program_cache()
+    try:
+        _, s1 = _serve(cfg, params, prompts, gens, prefill_budget=6)
+        assert s1.stats["prefill_compiles"] > 0
+        assert s1.stats["prefill_dispatches"] > 0
+        size = SCH.program_cache_size()
+        _, s2 = _serve(cfg, params, prompts, gens, prefill_budget=6)
+        assert s2.stats["prefill_compiles"] == 0      # everything reused
+        assert s2.stats["prefill_dispatches"] == s1.stats[
+            "prefill_dispatches"]
+        assert SCH.program_cache_size() == size
+    finally:
+        SCH.clear_program_cache()
+
+
+def test_program_cache_keys_isolate_kernel_flag(dense_setup):
+    cfg, params, prompts, gens = dense_setup
+    SCH.clear_program_cache()
+    try:
+        _, s1 = _serve(cfg, params, prompts[:1], gens[:1])
+        _, s2 = _serve(cfg, params, prompts[:1], gens[:1],
+                       prefill_kernel=True)
+        assert s2.stats["prefill_compiles"] > 0       # distinct programs
+    finally:
+        SCH.clear_program_cache()
+
+
+def test_fused_halves_first_chunk_dispatches(dense_setup):
+    """The perf story behind BENCH_prefill.json: legacy monolithic
+    admission costs 2 dispatches (prefill + page-copy insert); fused
+    costs 1."""
+    cfg, params, prompts, gens = dense_setup
+    _, legacy = _serve(cfg, params, prompts[:1], gens[:1],
+                       prefill_fused=False)
+    _, fused = _serve(cfg, params, prompts[:1], gens[:1])
+    assert legacy.stats["prefill_dispatches"] == 2
+    assert fused.stats["prefill_dispatches"] == 1
