@@ -239,7 +239,10 @@ def _prefill_tuned_block_q(H, d, KVH, chunk, page_size) -> int:
                 pass
     entry = _PREFILL_TUNE.get(prefill_tuning_key(H, d, KVH, chunk, page_size))
     if entry and "block_q" in entry:
-        return int(entry["block_q"])
+        # clamp to the chunk width: speculative verify reuses this path at
+        # chunk = spec_k + 1 (a handful of rows), and a stale or hand-edited
+        # tune entry must never produce a query tile wider than the array
+        return min(int(entry["block_q"]), chunk)
     return min(chunk, 128)
 
 

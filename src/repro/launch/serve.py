@@ -196,6 +196,33 @@ def _prefix_stats(stats: dict) -> dict:
     return out
 
 
+def _spec_kw(args) -> dict:
+    """Speculative-decoding knobs for the scheduler/router constructors.
+
+    The draft model is a reduced config initialised from its own seed —
+    it shares only the tokenizer (vocab) with the target; the scheduler
+    validates that at construction.
+    """
+    if getattr(args, "spec", None) is None:
+        return {}
+    draft = None
+    if args.spec_draft:
+        dcfg = get_reduced(args.spec_draft)
+        draft = (dcfg, M.init(dcfg, jax.random.PRNGKey(args.seed + 1)))
+    return {"spec_k": args.spec, "spec_draft": draft}
+
+
+def _spec_stats(out: dict, args, stats) -> None:
+    if not getattr(args, "spec", None):
+        return
+    out["spec_k"] = args.spec
+    if args.spec_draft:
+        out["spec_draft"] = args.spec_draft
+    for k in ("spec_ticks", "spec_drafted", "spec_accepted",
+              "spec_accept_rate"):
+        out[k] = stats[k]
+
+
 def run_fleet(cfg, params, args) -> dict:
     """Replicated fabric: k scheduler replicas behind one router."""
     from repro.serving.router import ServingRouter
@@ -212,7 +239,7 @@ def run_fleet(cfg, params, args) -> dict:
                            max_seq_len=max_seq, route_policy=args.router,
                            prefix_cache=args.prefix_cache, tp=args.tp,
                            prefill_budget=args.chunked_prefill,
-                           disagg=args.disagg)
+                           disagg=args.disagg, **_spec_kw(args))
     tracer = None
     if args.trace_out or (args.events_out and not args.autoscale):
         tracer = Tracer()
@@ -253,6 +280,7 @@ def run_fleet(cfg, params, args) -> dict:
         out["prefill_chunk_tokens"] = fleet.get("prefill_chunk_tokens", 0)
     if args.disagg:
         out["migrations"] = router.stats.get("migrations", 0)
+    _spec_stats(out, args, fleet)
     out.update(_prefix_stats(fleet))
     if fleet.get("reserved_page_imbalance") is not None:
         out["reserved_page_imbalance"] = fleet["reserved_page_imbalance"]
@@ -273,7 +301,7 @@ def run_paged(cfg, params, args) -> dict:
         cfg, params, max_slots=start_slots, page_size=args.page_size,
         num_pages=start_slots * n_pg + 1 if args.autoscale else None,
         max_seq_len=max_seq, prefix_cache=args.prefix_cache, tp=args.tp,
-        prefill_budget=args.chunked_prefill)
+        prefill_budget=args.chunked_prefill, **_spec_kw(args))
     tracer = None
     if args.trace_out or (args.events_out and not args.autoscale):
         tracer = Tracer()
@@ -315,6 +343,7 @@ def run_paged(cfg, params, args) -> dict:
     if args.chunked_prefill:
         out["chunked_prefill"] = args.chunked_prefill
         out["prefill_chunk_tokens"] = sched.stats["prefill_chunk_tokens"]
+    _spec_stats(out, args, sched.stats)
     out.update(_prefix_stats(sched.stats))
     if ctl is not None:
         out["autoscale"] = ctl.summary()
@@ -397,6 +426,18 @@ def main() -> None:
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="paged engine: dump the typed metric registries "
                     "in Prometheus text exposition at end of run")
+    ap.add_argument("--spec", type=int, default=None, metavar="K",
+                    help="paged engine: speculative decoding — draft and "
+                    "batch-verify up to K tokens per stream per tick "
+                    "(greedy accept keeps tokens byte-identical to spec "
+                    "off; drafts come from n-gram prompt lookup unless "
+                    "--spec-draft names a model)")
+    ap.add_argument("--spec-draft", default=None, metavar="ARCH",
+                    choices=sorted(ARCHS),
+                    help="reduced draft model for --spec (attention-only, "
+                    "sharing the target's vocab), decoding through an "
+                    "incremental paged cache mirroring the target's page "
+                    "geometry; default is model-free n-gram lookup")
     ap.add_argument("--profile", action="store_true",
                     help="paged engine: wall-time every kernel dispatch "
                     "and report modeled FLOPs/bytes + roofline fractions "
@@ -430,6 +471,14 @@ def main() -> None:
             ap.error("--chunked-prefill requires --engine paged")
         if args.chunked_prefill < 1:
             ap.error("--chunked-prefill must be >= 1")
+    if args.spec is not None:
+        if args.engine != "paged":
+            ap.error("--spec requires --engine paged (speculation lives in "
+                     "the continuous-batching scheduler)")
+        if not 1 <= args.spec <= 32:
+            ap.error("--spec must be in [1, 32]")
+    if args.spec_draft and args.spec is None:
+        ap.error("--spec-draft requires --spec")
     if args.disagg:
         if args.engine != "paged" or args.replicas < 2:
             ap.error("--disagg requires --engine paged and --replicas >= 2 "

@@ -605,6 +605,12 @@ def _paged_prefill_write_attend(cfg: ModelConfig, pool: Dict[str, jnp.ndarray],
     padding (not written, output rows unspecified). Head-width-agnostic
     like the decode core, so the tp loop/shard paths reuse it per shard.
 
+    Two callers, and B>1 with ragged ``chunk_len`` (including 0 — all rows
+    dead, routed to the sink) is load-bearing for both: chunked prefill
+    (one chunk per prefilling slot) and speculative verify
+    (``model.paged_verify_step`` — a last-token+drafts chunk per decoding
+    slot, where every row's output feeds acceptance).
+
     With ``repro.models.flags.prefill_kernel()`` set (a trace-time flag)
     the Pallas write+attend pair from ``repro.kernels.paged_prefill``
     computes the same function without materialising the gathered cache.

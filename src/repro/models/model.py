@@ -140,6 +140,39 @@ def paged_decode_step(cfg: ModelConfig, params, cache, tokens: jnp.ndarray,
     return lg, new_cache
 
 
+def paged_verify_step(cfg: ModelConfig, params, cache, tokens: jnp.ndarray,
+                      seq_lens: jnp.ndarray, live: jnp.ndarray,
+                      block_table: jnp.ndarray, shard=None):
+    """Multi-token speculative verify through the fused paged-prefill path
+    (attention-only archs; SSM/hybrid verify is the scheduler's sequential
+    scan, exactly like chunked prefill's split).
+
+    tokens: (B, n) — per stream, row 0 its last real token, rows
+    ``1..live-1`` its draft tokens, each landing at absolute position
+    ``seq_lens[b] + t``; ``live``: (B,) live rows (0 for a non-decoding
+    slot — its rows are routed to the sink page). -> (logits (B, n, V),
+    new_cache).
+
+    A draft batch *is* a prompt chunk whose token ids happen to be
+    speculative: the chunk's K/V lands directly in the stream's pages, the
+    per-row causal mask makes row ``t`` attend prefix + rows ``<= t``, and
+    the pages are gathered once per stream instead of once per row (the
+    old batched-rows decode trick) — so verify also inherits the Pallas
+    write+attend kernels under ``flags.prefill_kernel``. Unlike prefill,
+    *every* row's logits are returned: per-row argmax gives the target
+    tokens greedy acceptance compares drafts against, byte-identical to
+    spec-off decoding. Rejected rows' K/V stay masked by ``seq_lens``
+    (which only advances past accepted tokens) and are overwritten in
+    place by later real tokens.
+    """
+    hidden, _, new_cache = lm_forward(cfg, params, tokens,
+                                      mode="paged_prefill", cache=cache,
+                                      cur_len=seq_lens, chunk_len=live,
+                                      block_table=block_table, shard=shard)
+    lg = final_logits(cfg, params, hidden)
+    return lg, new_cache
+
+
 def paged_prefill_step(cfg: ModelConfig, params, cache, tokens: jnp.ndarray,
                        start: jnp.ndarray, chunk_len: jnp.ndarray,
                        block_table: jnp.ndarray, shard=None):

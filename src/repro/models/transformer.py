@@ -92,9 +92,10 @@ def block_apply(cfg: ModelConfig, p: Dict[str, Any], x: jnp.ndarray, idx: int,
     tensor-parallel paged-decode path: head-sharded attention over per-shard
     page pools, expert-sharded MoE; SSM mixers stay replicated (their state
     is O(1) per sequence — nothing to split). ``mode == "paged_prefill"``
-    lands a prompt chunk (x: (B,S,D), live rows per ``chunk_len``) directly
-    into the pages at offset ``cur_len`` (attention-only archs — SSM/MoE
-    archs keep the exact sequential prefill path, see scheduler)."""
+    lands a chunk (x: (B,S,D), live rows per ``chunk_len``) directly into
+    the pages at offset ``cur_len`` — a prompt chunk, or a speculative
+    verify batch of last-token+drafts rows (attention-only archs — SSM/MoE
+    archs keep the exact sequential path, see scheduler)."""
     kind = cfg.block_kind(idx)
     local = kind == "attn_local"
     h = rmsnorm(x, p["ln1"], cfg.rms_eps)
@@ -199,6 +200,9 @@ def lm_forward(cfg: ModelConfig, params: Dict[str, Any], tokens: jnp.ndarray,
         (B,) live rows. The chunk's K/V is written directly into the pages
         and its queries attend prefix+chunk in the same pass (fused
         chunked prefill — no dense intermediate, no ``write_prefill``).
+        Speculative verify (``model.paged_verify_step``) rides the same
+        mode with a last-token+drafts chunk per decoding slot, so the
+        batch is the full slot table and ``chunk_len`` may be 0.
     """
     assert not cfg.is_encdec
     B, S = tokens.shape

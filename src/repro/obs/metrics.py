@@ -47,6 +47,15 @@ def log_buckets(lo: float, hi: float, per_decade: int = 4) -> Tuple[float, ...]:
     The growth factor ``10 ** (1/per_decade)`` bounds the relative error
     of any quantile read from the histogram: a value lands in the bucket
     whose upper bound is at most ``factor`` times the value.
+
+    Bounds are computed by direct exponentiation (``lo * 10**(i/per_decade)``)
+    rather than repeated multiplication: accumulating the step made decade
+    bounds drift (``9.999999999999998`` instead of ``10.0``), so an integer
+    observation sitting exactly on a nominal bound landed one full bucket
+    high and ``Histogram.quantile`` disagreed with ``nearest_rank`` by a
+    whole growth factor on boundary-valued data. With exact decade bounds
+    (``10**k`` is exact in binary float) the two estimators agree exactly
+    whenever every observation equals a bucket bound.
     """
     if lo <= 0:
         raise ValueError(f"log buckets need lo > 0, got {lo}")
@@ -54,10 +63,11 @@ def log_buckets(lo: float, hi: float, per_decade: int = 4) -> Tuple[float, ...]:
         raise ValueError(f"log buckets need hi > lo, got [{lo}, {hi}]")
     if per_decade < 1:
         raise ValueError("per_decade must be >= 1")
-    step = 10.0 ** (1.0 / per_decade)
     out = [float(lo)]
+    i = 1
     while out[-1] < hi:
-        out.append(out[-1] * step)
+        out.append(float(lo) * 10.0 ** (i / per_decade))
+        i += 1
     return tuple(out)
 
 

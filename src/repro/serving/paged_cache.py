@@ -768,6 +768,59 @@ def ssm_slot_view(cache: Any, state: Any) -> Any:
     return walk(cache, state)
 
 
+def ssm_leaves(cache: Any) -> Any:
+    """The SSM sub-tree of the paged cache (attention pools pruned).
+
+    The speculative verify scan emits this per step, stacking one snapshot
+    per verified token along a new leading axis — the rollback ledger
+    ``select_ssm_steps`` indexes into. Returns None when the arch has no
+    SSM layers. Safe to call under trace (pure pytree restructuring).
+    """
+    def walk(node: Any) -> Any:
+        if not isinstance(node, dict) or _is_attn(node):
+            return None
+        if _is_ssm(node):
+            return dict(node)
+        out = {k: walk(v) for k, v in node.items()}
+        out = {k: v for k, v in out.items() if v is not None}
+        return out or None
+    return walk(cache)
+
+
+def select_ssm_steps(cache: Any, stacked: Any, idx) -> Any:
+    """Speculative rollback for hybrid archs: set each slot's SSM state to
+    ``stacked[idx[slot], ..., slot, ...]``.
+
+    ``stacked`` is the ``ssm_leaves`` tree with a leading verify-step axis
+    (one snapshot per teacher-forced token, from the scan's ys); ``idx``
+    (max_slots,) holds each slot's accepted draft count, so the selected
+    state is the one after folding exactly the accepted tokens — the PR-6
+    snapshot rule applied per step instead of per chunk. Attention pools
+    pass through (rejected K/V is masked by ``seq_lens`` and overwritten
+    in place later). Traceable — the verify program calls it in-dispatch.
+    """
+    idx = jnp.asarray(idx, jnp.int32)
+
+    def walk(node: Any, snode: Any, stacked_ax: bool) -> Any:
+        if _is_attn(node):
+            return node
+        if _is_ssm(node):
+            out = {}
+            for k in node:
+                s = snode[k]              # (steps, [L,] max_slots, ...)
+                slot_ax = 2 if stacked_ax else 1
+                ish = [1] * s.ndim
+                ish[slot_ax] = s.shape[slot_ax]
+                ix = idx.reshape(ish)
+                out[k] = jnp.take_along_axis(s, ix, axis=0)[0].astype(
+                    node[k].dtype)
+            return out
+        return {k: walk(node[k], snode[k], stacked_ax or k == "stack")
+                for k in node}
+
+    return walk(cache, stacked, False)
+
+
 def merge_ssm_slot(cache: Any, view: Any, slot) -> Any:
     """Fold a stepped batch-1 view back: attention pools are taken from the
     view (they were updated in place), SSM leaves written at ``slot``."""

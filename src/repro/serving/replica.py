@@ -84,12 +84,13 @@ class ServingReplica:
               tp: int = 1, hostname: Optional[str] = None,
               hostnames: Optional[Sequence[str]] = None,
               prefill_budget: Optional[int] = None,
-              role: str = "mixed") -> "ServingReplica":
+              role: str = "mixed", spec_k: Optional[int] = None,
+              spec_draft=None) -> "ServingReplica":
         sched = ContinuousBatchingScheduler(
             cfg, params, max_slots=max_slots, page_size=page_size,
             num_pages=num_pages, max_seq_len=max_seq_len,
             prefix_cache=prefix_cache, tp=tp, prefill_budget=prefill_budget,
-            role=role)
+            role=role, spec_k=spec_k, spec_draft=spec_draft)
         return cls(replica_id, sched, hostname=hostname, hostnames=hostnames)
 
     # -------------------------------------------------------------- state --
@@ -150,7 +151,12 @@ class ServingReplica:
         """Verbatim page handoff: copy the donor slot's KV pages into this
         replica's pool, then release them on the donor."""
         slot = self.sched.adopt(req, donor.sched, donor_slot)
-        donor.sched.surrender_slot(donor_slot)
+        # the donor may have died (and freed its copy of the pages) between
+        # the copy and this release — surrender only a slot the donor still
+        # holds for THIS stream, or a failed donor's already-cleared slot
+        # would double-free
+        if donor.sched.slot_req[donor_slot] is req:
+            donor.sched.surrender_slot(donor_slot)
         req.replica = self.replica_id
         return slot
 
@@ -194,8 +200,17 @@ class ServingReplica:
         # node is gone; the scheduler object just stops being stepped)
         for slot, req in enumerate(self.sched.slot_req):
             if req is not None:
-                lost.append(req)
-                req.prefill_pos = None    # a mid-prefill stream restarts
+                if req.replica is not None \
+                        and req.replica != self.replica_id:
+                    # adopted away mid-handoff (scheduler.adopt transfers
+                    # ownership at the copy point): the decode side owns the
+                    # only live copy of the stream — free our now-orphaned
+                    # source pages, but do NOT requeue it or touch its
+                    # cursor, or the stream would decode twice
+                    self.sched.stats["migrations_out"] += 1
+                else:
+                    lost.append(req)
+                    req.prefill_pos = None  # a mid-prefill stream restarts
                 self.sched.alloc.free(self.sched.slot_pages[slot])
                 self.sched.slot_pages[slot] = []
                 self.sched.slot_req[slot] = None

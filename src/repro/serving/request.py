@@ -45,6 +45,12 @@ class RequestState(enum.Enum):
     WAITING = "waiting"
     PREFILLING = "prefilling"
     ACTIVE = "active"
+    # ACTIVE with draft tokens in flight: the scheduler verified (or is
+    # about to verify) speculative drafts for this stream this tick.
+    # Speculation never changes emitted tokens — greedy accept keeps the
+    # byte-identity contract — so SPECULATING is observability, not a new
+    # lifecycle stage: the stream still finishes through ACTIVE semantics.
+    SPECULATING = "speculating"
     FINISHED = "finished"
 
 
@@ -69,6 +75,12 @@ class Request:
     replica: Optional[int] = None         # replica currently decoding this
     reroutes: int = 0                     # re-prefills after a replica loss
     migrations: int = 0                   # verbatim KV-page handoffs (disagg)
+    # speculative-decoding bookkeeping (spec_k set on the scheduler):
+    # draft tokens proposed / accepted for this stream, and whether drafts
+    # were in flight on the most recent verify tick
+    spec_drafted: int = 0
+    spec_accepted: int = 0
+    speculating: bool = False
 
     @property
     def plen(self) -> int:
@@ -85,6 +97,8 @@ class Request:
         if self.admit_step is not None:
             if self.prefill_pos is not None:
                 return RequestState.PREFILLING
+            if self.speculating:
+                return RequestState.SPECULATING
             return RequestState.ACTIVE
         return RequestState.WAITING
 

@@ -91,7 +91,8 @@ class ServingRouter:
                  placement: Optional[Sequence[Any]] = None,
                  route_policy: str = "least-pages",
                  prefix_cache: Optional[bool] = None, tp: int = 1,
-                 prefill_budget: Optional[int] = None, disagg: int = 0):
+                 prefill_budget: Optional[int] = None, disagg: int = 0,
+                 spec_k: Optional[int] = None, spec_draft=None):
         if not supports_paged(cfg):
             raise NotImplementedError(
                 f"{cfg.name}: the fabric routes over paged schedulers; "
@@ -111,7 +112,8 @@ class ServingRouter:
         self.replica_kw = dict(max_slots=max_slots, page_size=page_size,
                                num_pages=num_pages, max_seq_len=max_seq_len,
                                prefix_cache=prefix_cache, tp=tp,
-                               prefill_budget=prefill_budget)
+                               prefill_budget=prefill_budget,
+                               spec_k=spec_k, spec_draft=spec_draft)
         # prefill/decode disaggregation: True once the fleet splits roles
         self.disagg = disagg > 0
         self.route_policy = route_policy
@@ -594,9 +596,13 @@ class ServingRouter:
                     "prefix_hits", "cached_tokens", "cow_forks",
                     "prefill_chunk_tokens", "migrations_in",
                     "migrations_out", "prefill_dispatches",
-                    "prefill_compiles"):
+                    "prefill_compiles", "spec_ticks", "spec_drafted",
+                    "spec_accepted"):
             out[key] = (sum(s.get(key, 0) for s in per_replica.values())
                         + self._retired_stats.get(key, 0))
+        # derived, not summed: the fleet accept rate over all drafts so far
+        out["spec_accept_rate"] = round(
+            out["spec_accepted"] / max(out["spec_drafted"], 1), 4)
         out["prefix_hit_rate"] = round(self.prefix_hit_rate(), 3)
         imb = self.imbalance()
         if imb is not None:

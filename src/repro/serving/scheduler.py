@@ -98,7 +98,29 @@ from repro.serving.request import Request, make_request
 DEFAULT_BUCKETS = (8, 16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512)
 
 __all__ = ["ContinuousBatchingScheduler", "DEFAULT_BUCKETS", "Request",
-           "clear_program_cache", "program_cache_size", "supports_paged"]
+           "clear_program_cache", "program_cache_size", "spec_accept",
+           "supports_paged"]
+
+_EMPTY_DRAFT = np.zeros((0,), np.int32)
+
+
+def spec_accept(drafts, targets) -> int:
+    """Greedy rejection sampling, argmax edition: the number of leading
+    draft tokens equal to the target model's argmax at the same position.
+
+    ``targets[i]`` is the target argmax given the context plus drafts
+    ``< i`` — accepted drafts are exactly the tokens spec-off greedy
+    decoding would have emitted, so acceptance preserves byte identity by
+    construction. The verify tick emits ``accepted + 1`` tokens: the
+    accepted prefix plus the target's correction (or bonus) token. Pure
+    host-side rule — the hypothesis ledger machine drives it directly.
+    """
+    j = 0
+    for d, t in zip(drafts, targets):
+        if int(d) != int(t):
+            break
+        j += 1
+    return j
 
 # Compiled prefill-family programs shared across *every* scheduler instance
 # in the process. A fleet of replicas (router / autoscaler / disaggregation
@@ -143,7 +165,8 @@ class ContinuousBatchingScheduler:
                  prefix_cache: Optional[bool] = None, tp: int = 1,
                  shard_mesh=None, prefill_budget: Optional[int] = None,
                  role: str = "mixed", prefill_fused: Optional[bool] = None,
-                 prefill_kernel: bool = False):
+                 prefill_kernel: bool = False,
+                 spec_k: Optional[int] = None, spec_draft=None):
         if not supports_paged(cfg):
             raise NotImplementedError(
                 f"{cfg.name}: paged serving covers decoder-only non-MLA "
@@ -194,6 +217,40 @@ class ContinuousBatchingScheduler:
         # bake the Pallas write+attend kernel pair into the fused programs
         # (interpret-mode on CPU; flags.use_prefill_kernel at trace time)
         self.prefill_kernel = bool(prefill_kernel)
+        # speculative decoding: each verify tick runs every decoding slot's
+        # last token plus up to spec_k draft tokens as parallel rows of one
+        # paged decode dispatch, greedy-accepts the longest matching prefix,
+        # and rolls the rejected tail back (seq_lens; SSM snapshots for
+        # hybrids). Greedy accept keeps emitted tokens byte-identical to
+        # spec-off decoding — the serve_bench --spec hard gate.
+        if spec_k is not None and not 1 <= spec_k <= 32:
+            raise ValueError("spec_k must be in [1, 32] draft tokens per "
+                             "tick (bounds the verify row count)")
+        if spec_draft is not None and spec_k is None:
+            raise ValueError("spec_draft needs spec_k set")
+        if spec_k is not None and cfg.n_routed_experts > 0:
+            raise ValueError(
+                "speculative decoding needs byte-deterministic decode; MoE "
+                "capacity grouping couples concurrent tokens (the multi-slot "
+                "caveat in docs/serving.md), so spec_k covers dense/SSM "
+                "archs only")
+        if spec_draft is not None:
+            dcfg = spec_draft[0]
+            if dcfg.is_encdec:
+                raise ValueError("draft model must be decoder-only")
+            if dcfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    f"draft model must share the tokenizer: draft vocab "
+                    f"{dcfg.vocab_size} != target {cfg.vocab_size}")
+            if dcfg.n_routed_experts > 0 or any(
+                    dcfg.block_kind(i) == "ssm"
+                    for i in range(dcfg.n_layers)):
+                raise ValueError(
+                    "draft model must be attention-only: the incremental "
+                    "draft cache rolls rejected positions back by length "
+                    "masking, which has no SSM-state or MoE analogue")
+        self.spec_k = spec_k
+        self.spec_draft = spec_draft            # (draft_cfg, draft_params)
         self.buckets = tuple(sorted(b for b in prefill_buckets
                                     if b <= max_seq_len))
         # shared-prefix cache: admission shares the longest cached prefix's
@@ -212,6 +269,20 @@ class ContinuousBatchingScheduler:
 
         self.cache = PC.init_paged_cache(cfg, num_pages, page_size, max_slots,
                                          tp=tp)
+        # incremental draft-model cache: a parallel (unsharded) page pool at
+        # the DRAFT's dims mirroring the target's page geometry 1:1 — the
+        # draft reuses the target's block tables verbatim, so page alloc /
+        # free / COW need no second ledger. Per tick the draft advances by
+        # one teacher-forced token (the stream's last committed token, the
+        # same input verify row 0 gets) plus spec_k greedy steps: O(k) draft
+        # work per tick instead of re-prefilling the context. The cache is
+        # best-effort state: stale or collided bytes (COW sharing, a
+        # migration) only lower the accept rate — every draft token is
+        # target-verified, so emitted tokens never depend on it.
+        if spec_draft is not None:
+            self._draft_cache = PC.init_paged_cache(
+                spec_draft[0], num_pages, page_size, max_slots)
+            self._draft_ready = [False] * max_slots
         self.alloc = PC.PageAllocator(num_pages)
         self.alloc.on_free = self.index.invalidate_page
         self.block_table = np.full((max_slots, self.n_pg), PC.SINK_PAGE,
@@ -253,7 +324,7 @@ class ContinuousBatchingScheduler:
         self._trace_own_clock = True            # router flips: fleet clock
         self.profiler = None                    # set via enable_profiling
         self.registry = MetricsRegistry()
-        _gauges = ("peak_pages",)
+        _gauges = ("peak_pages", "spec_accept_rate")
         self.stats = StatsView({
             k: (self.registry.gauge if k in _gauges
                 else self.registry.counter)(f"serving_{k}", unit=u)
@@ -267,7 +338,11 @@ class ContinuousBatchingScheduler:
                          ("migrations_in", "streams"),
                          ("migrations_out", "streams"),
                          ("prefill_compiles", "programs"),
-                         ("prefill_dispatches", "dispatches"))})
+                         ("prefill_dispatches", "dispatches"),
+                         ("spec_ticks", "ticks"),
+                         ("spec_drafted", "tokens"),
+                         ("spec_accepted", "tokens"),
+                         ("spec_accept_rate", ""))})
         self.h_queue_wait = self.registry.histogram(
             "serving_queue_wait_ticks", TICK_BUCKETS, unit="ticks",
             help="ticks from due arrival to admission")
@@ -277,6 +352,12 @@ class ContinuousBatchingScheduler:
         self.h_latency = self.registry.histogram(
             "serving_latency_ticks", TICK_BUCKETS, unit="ticks",
             help="ticks from due arrival to finish")
+        # integer unit-width bounds: emitted-per-verify is a small integer,
+        # so quantile() is exact (boundary-valued data, cf. log_buckets)
+        self.h_spec_accept = self.registry.histogram(
+            "serving_spec_accept_tokens",
+            tuple(float(b) for b in range(1, 34)), unit="tokens",
+            help="tokens emitted per speculative verify (accepted + 1)")
 
         # donate the cache: pools are sized to fill HBM, so the step must
         # update them in place rather than double-buffer (cf. trainer.py)
@@ -462,6 +543,214 @@ class ContinuousBatchingScheduler:
 
         return self._get_program("seq_suffix", s, build)
 
+    # -------------------------------------------------- speculative decode --
+    def _verify_fn(self, n: int):
+        """Grouped speculative verify, ``n = spec_k + 1`` rows per slot
+        (dense archs). tokens (S, n): slot ``s``'s row 0 carries its last
+        real token at position ``seq_lens[s]``, rows ``1..cap`` its draft
+        tokens at the following positions; ``live`` (S,) is ``cap + 1``
+        (0 masks a non-decoding slot onto the sink page). One fused
+        paged-prefill dispatch (``M.paged_verify_step``) gathers each
+        stream's pages once, lands all rows' K/V, and returns the per-row
+        argmax — the target tokens the host's ``spec_accept`` compares
+        drafts against. ``self.prefill_kernel`` is baked in at trace time,
+        so verify rides the Pallas write+attend kernels exactly like
+        chunked prefill.
+        """
+        cfg, shard, kernel = self.cfg, self.shard, self.prefill_kernel
+
+        def build():
+            def fn(params, cache, tokens, lens, bt, live):
+                with model_flags.use_prefill_kernel(kernel):
+                    lg, cache = M.paged_verify_step(cfg, params, cache,
+                                                    tokens, lens, live, bt,
+                                                    shard=shard)
+                outs = jnp.argmax(lg[..., :cfg.vocab_size],
+                                  axis=-1).astype(jnp.int32)
+                return outs, cache
+
+            return jax.jit(fn, donate_argnums=(1,))
+
+        return self._get_program("verify", n, build)
+
+    def _verify_seq_fn(self, n: int):
+        """Sequential speculative verify for SSM/hybrid archs: a lax.scan
+        of ``n`` full-batch paged decode steps teacher-forced with the
+        draft matrix, collecting per-step argmax *and* per-step SSM
+        snapshots (``PC.ssm_leaves``). Acceptance is computed in-dispatch
+        (cumprod of draft==argmax matches) and ``PC.select_ssm_steps``
+        rolls every slot's SSM state back to its accepted step — the PR-6
+        snapshot rule per verified token, so a partial reject leaves the
+        recurrence exactly where spec-off decoding would have.
+        """
+        cfg, shard = self.cfg, self.shard
+
+        def build():
+            def fn(params, cache, tokens, lens0, bt, live):
+                # tokens (S, n); lens0/live (S,); bt (S, n_pg)
+                xs = jnp.moveaxis(tokens, 1, 0)[:, :, None]    # (n, S, 1)
+
+                def body(carry, tok):
+                    lens, cc = carry
+                    lg, cc = M.paged_decode_step(cfg, params, cc, tok, lens,
+                                                 bt, shard=shard)
+                    out = jnp.argmax(lg[:, -1, :cfg.vocab_size],
+                                     axis=-1).astype(jnp.int32)
+                    return (lens + 1, cc), (out, PC.ssm_leaves(cc))
+
+                (_, cache), (outs, states) = jax.lax.scan(
+                    body, (lens0, cache), xs)
+                # draft i (row i of the token matrix) is accepted iff it
+                # equals the argmax of row i-1 and sits below the live count
+                i = jnp.arange(1, n)[:, None]                  # (n-1, 1)
+                match = ((outs[:-1] == jnp.moveaxis(tokens, 1, 0)[1:])
+                         & (i < live[None, :]))
+                j = jnp.cumprod(match.astype(jnp.int32), axis=0).sum(axis=0)
+                cache = PC.select_ssm_steps(cache, states, j)
+                return outs, j, cache
+
+            return jax.jit(fn, donate_argnums=(1,))
+
+        return self._get_program("spec_seq", n, build)
+
+    def _draft_prefill_fn(self, n: int):
+        """Draft-cache catch-up program at padded length ``n``: land one
+        stream's committed context (``s_live`` tokens) into its draft-pool
+        pages through the stream's own block table, exactly like a target
+        prompt chunk. Runs once per stream per residency — at its first
+        speculative tick after admission or adoption — after which the
+        per-tick advance keeps the cache current at O(spec_k).
+        """
+        dcfg = self.spec_draft[0]
+
+        def build():
+            def fn(dparams, dcache, tokens, s_live, row):
+                _, dcache = M.paged_prefill_step(
+                    dcfg, dparams, dcache, tokens[None],
+                    jnp.zeros((1,), jnp.int32), s_live[None], row[None])
+                return dcache
+
+            # key on the draft cfg too: _get_program's key carries the
+            # target cfg, and two schedulers may pair different drafts
+            return jax.jit(fn, donate_argnums=(1,))
+
+        return self._get_program(("spec_dpre", dcfg), n, build)
+
+    def _draft_advance_fn(self):
+        """Batched draft advance-and-propose program, all slots in one
+        dispatch. ``spec_k + 1`` scanned paged decode steps on the draft
+        cache: step 0 teacher-forces each live stream's last committed
+        token at position ``seq_lens`` (the same input verify row 0 gets),
+        steps 1..k feed the previous argmax — the first k outputs are the
+        draft tokens. Every step's K/V lands in the stream's pages, so an
+        accepted draft's K/V is already correct at its position and the
+        next tick teacher-forces only the correction token; a rejected
+        tail is masked by ``seq_lens`` and overwritten in place, the same
+        rollback the target cache uses. The step-k input (draft k-1)
+        writes position ``seq_lens + k`` so a full accept leaves no hole.
+        Dead rows route to the sink page.
+        """
+        dcfg, k = self.spec_draft[0], self.spec_k
+
+        def build():
+            def fn(dparams, dcache, last, lens, live, bt):
+                btm = jnp.where(live[:, None], bt,
+                                PC.SINK_PAGE).astype(jnp.int32)
+
+                def body(carry, i):
+                    tok, dc = carry
+                    pos = jnp.where(live, lens + i, 0).astype(jnp.int32)
+                    lg, dc = M.paged_decode_step(dcfg, dparams, dc,
+                                                 tok[:, None], pos, btm)
+                    nxt = jnp.argmax(lg[:, -1, :dcfg.vocab_size],
+                                     axis=-1).astype(jnp.int32)
+                    return (nxt, dc), nxt
+
+                (_, dcache), ds = jax.lax.scan(
+                    body, (last, dcache),
+                    jnp.arange(k + 1, dtype=jnp.int32))
+                return ds[:k].T, dcache          # (S, k) draft tokens
+
+            return jax.jit(fn, donate_argnums=(1,))
+
+        return self._get_program(("spec_adv", dcfg), k, build)
+
+    def _model_drafts(self, decoding: List[int],
+                      caps: Dict[int, int]) -> Dict[int, np.ndarray]:
+        """Draft-model proposals for every eligible decoding slot, two
+        dispatches worst case: catch-up prefills for newly resident
+        streams, then one batched advance. Slots whose cap is below
+        ``spec_k`` are excluded (their draft K/V would overrun the pages
+        grown for ``cap``) and fall back to n-gram drafting.
+        """
+        dcfg, dparams = self.spec_draft
+        k, S = self.spec_k, self.max_slots
+        elig = [s for s in decoding if caps[s] == k]
+        if not elig:
+            return {}
+        for slot in elig:
+            if self._draft_ready[slot]:
+                continue
+            req = self.slot_req[slot]
+            L = int(self.seq_lens[slot])
+            ctx = np.concatenate([req.prompt,
+                                  np.asarray(req.out_tokens, np.int32)])[:L]
+            b = next((x for x in self.buckets if x >= L),
+                     -(-L // self.page_size) * self.page_size)
+            toks = np.zeros((b,), np.int32)
+            toks[:L] = ctx
+            self._draft_cache = self._timed(
+                "spec_draft", self._draft_prefill_fn(b), dparams,
+                self._draft_cache, jnp.asarray(toks),
+                jnp.asarray(L, jnp.int32),
+                jnp.asarray(self.block_table[slot]), tokens=L, ctx_tokens=L)
+            self._draft_ready[slot] = True
+        live = np.zeros((S,), bool)
+        live[elig] = True
+        ds, self._draft_cache = self._timed(
+            "spec_draft", self._draft_advance_fn(), dparams,
+            self._draft_cache, jnp.asarray(self.last_tokens[:, 0]),
+            jnp.asarray(self.seq_lens), jnp.asarray(live),
+            jnp.asarray(self.block_table),
+            tokens=(k + 1) * len(elig),
+            ctx_tokens=int(np.sum(self.seq_lens[elig])))
+        ds = np.asarray(ds)
+        return {slot: ds[slot].astype(np.int32) for slot in elig}
+
+    # -------------------------------------------------------- draft sources --
+    def _draft(self, req: Request, cap: int) -> np.ndarray:
+        """Up to ``cap`` n-gram draft tokens for a decoding stream
+        (host-side) — the default speculator, and the fallback for slots
+        the draft model skips. A deterministic function of the stream's
+        context, so a fleet re-route re-drafts identically.
+        """
+        if cap <= 0:
+            return _EMPTY_DRAFT
+        return self._ngram_draft(req, cap)
+
+    def _ngram_draft(self, req: Request, cap: int) -> np.ndarray:
+        """Prompt-lookup drafting: find the most recent earlier occurrence
+        of the context's final m-gram (m = 3, 2, 1) and propose the tokens
+        that followed it. Free (no model call) and strong exactly where
+        speculation pays: continuations that repeat prompt or generated
+        material."""
+        ctx = np.concatenate([req.prompt,
+                              np.asarray(req.out_tokens, np.int32)])
+        T = int(ctx.shape[0])
+        for m in (3, 2, 1):
+            if T < m + 1:
+                continue
+            pat = ctx[T - m:]
+            win = np.lib.stride_tricks.sliding_window_view(ctx, m)
+            hits = np.flatnonzero((win == pat).all(axis=1))
+            hits = hits[hits < T - m]
+            if hits.size:
+                p = int(hits[-1])
+                d = ctx[p + m:p + m + cap]
+                if d.size:
+                    return d.astype(np.int32)
+        return _EMPTY_DRAFT
+
     # ------------------------------------------------------- observability --
     def set_tracer(self, tracer, *, own_clock: bool = True) -> None:
         """Attach a lifecycle tracer (``repro.obs.trace.Tracer``).
@@ -634,6 +923,8 @@ class ContinuousBatchingScheduler:
         self.slot_pages[slot] = pages
         self.slot_reserve[slot] = reserve
         self.slot_shared[slot] = shared
+        if self.spec_draft is not None:
+            self._draft_ready[slot] = False
         req.admit_step = self.step_idx
         req.out_tokens.append(first)
         self.stats["prefills"] += 1
@@ -792,6 +1083,8 @@ class ContinuousBatchingScheduler:
         self.slot_pages[slot] = pages
         self.slot_reserve[slot] = reserve
         self.slot_shared[slot] = shared
+        if self.spec_draft is not None:
+            self._draft_ready[slot] = False
         req.admit_step = self.step_idx
         req.prefill_pos = start
         self._prefill_fifo.append(slot)
@@ -974,9 +1267,21 @@ class ContinuousBatchingScheduler:
         self.slot_pages[slot] = list(pages)
         self.slot_reserve[slot] = need
         self.slot_shared[slot] = 0
+        if self.spec_draft is not None:
+            # the draft cache did not travel with the migration; the next
+            # speculative tick re-prefills it here. It may draft different
+            # tokens than the donor would have — acceptance may dip for a
+            # tick, emitted tokens cannot change (every draft is verified)
+            self._draft_ready[slot] = False
         if self.prefix_cache:
             self.index.insert(req.prompt, pages, state=state)
         req.migrations += 1
+        # ownership transfers at the copy point, not at surrender: if the
+        # donor dies inside the adopt→surrender window, its fail() sees the
+        # stream already belongs elsewhere and must not requeue it (the
+        # adopter owns the only live copy of its pages)
+        if self.replica_id is not None:
+            req.replica = self.replica_id
         self.stats["migrations_in"] += 1
         tr = self.tracer
         if tr is not None:
@@ -1072,6 +1377,112 @@ class ContinuousBatchingScheduler:
             k = min(k, min(future))
         return max(1, min(k, max_fuse))
 
+    # ------------------------------------------------- speculative verify --
+    def _spec_step(self, decoding: List[int],
+                   done_now: List[Request]) -> List[Request]:
+        """One draft-and-verify tick over every decoding slot.
+
+        Each stream proposes up to ``spec_k`` draft tokens (n-gram lookup
+        or the draft model), the target verifies last-token + drafts in a
+        single paged dispatch, and the longest matching prefix plus the
+        target's correction token is emitted — ``accepted + 1`` tokens per
+        stream per tick, byte-identical to spec-off decoding. Rollback:
+        ``seq_lens`` advances only past accepted positions (rejected K/V
+        stays masked and is overwritten in place), per-slot draft caps
+        route overshoot rows to the sink page so the admission reservation
+        is never exceeded, and hybrid archs restore the SSM state of the
+        accepted step in-dispatch (``PC.select_ssm_steps``).
+        """
+        k, n, S = self.spec_k, self.spec_k + 1, self.max_slots
+        caps: Dict[int, int] = {}
+        for slot in decoding:
+            req = self.slot_req[slot]
+            # cap < remaining: emitting cap+1 tokens can never overrun the
+            # token budget (nor the worst-case page reservation)
+            caps[slot] = min(k, req.remaining_tokens - 1)
+        for slot in decoding:                # pages for positions L..L+cap
+            req = self.slot_req[slot]
+            needed = (int(self.seq_lens[slot]) + caps[slot]) \
+                // self.page_size + 1
+            while len(self.slot_pages[slot]) < needed:
+                new = self.alloc.alloc(1, owner=req.rid)[0]
+                self.block_table[slot, len(self.slot_pages[slot])] = new
+                self.slot_pages[slot].append(new)
+        # pages must exist before drafting: the draft model writes its own
+        # K/V at positions L..L+k through the same (just-grown) block table
+        model_drafts = (self._model_drafts(decoding, caps)
+                        if self.spec_draft is not None else {})
+        drafts: Dict[int, np.ndarray] = {}
+        for slot in decoding:
+            req = self.slot_req[slot]
+            d = model_drafts.get(slot)
+            if d is None:
+                d = self._draft(req, caps[slot])
+            caps[slot] = len(d)
+            drafts[slot] = d
+            req.speculating = bool(len(d))
+            req.spec_drafted += len(d)
+            self.stats["spec_drafted"] += len(d)
+        self.stats["peak_pages"] = max(self.stats["peak_pages"],
+                                       self.alloc.num_allocated)
+        ctx = int(np.sum(self.seq_lens))
+        toks = np.zeros((S, n), np.int32)
+        lens0 = np.zeros((S,), np.int32)
+        bt = np.full((S, self.n_pg), PC.SINK_PAGE, np.int32)
+        live = np.zeros((S,), np.int32)
+        for slot in decoding:
+            cap = caps[slot]
+            toks[slot, 0] = self.last_tokens[slot, 0]
+            if cap:
+                toks[slot, 1:1 + cap] = drafts[slot]
+            lens0[slot] = self.seq_lens[slot]
+            bt[slot] = self.block_table[slot]
+            live[slot] = cap + 1
+        if self._has_ssm:
+            outs, js, self.cache = self._timed(
+                "verify", self._verify_seq_fn(n), self.params, self.cache,
+                jnp.asarray(toks), jnp.asarray(lens0), jnp.asarray(bt),
+                jnp.asarray(live), tokens=n * len(decoding), ctx_tokens=ctx)
+            outs = np.asarray(outs).T                      # (S, n)
+            js = np.asarray(js)
+        else:
+            outs, self.cache = self._timed(
+                "verify", self._verify_fn(n), self.params, self.cache,
+                jnp.asarray(toks), jnp.asarray(lens0), jnp.asarray(bt),
+                jnp.asarray(live), tokens=n * len(decoding), ctx_tokens=ctx)
+            outs = np.asarray(outs)                        # (S, n)
+            js = None
+        self.stats["decode_steps"] += 1
+        self.stats["spec_ticks"] += 1
+        self.step_idx += 1                  # before _finish (cf. step())
+        tr = self.tracer
+        for slot in decoding:
+            req = self.slot_req[slot]
+            cap = caps[slot]
+            row = outs[slot]
+            j = (int(js[slot]) if js is not None
+                 else spec_accept(drafts[slot], row[:cap]))
+            emitted = [int(t) for t in row[:j + 1]]
+            req.out_tokens.extend(emitted)
+            req.spec_accepted += j
+            self.stats["spec_accepted"] += j
+            self.stats["tokens_out"] += len(emitted)
+            self.h_spec_accept.observe(len(emitted))
+            self.seq_lens[slot] += j + 1
+            self.last_tokens[slot, 0] = emitted[-1]
+            if tr is not None and cap:
+                now = self._tnow()
+                tr.span("spec_verify", req.rid, now - 1, now,
+                        replica=self.replica_id, drafted=cap, accepted=j)
+            if req.done:
+                req.speculating = False
+                done_now.append(req)
+                self._finish(slot)
+        if self.stats["spec_drafted"]:
+            self.stats["spec_accept_rate"] = round(
+                self.stats["spec_accepted"] / self.stats["spec_drafted"], 4)
+        return done_now
+
     # -------------------------------------------------------------- resize --
     def resize(self, *, max_slots: Optional[int] = None,
                num_pages: Optional[int] = None) -> None:
@@ -1105,6 +1516,9 @@ class ContinuousBatchingScheduler:
             if num_pages > self.alloc.num_pages:
                 self.cache = PC.resize_cache_pages(self.cache, num_pages,
                                                    tp=self.tp)
+                if self.spec_draft is not None:
+                    self._draft_cache = PC.resize_cache_pages(
+                        self._draft_cache, num_pages)
                 self.alloc.grow(num_pages)
             else:
                 self.alloc.request_shrink(num_pages)
@@ -1127,6 +1541,9 @@ class ContinuousBatchingScheduler:
         self.slot_resume_state.extend([None] * pad)
         self.slot_parked.extend([False] * pad)
         self.cache = PC.resize_cache_slots(self.cache, new)
+        if self.spec_draft is not None:
+            self._draft_cache = PC.resize_cache_slots(self._draft_cache, new)
+            self._draft_ready.extend([False] * pad)
         self.max_slots = new
 
     def _settle_resize(self) -> None:
@@ -1143,11 +1560,18 @@ class ContinuousBatchingScheduler:
             del self.slot_resume_state[n:]
             del self.slot_parked[n:]
             self.cache = PC.resize_cache_slots(self.cache, n)
+            if self.spec_draft is not None:
+                self._draft_cache = PC.resize_cache_slots(
+                    self._draft_cache, n)
+                del self._draft_ready[n:]
             self.max_slots = n
         if self.alloc.shrink_ready():
-            self.cache = PC.resize_cache_pages(self.cache,
-                                               self.alloc.complete_shrink(),
+            new_pages = self.alloc.complete_shrink()
+            self.cache = PC.resize_cache_pages(self.cache, new_pages,
                                                tp=self.tp)
+            if self.spec_draft is not None:
+                self._draft_cache = PC.resize_cache_pages(
+                    self._draft_cache, new_pages)
 
     # ---------------------------------------------------------------- step --
     @property
@@ -1187,11 +1611,15 @@ class ContinuousBatchingScheduler:
                     if r is not None and r.prefill_pos is None
                     and not self.slot_parked[i]]
         if not decoding:
-            if self.num_active:             # prefill-only / parked-only tick
-                self.step_idx += 1
-                return done_now
+            # the idle fast-forward may only fire when the scheduler is
+            # TRULY idle: any resident stream — including a PREFILLING
+            # backlog or a parked handoff slot, neither of which decodes —
+            # must see the clock advance one tick at a time, or queue-wait
+            # and TTFT histograms under-count the wait that backlog caused
+            busy = (self.num_active > 0 or bool(self._prefill_fifo)
+                    or any(self.slot_parked))
             arrivals = [r.arrival_step for r in self.waiting]
-            if arrivals and min(arrivals) > self.step_idx:
+            if not busy and arrivals and min(arrivals) > self.step_idx:
                 # idle gap: skip toward the next arrival instead of spinning
                 # ticks — capped at max_fuse so a control loop driving this
                 # scheduler still samples (and can scale in) inside the gap
@@ -1199,6 +1627,8 @@ class ContinuousBatchingScheduler:
             else:
                 self.step_idx += 1
             return done_now
+        if self.spec_k is not None:
+            return self._spec_step(decoding, done_now)
         k = self._fuse_k(max_fuse, decoding)
         if self._prefill_fifo:
             k = 1                           # chunks land between single ticks

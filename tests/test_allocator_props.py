@@ -381,6 +381,43 @@ class MigrationMachine(RuleBasedStateMachine):
                 del self.refs["prefill"][p]
         stream["side"], stream["pages"] = "decode", dst
 
+    @precondition(lambda self: any(s["side"] == "prefill"
+                                   for s in self.streams.values()))
+    @rule(data=st.data())
+    def fail_during_handoff(self, data):
+        """The donor dies between the adopt copy and the surrender (the
+        fail_replica x in-flight migration window): its fail sweep frees
+        the source pages exactly once, the guarded surrender then sees a
+        cleared slot and must not free again — probe that a second free
+        of the recycled pages raises without mutating either ledger — and
+        the stream survives wholly decode-resident (never requeued)."""
+        sids = sorted(k for k, s in self.streams.items()
+                      if s["side"] == "prefill")
+        sid = data.draw(st.sampled_from(sids), label="fail-mid-handoff")
+        stream = self.streams[sid]
+        src = stream["pages"]
+        if not self.pools["decode"].can_alloc(len(src)):
+            return
+        dst = self.pools["decode"].alloc(len(src), owner=sid)
+        self.index["decode"].insert(stream["prompt"], dst)
+        for p in dst:
+            self.refs["decode"][p] = self.refs["decode"].get(p, 0) + 1
+        self.pools["prefill"].free(src)      # the donor's fail sweep
+        for p in src:
+            self.refs["prefill"][p] -= 1
+            if not self.refs["prefill"][p]:
+                del self.refs["prefill"][p]
+        recycled = [p for p in src if self.pools["prefill"].ref(p) == 0]
+        if recycled:
+            before = (self.pools["prefill"].num_free,
+                      self.pools["prefill"].num_allocated)
+            with pytest.raises(ValueError):
+                self.pools["prefill"].free(recycled)
+            after = (self.pools["prefill"].num_free,
+                     self.pools["prefill"].num_allocated)
+            assert before == after, "raising double-free mutated the pool"
+        stream["side"], stream["pages"] = "decode", dst
+
     @precondition(lambda self: self.streams)
     @rule(data=st.data())
     def finish(self, data):

@@ -94,6 +94,27 @@ def test_histogram_quantile_agrees_with_nearest_rank_within_a_bucket():
         assert exact <= approx <= exact * step, (q, exact, approx)
 
 
+def test_log_buckets_decade_bounds_exact_for_boundary_values():
+    """Bugfix regression: cumulative ``*= step`` accumulation drifted the
+    decade bounds (10.0 became 9.999...), so a sample worth exactly one
+    decade fell into the bucket ABOVE its bound and ``quantile`` read a
+    full bucket higher than ``nearest_rank`` on boundary-valued data.
+    Direct exponentiation makes every decade bound exact."""
+    b = log_buckets(1.0, 10000.0, per_decade=4)
+    for decade in (10.0, 100.0, 1000.0, 10000.0):
+        assert decade in b, f"decade bound {decade} not exact in {b}"
+    # boundary-valued samples: bucket upper bounds themselves. A value
+    # equal to a bound belongs to that bound's bucket ((lo, bound]), so
+    # the histogram quantile must agree with nearest-rank EXACTLY — no
+    # within-one-bucket tolerance for data sitting on the bounds.
+    h = Histogram("boundary", b)
+    samples = [1.0, 10.0, 10.0, 100.0, 1000.0, 10000.0]
+    for v in samples:
+        h.observe(v)
+    for q in (1, 25, 50, 75, 90, 99, 100):
+        assert h.quantile(q) == nearest_rank(samples, q), q
+
+
 def test_histogram_merge_adds_counts_and_rejects_mismatched_bounds():
     a = Histogram("a", (1.0, 2.0))
     b = Histogram("b", (1.0, 2.0))

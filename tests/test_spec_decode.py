@@ -1,0 +1,475 @@
+"""Speculative decoding in the paged scheduler.
+
+The contract under test is byte identity: greedy draft-and-verify emits
+exactly the tokens spec-off decoding would, for every composition the
+scheduler supports — dense and SSM archs, the Pallas prefill-kernel verify
+path, tensor parallelism, chunked prefill, the prefix cache, the draft
+model, and the fleet router. Around that core: the host-side acceptance
+rule and n-gram speculator as units, construction-time rejections (MoE,
+vocab mismatch, spec_draft without spec_k), cap semantics (a verify tick
+can never overrun the token budget or the admission page reservation),
+and the two bugfix regressions that rode this PR — the idle fast-forward
+firing past a PREFILLING/parked backlog, and a donor replica failing
+mid-handoff double-freeing the migrated stream's pages.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import REDUCED
+from repro.models import model as M
+from repro.serving.replica import ServingReplica
+from repro.serving.request import RequestState, make_request
+from repro.serving.router import ServingRouter
+from repro.serving.scheduler import ContinuousBatchingScheduler, spec_accept
+
+_PARAMS = {}
+
+
+def _params(arch):
+    if arch not in _PARAMS:
+        cfg = dataclasses.replace(REDUCED[arch], dtype="float32")
+        _PARAMS[arch] = (cfg, M.init(cfg, jax.random.PRNGKey(0)))
+    return _PARAMS[arch]
+
+
+def _trace(cfg, seed, n=4, p_lo=3, p_hi=22, g_lo=2, g_hi=7):
+    rng = np.random.RandomState(seed)
+    return [(rng.randint(0, cfg.vocab_size,
+                         size=int(rng.randint(p_lo, p_hi + 1))
+                         ).astype(np.int32),
+             int(rng.randint(g_lo, g_hi + 1))) for _ in range(n)]
+
+
+def _serve(cfg, params, trace, arrivals=None, **kw):
+    s = ContinuousBatchingScheduler(cfg, params, max_slots=3, page_size=8,
+                                    max_seq_len=64, **kw)
+    reqs = [s.submit(p, g, arrival_step=arrivals[i] if arrivals else i // 2)
+            for i, (p, g) in enumerate(trace)]
+    s.run()
+    return s, [list(r.out_tokens) for r in reqs]
+
+
+# ------------------------------------------------------------ host units --
+
+def test_spec_accept_unit():
+    assert spec_accept([], []) == 0
+    assert spec_accept([5, 6, 7], [5, 6, 7]) == 3
+    assert spec_accept([5, 6, 7], [5, 6, 9]) == 2
+    assert spec_accept([5, 6, 7], [9, 6, 7]) == 0
+    # acceptance stops at the first mismatch even if later tokens agree
+    assert spec_accept([1, 2, 3], [1, 9, 3]) == 1
+
+
+def test_ngram_draft_unit():
+    draft = ContinuousBatchingScheduler._ngram_draft
+    # the final 3-gram (4,5,6) occurred earlier, followed by 7,8
+    req = make_request(0, [1, 4, 5, 6, 7, 8, 2, 4, 5, 6], 4)
+    np.testing.assert_array_equal(draft(None, req, 2), [7, 8])
+    # cap truncates the proposal
+    np.testing.assert_array_equal(draft(None, req, 1), [7])
+    # generated tokens extend the lookup context
+    req2 = make_request(1, [4, 5, 9, 9], 8)
+    req2.out_tokens = [4, 5]
+    d = draft(None, req2, 3)
+    assert d.size and int(d[0]) == 9          # 2-gram (4,5) -> 9 follows
+    # no earlier occurrence of any suffix m-gram: no proposal
+    req3 = make_request(2, [1, 2, 3, 4], 4)
+    assert draft(None, req3, 4).size == 0
+
+
+# ----------------------------------------------- construction rejections --
+
+def test_spec_construction_rejections():
+    cfg, params = _params("qwen3-32b")
+    with pytest.raises(ValueError, match="spec_k must be in"):
+        ContinuousBatchingScheduler(cfg, params, max_slots=2, page_size=8,
+                                    max_seq_len=64, spec_k=0)
+    with pytest.raises(ValueError, match="spec_draft needs spec_k"):
+        ContinuousBatchingScheduler(cfg, params, max_slots=2, page_size=8,
+                                    max_seq_len=64, spec_draft=(cfg, params))
+    moe = dataclasses.replace(REDUCED["qwen2-moe-a2.7b"], dtype="float32")
+    with pytest.raises(ValueError, match="MoE"):
+        ContinuousBatchingScheduler(moe, None, max_slots=2, page_size=8,
+                                    max_seq_len=64, spec_k=4)
+    other = dataclasses.replace(REDUCED["gemma2-2b"], vocab_size=256)
+    with pytest.raises(ValueError, match="share the tokenizer"):
+        ContinuousBatchingScheduler(cfg, params, max_slots=2, page_size=8,
+                                    max_seq_len=64, spec_k=4,
+                                    spec_draft=(other, None))
+    # the incremental draft cache rolls back by length masking, which SSM
+    # recurrent state (and MoE capacity grouping) cannot honour
+    ssm = dataclasses.replace(REDUCED["mamba2-1.3b"],
+                              vocab_size=cfg.vocab_size)
+    with pytest.raises(ValueError, match="attention-only"):
+        ContinuousBatchingScheduler(cfg, params, max_slots=2, page_size=8,
+                                    max_seq_len=64, spec_k=4,
+                                    spec_draft=(ssm, None))
+
+
+# ----------------------------------------------------------- byte identity --
+
+def test_spec_token_identity_dense():
+    """Acceptance core: spec-on emits spec-off's exact tokens (dense arch),
+    for a trivial and a deep draft budget, with clean ledgers and
+    consistent speculation stats."""
+    cfg, params = _params("qwen3-32b")
+    trace = _trace(cfg, seed=0)
+    _, base = _serve(cfg, params, trace)
+    for k in (1, 4):
+        s, toks = _serve(cfg, params, trace, spec_k=k)
+        assert toks == base, f"spec_k={k} changed tokens"
+        assert s.alloc.num_allocated == 0 and s.reserved_pages == 0
+        assert s.stats["spec_ticks"] > 0
+        assert s.stats["spec_accepted"] <= s.stats["spec_drafted"]
+        assert 0.0 <= s.stats["spec_accept_rate"] <= 1.0
+        # every decode-side token was emitted by a verify tick: the
+        # accepted+1 histogram's mass is total output minus the per-stream
+        # prefill token
+        assert s.h_spec_accept.sum == sum(g for _, g in trace) - len(trace)
+        assert s.h_spec_accept.count >= s.stats["spec_ticks"]
+
+
+def test_spec_token_identity_ssm():
+    """SSM archs verify through the sequential scan with in-dispatch state
+    rollback (PC.select_ssm_steps) — a partial reject must leave the
+    recurrence exactly where spec-off decoding would have."""
+    cfg, params = _params("mamba2-1.3b")
+    trace = _trace(cfg, seed=1, n=3)
+    _, base = _serve(cfg, params, trace)
+    s, toks = _serve(cfg, params, trace, spec_k=3)
+    assert toks == base
+    assert s.alloc.num_allocated == 0 and s.reserved_pages == 0
+    assert s.stats["spec_ticks"] > 0
+
+
+def test_spec_token_identity_prefill_kernel():
+    """The grouped verify dispatch rides the Pallas write+attend pair when
+    prefill_kernel is baked in — same bytes as the XLA path."""
+    cfg, params = _params("qwen3-32b")
+    trace = _trace(cfg, seed=2, n=3)
+    _, base = _serve(cfg, params, trace)
+    _, toks = _serve(cfg, params, trace, spec_k=3, prefill_kernel=True)
+    assert toks == base
+
+
+def test_spec_token_identity_tp2():
+    cfg, params = _params("qwen3-32b")
+    trace = _trace(cfg, seed=3, n=3)
+    _, base = _serve(cfg, params, trace)
+    _, toks = _serve(cfg, params, trace, spec_k=3, tp=2)
+    assert toks == base
+
+
+def test_spec_composes_with_chunked_prefill_and_prefix_cache():
+    cfg, params = _params("qwen3-32b")
+    rng = np.random.RandomState(4)
+    persona = rng.randint(0, cfg.vocab_size, size=18).astype(np.int32)
+    trace = [(np.concatenate([persona,
+                              rng.randint(0, cfg.vocab_size, size=3 + u)
+                              ]).astype(np.int32), 5) for u in range(3)]
+    # followers arrive after the leader's last chunk lands (a chunked
+    # admission indexes its pages only once the whole prompt is in)
+    arrivals = [0, 8, 10]
+    base_s, base = _serve(cfg, params, trace, arrivals, prefill_budget=4,
+                          prefix_cache=True)
+    s, toks = _serve(cfg, params, trace, arrivals, prefill_budget=4,
+                     prefix_cache=True, spec_k=4)
+    assert toks == base
+    assert s.stats["prefix_hits"] == base_s.stats["prefix_hits"] >= 1
+    assert s.alloc.num_allocated == 0 and s.reserved_pages == 0
+
+
+def test_spec_draft_model_identity():
+    """Draft-model speculation (here self-drafting: the target arch
+    drafting for itself through the incremental paged draft cache, the
+    strongest possible draft) emits identical bytes — acceptance verifies
+    every draft token against the target regardless of where the draft
+    came from."""
+    cfg, params = _params("qwen3-32b")
+    trace = _trace(cfg, seed=5, n=3)
+    _, base = _serve(cfg, params, trace)
+    s, toks = _serve(cfg, params, trace, spec_k=3,
+                     spec_draft=(cfg, params))
+    assert toks == base
+    assert s.stats["spec_drafted"] > 0
+
+
+def test_spec_draft_cache_tracks_context():
+    """The incremental draft cache stays coherent with the committed
+    stream across accept/reject rollbacks: a self-draft whose cache
+    tracked the context accepts nearly everything (it predicts exactly
+    what the target then emits, modulo dispatch-shape float noise), while
+    a desynced cache would draft from garbage K/V and accept ~nothing."""
+    cfg, params = _params("qwen3-32b")
+    trace = _trace(cfg, seed=7, n=4, g_lo=10, g_hi=14)
+    s, toks = _serve(cfg, params, trace, spec_k=3,
+                     spec_draft=(cfg, params))
+    _, base = _serve(cfg, params, trace)
+    assert toks == base
+    assert s.stats["spec_accept_rate"] >= 0.75
+
+
+def test_spec_fleet_identity():
+    cfg, params = _params("qwen3-32b")
+    trace = _trace(cfg, seed=6, n=5)
+    _, base = _serve(cfg, params, trace)
+    r = ServingRouter(cfg, params, replicas=2, max_slots=3, page_size=8,
+                      max_seq_len=64, prefix_cache=False, spec_k=4)
+    reqs = [r.submit(p, g, arrival_step=i // 2)
+            for i, (p, g) in enumerate(trace)]
+    r.run()
+    assert [list(q.out_tokens) for q in reqs] == base
+    fleet = r.fleet_stats()
+    assert fleet["spec_ticks"] > 0
+    assert fleet["spec_accept_rate"] == pytest.approx(
+        fleet["spec_accepted"] / max(fleet["spec_drafted"], 1), abs=1e-4)
+
+
+# ------------------------------------------------------------ cap semantics --
+
+def test_spec_cap_never_overruns_budget_or_reservation():
+    """A verify tick emits accepted+1 tokens; the draft cap (remaining-1)
+    must make that overshoot-proof: exact token budgets, and page growth
+    that never exceeds the admission's worst-case reservation."""
+    cfg, params = _params("qwen3-32b")
+    # repetitive prompts make n-gram drafting fire hard at a deep budget
+    prompt = np.asarray([3, 7, 3, 7, 3, 7, 3, 7, 3, 7], np.int32)
+    trace = [(prompt, 1), (prompt, 2), (prompt, 9)]
+    _, base = _serve(cfg, params, trace)
+    s, toks = _serve(cfg, params, trace, spec_k=8)
+    assert toks == base
+    for (_, g), t in zip(trace, toks):
+        assert len(t) == g, "verify tick overran the token budget"
+    assert s.alloc.num_allocated == 0 and s.reserved_pages == 0
+    # peak page use stayed within the sum of worst-case reservations
+    worst = sum(-(-(len(p) + g) // s.page_size) for p, g in trace)
+    assert s.stats["peak_pages"] <= worst
+
+
+def test_speculating_state_is_observability_only():
+    cfg, params = _params("qwen3-32b")
+    s = ContinuousBatchingScheduler(cfg, params, max_slots=2, page_size=8,
+                                    max_seq_len=64, spec_k=4)
+    prompt = np.asarray([3, 7, 3, 7, 3, 7], np.int32)
+    req = s.submit(prompt, 6)
+    seen = set()
+    while not req.done:
+        s.step()
+        seen.add(req.state)
+    assert req.state is RequestState.FINISHED
+    assert RequestState.SPECULATING in seen   # drafts were in flight
+    assert not req.speculating                # cleared at finish
+    assert req.spec_accepted <= req.spec_drafted
+
+
+# ----------------------------------------------- bugfix #1: fast-forward --
+
+def test_idle_fast_forward_skips_gap_capped_at_max_fuse():
+    cfg, params = _params("qwen3-32b")
+    s = ContinuousBatchingScheduler(cfg, params, max_slots=2, page_size=8,
+                                    max_seq_len=64)
+    s.submit(np.arange(4, dtype=np.int32), 2, arrival_step=50)
+    s.step(max_fuse=16)
+    assert s.step_idx == 16                  # toward the arrival, capped
+    s.step(max_fuse=64)
+    assert s.step_idx == 50                  # lands exactly on it
+
+
+def test_fast_forward_never_fires_past_prefilling_backlog():
+    """Bugfix regression: a chunked-prefill backlog has no decoding slots,
+    but the scheduler is NOT idle — the clock must advance one tick per
+    step (queue-wait/TTFT accounting depends on it), never jump toward a
+    future arrival."""
+    cfg, params = _params("qwen3-32b")
+    s = ContinuousBatchingScheduler(cfg, params, max_slots=2, page_size=8,
+                                    max_seq_len=64, prefill_budget=3)
+    s.submit(np.arange(12, dtype=np.int32), 2, arrival_step=0)
+    s.submit(np.arange(4, dtype=np.int32), 2, arrival_step=100)
+    s.step(max_fuse=16)                      # admits; first chunk lands
+    t = s.step_idx
+    assert t == 1
+    while any(r is not None and r.prefill_pos is not None
+              for r in s.slot_req):
+        s.step(max_fuse=16)
+        assert s.step_idx == t + 1, \
+            "fast-forward fired with a PREFILLING backlog"
+        t = s.step_idx
+
+
+def test_fast_forward_never_fires_past_parked_handoff_slot():
+    """Same rule for a prefill-role replica's parked slots: a stream
+    awaiting page handoff keeps the scheduler busy."""
+    cfg, params = _params("qwen3-32b")
+    s = ContinuousBatchingScheduler(cfg, params, max_slots=2, page_size=8,
+                                    max_seq_len=64, role="prefill")
+    s.submit(np.arange(6, dtype=np.int32), 4, arrival_step=0)
+    for _ in range(8):
+        if s.handoff_ready():
+            break
+        s.step(max_fuse=16)
+    assert s.handoff_ready(), "prefill-role slot should park after prompt"
+    s.submit(np.arange(4, dtype=np.int32), 2, arrival_step=100)
+    t = s.step_idx
+    s.step(max_fuse=16)
+    assert s.step_idx == t + 1, "fast-forward fired over a parked slot"
+
+
+# -------------------------------------------- bugfix #3: fail mid-handoff --
+
+def _disagg_pair(cfg, params):
+    pre = ServingReplica.build(cfg, params, 0, max_slots=2, page_size=8,
+                               max_seq_len=64, role="prefill",
+                               prefix_cache=False)
+    dec = ServingReplica.build(cfg, params, 1, max_slots=2, page_size=8,
+                               max_seq_len=64, role="decode",
+                               prefix_cache=False)
+    return pre, dec
+
+
+def test_fail_after_adopt_does_not_requeue_or_double_free():
+    """The donor dies between the page copy and the surrender. Ownership
+    transferred at the copy point, so the dead donor must free its orphaned
+    source pages but NOT hand the stream back for re-prefill (it would
+    decode twice), and the guarded surrender must not double-free."""
+    cfg, params = _params("qwen3-32b")
+    trace = [(np.arange(6, dtype=np.int32), 4)]
+    _, base = _serve(cfg, params, trace)
+    pre, dec = _disagg_pair(cfg, params)
+    req = make_request(0, trace[0][0], trace[0][1])
+    pre.accept(req)
+    while not pre.handoff_ready():
+        pre.step()
+    donor_slot = pre.handoff_ready()[0]
+    # scheduler-level adopt = the page copy; ownership moves here (the
+    # fix: adopt stamps req.replica, not the later surrender)
+    dec.sched.adopt(req, pre.sched, donor_slot)
+    assert req.replica == dec.replica_id
+    lost = pre.fail()                        # donor dies mid-handoff
+    assert req not in lost, "adopted-away stream requeued (would decode 2x)"
+    assert pre.sched.alloc.num_allocated == 0, "donor leaked source pages"
+    assert pre.sched.stats["migrations_out"] == 1
+    # the replica-level surrender guard sees the cleared slot and skips —
+    # a second free of already-freed pages would raise in the allocator
+    assert pre.sched.slot_req[donor_slot] is not req
+    while not req.done:
+        dec.step()
+    assert list(req.out_tokens) == base[0], "handoff changed tokens"
+    assert dec.sched.alloc.num_allocated == 0
+    assert dec.sched.reserved_pages == 0
+
+
+def test_clean_handoff_surrender_still_fires():
+    """Control for the guard: in the normal order (donor alive) the
+    replica-level adopt must still surrender the donor slot."""
+    cfg, params = _params("qwen3-32b")
+    pre, dec = _disagg_pair(cfg, params)
+    req = make_request(0, np.arange(6, dtype=np.int32), 3)
+    pre.accept(req)
+    while not pre.handoff_ready():
+        pre.step()
+    donor_slot = pre.handoff_ready()[0]
+    dec.adopt(req, pre, donor_slot)
+    assert pre.sched.slot_req[donor_slot] is None
+    assert pre.sched.alloc.num_allocated == 0
+    assert pre.sched.stats["migrations_out"] == 1
+    while not req.done:
+        dec.step()
+    assert dec.sched.alloc.num_allocated == 0
+
+
+# ----------------------------------------- accept/rollback ledger machine --
+
+# guarded import (not module-level importorskip: the identity tests above
+# must run with or without hypothesis)
+try:
+    from hypothesis import settings, strategies as st
+    from hypothesis.stateful import (RuleBasedStateMachine, initialize,
+                                     invariant, rule)
+except ImportError:                           # pragma: no cover
+    st = None
+
+_V = 17                                       # toy vocab
+
+
+def _oracle(ctx):
+    """Deterministic greedy target model: next token from the context."""
+    return (sum(int(t) * (i + 1) for i, t in enumerate(ctx)) * 31
+            + len(ctx)) % _V
+
+
+if st is not None:
+    class SpecLedgerMachine(RuleBasedStateMachine):
+        """Host-side model of one slot's draft-and-verify ledger.
+
+        Drives ``spec_accept`` with arbitrary draft sequences against a
+        deterministic oracle target and checks, after every verify tick, the
+        three properties ``_spec_step`` relies on:
+
+        * byte identity — emitted tokens are exactly the oracle's greedy
+          continuation, whatever the drafts were;
+        * budget safety — capping drafts at ``remaining - 1`` means emitting
+          ``accepted + 1`` tokens can never overrun ``max_new_tokens``;
+        * reservation safety — pages grown for positions ``L..L+cap`` never
+          exceed the admission's worst-case reservation.
+        """
+
+        PS = 4                                    # page size
+
+        @initialize(prompt=st.lists(st.integers(0, _V - 1), min_size=1,
+                                    max_size=8),
+                    max_new=st.integers(1, 12))
+        def begin(self, prompt, max_new):
+            self.prompt = list(prompt)
+            self.max_new = max_new
+            # prefill emits the first token (the scheduler's admission does)
+            self.out = [_oracle(self.prompt)]
+            self.seq_len = len(prompt) + 1
+            self.pages = -(-self.seq_len // self.PS)
+            self.reservation = -(-(len(prompt) + max_new) // self.PS)
+
+        @rule(data=st.data(), k=st.integers(1, 8))
+        def verify_tick(self, data, k):
+            if len(self.out) >= self.max_new:
+                return
+            cap = min(k, self.max_new - len(self.out) - 1)
+            drafts = data.draw(st.lists(st.integers(0, _V - 1), max_size=cap)
+                               if cap > 0 else st.just([]), label="drafts")
+            # page growth for positions seq_len .. seq_len+cap (the verify
+            # rows' write positions), exactly _spec_step's formula
+            needed = (self.seq_len + len(drafts)) // self.PS + 1
+            self.pages = max(self.pages, needed)
+            ctx = self.prompt + self.out
+            targets = [_oracle(ctx + drafts[:i])
+                       for i in range(len(drafts) + 1)]
+            j = spec_accept(drafts, targets)
+            emitted = targets[:j + 1]
+            self.out.extend(emitted)
+            self.seq_len += j + 1
+
+        @invariant()
+        def emits_greedy_bytes(self):
+            ctx = list(self.prompt)
+            for i, tok in enumerate(self.out):
+                assert tok == _oracle(ctx), \
+                    f"output diverged from greedy at position {i}"
+                ctx.append(tok)
+
+        @invariant()
+        def never_overruns(self):
+            assert len(self.out) <= self.max_new, "token budget overrun"
+            assert self.seq_len == len(self.prompt) + len(self.out)
+            assert self.pages <= self.reservation, \
+                "verify page growth exceeded the admission reservation"
+
+
+    TestSpecLedgerProps = SpecLedgerMachine.TestCase
+    TestSpecLedgerProps.settings = settings(max_examples=60,
+                                            stateful_step_count=30,
+                                            deadline=None)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_spec_ledger_props():
+        """Stateful accept/rollback ledger properties need hypothesis."""
