@@ -1,0 +1,55 @@
+"""Assert benchmark hard gates in CI.
+
+Usage:  python benchmarks/check_bench.py REPORT.json [REPORT.json ...]
+
+Every benchmark ``--out`` report shares one schema (written by
+``serve_bench.write_report`` and friends): top-level ``bench`` names the
+mode and ``gates`` maps hard-gate names to booleans. This gate loads each
+report, asserts every gate is true, and exits non-zero naming the
+failures — the single CI post-step that replaced the per-bench heredocs.
+
+A report with an empty ``gates`` dict passes (that bench has no hard
+gates — its numbers are advisory); a report *missing* the schema keys
+fails, so a bench that silently stops writing gates cannot green CI.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def check(path: str) -> list:
+    """Failure messages for one report file (empty list == pass)."""
+    try:
+        with open(path) as fh:
+            data = json.load(fh)
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable report ({e})"]
+    if not isinstance(data, dict) or "bench" not in data \
+            or not isinstance(data.get("gates"), dict):
+        return [f"{path}: not a shared-schema bench report "
+                "(missing 'bench'/'gates' keys)"]
+    return [f"{path} [{data['bench']}]: gate '{name}' failed"
+            for name, ok in data["gates"].items() if ok is not True]
+
+
+def main(argv: list) -> int:
+    if not argv:
+        print("usage: check_bench.py REPORT.json [REPORT.json ...]",
+              file=sys.stderr)
+        return 2
+    failures = []
+    for path in argv:
+        bad = check(path)
+        failures += bad
+        if not bad:
+            with open(path) as fh:
+                n = len(json.load(fh)["gates"])
+            print(f"OK: {path} ({n} gate{'s' if n != 1 else ''})")
+    for msg in failures:
+        print(f"FAIL: {msg}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -63,6 +63,23 @@ simulator — see the report's ``note``), with accept-rate and
 emitted-per-verify stats. ``--out`` writes ``BENCH_spec.json``;
 ``--smoke --spec`` is the CI speculation smoke step.
 
+``--sessions`` switches to **kv-tier mode**: a session-heavy trace —
+3x ``--batch`` interactive multi-turn sessions with idle gaps between
+turns — served by the paged scheduler with the host-RAM page tier on vs
+off, on the *same* HBM page pool. Tier-off drops every chain at finish
+and re-prefills each turn; tier-on retains chains, preempts cold ones
+to host RAM under pressure, and the recompute-vs-transfer cost model
+decides per chain whether resume swaps in or re-prefills. Byte identity
+tier-on vs tier-off is the hard gate, fp32 AND int8 (swaps preserve
+quantised pool bytes exactly); both cost-model paths firing and bounded
+resume latency are gated alongside. ``--out`` writes
+``BENCH_kv_tier.json``; ``--smoke --sessions`` is the CI kv-tier smoke
+step.
+
+Every ``--out`` report shares one schema: top-level ``bench`` names the
+mode and ``gates`` maps hard-gate names to booleans —
+``benchmarks/check_bench.py`` asserts them in CI.
+
 ``--trace-out`` / ``--metrics-out`` (any mode) run one extra pass of the
 trace *after* the timed passes with the observability plane attached
 (docs/observability.md) and export the lifecycle trace (Chrome
@@ -93,6 +110,20 @@ from repro.serving import paged_cache as PC
 from repro.serving.request import make_request
 from repro.serving.router import ServingRouter
 from repro.serving.scheduler import ContinuousBatchingScheduler
+
+
+def write_report(args, out, bench, gates):
+    """Every benchmark report under one schema: ``bench`` names the mode,
+    ``gates`` holds the hard-gate booleans, and the mode-specific payload
+    rides alongside. Prints the report, honours ``--out``, and returns
+    the names of failed gates — ``benchmarks/check_bench.py`` asserts the
+    same booleans in CI, one gate for every bench artifact."""
+    report = {"bench": bench, **out, "gates": gates}
+    print(json.dumps(report, indent=2))
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(report, fh, indent=2)
+    return [k for k, ok in gates.items() if not ok]
 
 
 def export_obs_artifacts(args, make_engine, workload):
@@ -806,6 +837,185 @@ def bench_prefill(cfg, params, args):
     return out
 
 
+# -------------------------------------------------------------- sessions --
+
+def make_session_bases(cfg, rng, n, short_lo, short_hi, long_lo, long_hi):
+    """Opening prompts for ``n`` interactive sessions: alternating short
+    chats and document-grounded sessions. The long sessions' chains are
+    what the cost model swaps to host RAM; the short ones are what it
+    re-prefills — the workload needs both sides of the crossover."""
+    out = []
+    for i in range(n):
+        lo, hi = (long_lo, long_hi) if i % 2 else (short_lo, short_hi)
+        plen = int(rng.randint(lo, hi + 1))
+        out.append(rng.randint(0, cfg.vocab_size, size=plen
+                               ).astype(np.int32))
+    return out
+
+
+def run_sessions(sched, bases, turns, gen, new_lo, new_hi, gap, seed):
+    """Drive ``turns`` rounds of multi-turn sessions: each round submits
+    every session's running transcript plus fresh user tokens (staggered
+    arrivals), drains the scheduler, then appends the assistant reply to
+    the transcript — the drain is the idle gap every session shares
+    between turns. The extension draws come from ``seed`` alone, so two
+    runs diverge only if their output tokens do (the identity gate
+    cascades through every turn). Returns (wall, per-session per-turn
+    tokens, stats delta)."""
+    rng = np.random.RandomState(seed)
+    prompts = [np.asarray(b, dtype=np.int32) for b in bases]
+    history = [[] for _ in bases]
+    before = dict(sched.stats)
+    t0 = time.time()
+    for t in range(turns):
+        base = sched.step_idx + (gap if t else 0)
+        reqs = [sched.submit(p, gen, arrival_step=base + i // 4)
+                for i, p in enumerate(prompts)]
+        sched.run()
+        for i, r in enumerate(reqs):
+            history[i].append(list(r.out_tokens))
+            ext = rng.randint(0, sched.cfg.vocab_size,
+                              size=int(rng.randint(new_lo, new_hi + 1))
+                              ).astype(np.int32)
+            prompts[i] = np.concatenate(
+                [prompts[i], np.asarray(r.out_tokens, np.int32), ext])
+    wall = time.time() - t0
+    delta = {k: sched.stats[k] - before[k] for k in before}
+    return wall, history, delta
+
+
+def bench_sessions(cfg, params, args):
+    """Host-RAM KV tier head-to-head (``BENCH_kv_tier.json``); see the
+    module docstring's kv-tier paragraph for the contract being gated."""
+    rng = np.random.RandomState(args.seed)
+    n_sessions = 3 * args.batch
+    gen = max(args.gen_lo, 4)
+    new_lo, new_hi = 4, 8
+    short_lo, short_hi = max(args.prompt_lo, 4), max(2 * args.prompt_lo, 8)
+    long_lo, long_hi = 3 * args.long_prompt // 4, args.long_prompt
+    bases = make_session_bases(cfg, rng, n_sessions, short_lo, short_hi,
+                               long_lo, long_hi)
+    # crossover sits between the longest short-session chain and the
+    # shortest long-session chain, so the cost model demonstrably picks
+    # both paths: short chains re-prefill, long chains swap
+    short_final = short_hi + args.turns * (gen + new_hi)
+    crossover = (short_final + long_lo + gen) // 2
+    max_seq = long_hi + args.turns * (gen + new_hi) + 1
+    n_pg = -(-max_seq // args.page_size)
+    # the HBM pool is sized for the *live* slots only (the scheduler's
+    # default) and is identical tier-on vs tier-off — retained session
+    # chains exceed it by construction, that is the pressure under test
+    num_pages = args.batch * n_pg + 1
+    host_pages = n_sessions * n_pg
+
+    def run_variant(c, host):
+        kw = dict(max_slots=args.batch, page_size=args.page_size,
+                  num_pages=num_pages, max_seq_len=max_seq,
+                  prefix_cache=True)
+        if host:
+            kw.update(host_pages=host_pages, swap_crossover=crossover)
+        sched = ContinuousBatchingScheduler(c, params, **kw)
+        wall, hist, delta = run_sessions(
+            sched, bases, args.turns, gen, new_lo, new_hi,
+            gap=8, seed=args.seed + 1)
+        return sched, wall, hist, delta
+
+    sides, toks, completed = {}, {}, {}
+    for prec in ("fp32", "int8"):
+        c = cfg if prec == "fp32" else dataclasses.replace(
+            cfg, cache_quant="int8")
+        for mode, host in (("tier_off", False), ("tier_on", True)):
+            sched, wall, hist, delta = run_variant(c, host)
+            key = f"{prec}_{mode}"
+            toks[key] = hist
+            completed[key] = all(
+                len(h) == args.turns and all(len(t) == gen for t in h)
+                for h in hist)
+            gen_total = sum(len(t) for h in hist for t in h)
+            side = {
+                "wall_s": round(wall, 3),
+                "useful_tok_per_s": round(gen_total / wall, 1),
+                "num_pages": sched.alloc.num_pages,
+                "peak_pages": sched.stats["peak_pages"],
+                "prefills": delta["prefills"],
+                "prefix_hits": delta["prefix_hits"],
+                "cached_tokens": delta["cached_tokens"],
+                "admit_blocked": delta["admit_blocked"],
+            }
+            if host:
+                h = sched.h_resume
+                side.update({
+                    "swap_outs": delta["swap_outs"],
+                    "swap_out_pages": delta["swap_out_pages"],
+                    "swap_ins": delta["swap_ins"],
+                    "swap_in_pages": delta["swap_in_pages"],
+                    "swap_reprefills": delta["swap_reprefills"],
+                    "host_evictions": delta["host_evictions"],
+                    "host_pages_used": sched.stats["host_pages_used"],
+                    "retained_pages": sched.stats["retained_pages"],
+                    "resumes": h.count,
+                    "p50_resume_ticks": h.quantile(50),
+                    "p99_resume_ticks": h.quantile(99),
+                })
+            sides[key] = side
+
+    on = sides["fp32_tier_on"]
+    gates = {
+        # 3x max_concurrent_seqs open sessions, every turn fully served,
+        # on a pool both variants share unchanged
+        "sessions_3x_slots": (n_sessions >= 3 * args.batch
+                              and all(completed.values())),
+        "hbm_pool_unchanged": all(
+            s["num_pages"] == num_pages for s in sides.values()),
+        "tokens_identical_fp32":
+            toks["fp32_tier_on"] == toks["fp32_tier_off"],
+        "tokens_identical_int8":
+            toks["int8_tier_on"] == toks["int8_tier_off"],
+        # the cost model must demonstrably pick both resume paths
+        "swap_ins_nonzero": on["swap_ins"] > 0,
+        "swap_reprefills_nonzero": on["swap_reprefills"] > 0,
+        # bounded resume latency: swap-in resumes were recorded and their
+        # p99 stays within a few admission waves of the arrival tick
+        "resume_p99_bounded": (on["resumes"] > 0
+                               and on["p99_resume_ticks"] <= 64),
+    }
+    return {
+        "arch": cfg.name,
+        "mode": "sessions",
+        "workload": {
+            "sessions": n_sessions,
+            "turns": args.turns,
+            "gen_per_turn": gen,
+            "short_prompt": [short_lo, short_hi],
+            "long_prompt": [long_lo, long_hi],
+            "new_tokens_per_turn": [new_lo, new_hi],
+        },
+        "batch_width": args.batch,
+        "num_pages": num_pages,
+        "host_pages": host_pages,
+        "swap_crossover_tokens": crossover,
+        "cost_model_crossover_tokens": PC.swap_crossover_tokens(
+            cfg, args.page_size),
+        "variants": sides,
+        "throughput_ratio": round(
+            sides["fp32_tier_on"]["useful_tok_per_s"]
+            / max(sides["fp32_tier_off"]["useful_tok_per_s"], 1e-9), 2),
+        "gates": gates,
+        # the REDUCED dims put the analytic crossover out of range (toy
+        # prefills are cheaper than any PCIe transfer), so the bench pins
+        # an explicit crossover mid-workload; at full-model dims the
+        # roofline constants drive the decision (docs/serving.md)
+        "note": {
+            "kind": "reduced_dims_caveat",
+            "detail": "swap_crossover_tokens(cfg) is degenerate at "
+                      "REDUCED dims — recompute wins at any length — so "
+                      "the bench pins the crossover between the short and "
+                      "long session populations to exercise both paths",
+            "headline_metric": "gates",
+        },
+    }
+
+
 # ----------------------------------------------------------------- fleet --
 
 def run_fleet(router, workload, arrivals_per_step):
@@ -907,6 +1117,14 @@ def main() -> None:
                     "SSM) and the >=1.5x useful tok/s target (writes "
                     "BENCH_spec.json via --out); defaults "
                     "--arrivals-per-step to 1 when unset")
+    ap.add_argument("--sessions", action="store_true",
+                    help="kv-tier mode: 3x --batch interactive multi-turn "
+                    "sessions served tier-on vs tier-off on the same HBM "
+                    "pool; byte-identity (fp32 AND int8), both cost-model "
+                    "resume paths, and bounded resume latency are hard "
+                    "gates (writes BENCH_kv_tier.json via --out)")
+    ap.add_argument("--turns", type=int, default=3,
+                    help="sessions mode: conversation turns per session")
     ap.add_argument("--chunk-budget", type=int, default=16,
                     help="mixed mode: prefill tokens a tick may land "
                     "(the chunked variants' per-tick budget)")
@@ -955,6 +1173,7 @@ def main() -> None:
                                    ("--mixed", args.mixed),
                                    ("--prefill", args.prefill),
                                    ("--spec", args.spec is not None),
+                                   ("--sessions", args.sessions),
                                    ("--replicas", args.replicas)) if on]
     if len(modes) > 1:
         ap.error("bench modes are mutually exclusive; got "
@@ -973,6 +1192,8 @@ def main() -> None:
             args.requests, args.long_prompt, args.chunk_budget = 6, 48, 8
         if args.spec is not None:
             args.gen_hi = min(args.gen_hi, 24)
+        if args.sessions:
+            args.batch, args.turns, args.long_prompt = 4, 2, 64
 
     cfg = bench_cfg(args.arch, args.wide, args.deep)
     params = M.init(cfg, jax.random.PRNGKey(args.seed))
@@ -1001,8 +1222,9 @@ def main() -> None:
                           args.gen_lo, args.gen_hi, args.long_frac))
         if obs:
             out["obs_artifacts"] = obs
-        print(json.dumps(out, indent=2))
-        if not out["tokens_identical"]:
+        bad = write_report(args, out, "shard-group",
+                           {"tokens_identical": out["tokens_identical"]})
+        if bad:
             raise SystemExit("shard-group serving changed output tokens "
                              "— tp determinism contract broken (see "
                              "docs/sharding.md)")
@@ -1023,21 +1245,40 @@ def main() -> None:
             # scans; the staggered trace is the regime speculation targets
             args.arrivals_per_step = 1
         out = bench_spec(cfg, params, args, args.spec)
-        print(json.dumps(out, indent=2))
-        if args.out:
-            with open(args.out, "w") as fh:
-                json.dump(out, fh, indent=2)
-        bad = [k for k, ok in out["gates"].items() if not ok]
+        gates = out.pop("gates")
+        gates["spec_ticks_nonzero"] = all(
+            out["variants"][v]["spec_ticks"] > 0
+            for v in ("spec_ngram", "spec_draft"))
+        bad = write_report(args, out, "spec", gates)
         if bad:
             raise SystemExit("speculative byte-identity gate(s) failed: "
                              + ", ".join(bad) + " — greedy accept/rollback "
                              "broke determinism (see docs/serving.md)")
-        if not args.smoke and out["speedup"] < 1.5:
+        if not args.smoke and out["tick_speedup"] < 1.5:
             import sys
             print("warning: speculative decoding below the >=1.5x useful "
                   "tok/s target on this run — CPU timing is noisy; try "
                   "more --repeats or longer --gen-hi generations",
                   file=sys.stderr)
+        return
+
+    # ---- sessions mode: host-RAM KV tier on vs off ------------------------
+    if args.sessions:
+        if REDUCED[args.arch].n_routed_experts:
+            raise SystemExit("--sessions covers dense/SSM archs; a MoE "
+                             "prefix-resume regroups expert capacity vs "
+                             "the full prefill, breaking the tier's "
+                             "byte-identity contract (docs/serving.md)")
+        # fp32 for the tier-on/off byte-identity gates (the int8 side
+        # quantises *pools* over fp32 compute, so identity holds there too)
+        cfg = dataclasses.replace(cfg, dtype="float32")
+        params = M.init(cfg, jax.random.PRNGKey(args.seed))
+        out = bench_sessions(cfg, params, args)
+        bad = write_report(args, out, "kv-tier", out.pop("gates"))
+        if bad:
+            raise SystemExit("kv-tier gate(s) failed: " + ", ".join(bad)
+                             + " — host-tier byte-identity / cost-model "
+                             "contract broken (see docs/serving.md)")
         return
 
     # ---- prefill mode: monolithic vs legacy-chunked vs fused-chunked ------
@@ -1052,11 +1293,10 @@ def main() -> None:
         cfg = dataclasses.replace(cfg, dtype="float32")
         params = M.init(cfg, jax.random.PRNGKey(args.seed))
         out = bench_prefill(cfg, params, args)
-        print(json.dumps(out, indent=2))
-        if args.out:
-            with open(args.out, "w") as fh:
-                json.dump(out, fh, indent=2)
-        bad = [k for k, ok in out["gates"].items() if not ok]
+        gates = out.pop("gates")
+        gates["prefill_dispatches_nonzero"] = (
+            out["variants"]["chunked_fused"]["prefill_dispatches"] > 0)
+        bad = write_report(args, out, "prefill", gates)
         if bad:
             raise SystemExit("prefill byte-identity gate(s) failed: "
                              + ", ".join(bad) + " — determinism contract "
@@ -1098,11 +1338,9 @@ def main() -> None:
                                 args.prompt_hi, args.gen_lo, args.gen_hi))
         if obs:
             out["obs_artifacts"] = obs
-        print(json.dumps(out, indent=2))
-        if args.out:
-            with open(args.out, "w") as fh:
-                json.dump(out, fh, indent=2)
-        if not out["tokens_identical"]:
+        bad = write_report(args, out, "mixed",
+                           {"tokens_identical": out["tokens_identical"]})
+        if bad:
             raise SystemExit("chunked/disaggregated serving changed output "
                              "tokens — determinism contract broken (see "
                              "docs/serving.md)")
@@ -1148,8 +1386,9 @@ def main() -> None:
                              user_hi, g_lo, 2 * g_lo))
         if obs:
             out["obs_artifacts"] = obs
-        print(json.dumps(out, indent=2))
-        if not out["tokens_identical"]:
+        bad = write_report(args, out, "shared-prefix",
+                           {"tokens_identical": out["tokens_identical"]})
+        if bad:
             raise SystemExit("shared-prefix serving changed output tokens "
                              "— COW/prefix-cache correctness bug")
         if not args.smoke and (out["throughput_ratio"] < 1.5
@@ -1181,7 +1420,7 @@ def main() -> None:
             workload)
         if obs:
             out["obs_artifacts"] = obs
-        print(json.dumps(out, indent=2))
+        write_report(args, out, "fleet", {})
         return
 
     # ---- static engine: warm, then time -----------------------------------
@@ -1238,7 +1477,7 @@ def main() -> None:
         workload)
     if obs:
         out["obs_artifacts"] = obs
-    print(json.dumps(out, indent=2))
+    write_report(args, out, "paged-vs-static", {})
     if out["speedup"] <= 1.0:
         import sys
         print("warning: continuous batching did not beat the static engine "

@@ -197,6 +197,16 @@ class FleetController:
             # the ladder trips — see docs/autoscaling.md for retuning the
             # demand thresholds under shared-prefix traffic
             "fleet_hit_rate": self._hit_rate(),
+            # host-tier working set: hot pages back live streams; retained
+            # pages are reclaimable idle-session chains. Page-pressure
+            # policies should key on the hot sum — a fleet full of parked
+            # sessions is *not* a reason to add HBM (InstaCluster's
+            # size-to-the-working-set argument applied to the KV pool)
+            "fleet_hot_pages": float(sum(r.hot_pages for r in live)),
+            "fleet_retained_pages": float(sum(
+                r.sched.retained_page_count for r in live)),
+            "fleet_host_pages": float(sum(
+                r.sched.stats["host_pages_used"] for r in live)),
         }
         if self.router.disagg:
             n_pre = len(self.router.live_by_role("prefill"))

@@ -46,6 +46,17 @@ def sample_scheduler(sched) -> Dict[str, float]:
         "admit_blocked": float(sched.stats["admit_blocked"]),
         "prefix_hits": float(sched.stats["prefix_hits"]),
         "cached_tokens": float(sched.stats["cached_tokens"]),
+        # host-tier working-set split: ``pages_hot`` backs live streams,
+        # retained pages are cold session chains reclaimable at a swap or
+        # re-prefill. Scaling HBM on hot occupancy instead of raw
+        # page_occupancy is the tier's autoscaling dividend — a pool dense
+        # with idle sessions no longer reads as full.
+        "pages_hot": float(sched.hot_pages),
+        "pages_retained": float(sched.retained_page_count),
+        "hot_occupancy": sched.hot_pages / pages_total,
+        "host_pages_used": float(sched.stats["host_pages_used"]),
+        "swap_ins": float(sched.stats["swap_ins"]),
+        "swap_outs": float(sched.stats["swap_outs"]),
     }
 
 

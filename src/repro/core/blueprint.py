@@ -193,7 +193,8 @@ def serving_page_plan(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
                       shared_prefix_len: int = 0,
                       users_per_prefix: int = 1,
                       tp: int = 1, prefill_replicas: int = 0,
-                      prompt_len: Optional[int] = None
+                      prompt_len: Optional[int] = None,
+                      host_ram: Optional[int] = None
                       ) -> Optional[Dict[str, Any]]:
     """Size the paged-KV page pool for the continuous-batching scheduler.
 
@@ -227,6 +228,11 @@ def serving_page_plan(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
     where generations actually accumulate. ``prompt_len`` bounds the
     longest routed prompt (defaults to the shape's full ``seq_len`` —
     conservative, no saving assumed).
+
+    With ``host_ram=b`` (bytes per replica group) the plan adds a
+    ``host_tier`` section sizing the host-RAM swap plane: how many page
+    slots the host budget holds and the resulting open-session ceiling
+    (decoding sessions bounded by HBM, parked ones by host RAM).
 
     With ``tp=k`` each replica is a *shard group*: pages are logical, each
     member stores the ``1/k`` kv-head slice of every page, and params
@@ -342,6 +348,27 @@ def serving_page_plan(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
             "decode_pages_per_replica": pages_per_replica,
             "prefill_pool_savings_frac": round(
                 1 - prefill_pool / max(pages_per_replica, 1), 3),
+        }
+    # ---- host-RAM page tier (swap-out/swap-in second plane) ---------------
+    # with ``host_ram`` bytes of host memory per replica group, idle
+    # sessions' chains park in host pages instead of pinning HBM: open
+    # (mostly-idle) session capacity is bounded by host pages, while
+    # *concurrent* decode stays bounded by the HBM pool — InstaCluster's
+    # size-to-the-working-set argument applied to the KV cache
+    if host_ram is not None:
+        if host_ram < 1:
+            raise ValueError("host_ram must be >= 1 byte (or None)")
+        host_pages = int(host_ram // (tok_bytes * page_size))
+        plan["host_tier"] = {
+            "host_ram_bytes": int(host_ram),
+            "host_pages": host_pages,
+            "host_pages_per_replica": max(host_pages // replicas, 0),
+            # sessions whose whole chain can park on host, per replica
+            "resident_sessions_per_replica": (
+                max(host_pages // replicas, 0) // max(pages_per_seq, 1)),
+            # open-session ceiling: decoding in HBM + parked on host
+            "max_open_sessions": max_seqs + host_pages
+            // max(pages_per_seq, 1),
         }
     # ---- shared-prefix capacity model (copy-on-write page cache) ----------
     # with N-way prefix sharing a sequence's *marginal* footprint is its

@@ -212,6 +212,52 @@ def _spec_kw(args) -> dict:
     return {"spec_k": args.spec, "spec_draft": draft}
 
 
+def _parse_tenants(spec):
+    """``"free=32,pro=128"`` -> ``{"free": 32, "pro": 128}`` page quotas."""
+    if not spec:
+        return None
+    out = {}
+    for part in spec.split(","):
+        name, _, pages = part.partition("=")
+        name, pages = name.strip(), pages.strip()
+        if not name or not pages.isdigit():
+            raise ValueError(
+                f"--tenants expects name=pages[,name=pages...], got {spec!r}")
+        out[name] = int(pages)
+    return out
+
+
+def _tier_kw(args) -> dict:
+    """Host-RAM KV tier knobs for the scheduler/router constructors."""
+    if getattr(args, "host_pages", None) is None:
+        return {}
+    return {"host_pages": args.host_pages,
+            "tenant_quotas": _parse_tenants(getattr(args, "tenants", None)),
+            "swap_crossover": getattr(args, "swap_crossover", None)}
+
+
+def _submit_kw(args, i: int) -> dict:
+    """Per-request tenant/priority tags: requests round-robin over the
+    declared tenants (first tenant = priority 2, the rest priority 1) so a
+    --tenants run exercises both quota classes without a trace format."""
+    quotas = _parse_tenants(getattr(args, "tenants", None))
+    if not quotas:
+        return {}
+    names = sorted(quotas)
+    name = names[i % len(names)]
+    return {"tenant": name, "priority": 2 if name == names[0] else 1}
+
+
+def _tier_stats(out: dict, args, stats) -> None:
+    if getattr(args, "host_pages", None) is None:
+        return
+    out["host_pages"] = args.host_pages
+    for k in ("swap_outs", "swap_ins", "swap_out_pages", "swap_in_pages",
+              "swap_reprefills", "host_evictions", "quota_blocked",
+              "index_evictions"):
+        out[k] = stats[k]
+
+
 def _spec_stats(out: dict, args, stats) -> None:
     if not getattr(args, "spec", None):
         return
@@ -239,7 +285,8 @@ def run_fleet(cfg, params, args) -> dict:
                            max_seq_len=max_seq, route_policy=args.router,
                            prefix_cache=args.prefix_cache, tp=args.tp,
                            prefill_budget=args.chunked_prefill,
-                           disagg=args.disagg, **_spec_kw(args))
+                           disagg=args.disagg, **_spec_kw(args),
+                           **_tier_kw(args))
     tracer = None
     if args.trace_out or (args.events_out and not args.autoscale):
         tracer = Tracer()
@@ -251,7 +298,7 @@ def run_fleet(cfg, params, args) -> dict:
         ctl = FleetController(router, min_replicas=start,
                               max_replicas=args.replicas, eval_interval=2)
     for i, (prompt, gen) in enumerate(make_workload(cfg, rng, args)):
-        router.submit(prompt, gen, arrival_step=i // 2)
+        router.submit(prompt, gen, arrival_step=i // 2, **_submit_kw(args, i))
 
     t0 = time.time()
     done = ctl.run() if ctl else router.run()
@@ -281,6 +328,7 @@ def run_fleet(cfg, params, args) -> dict:
     if args.disagg:
         out["migrations"] = router.stats.get("migrations", 0)
     _spec_stats(out, args, fleet)
+    _tier_stats(out, args, fleet)
     out.update(_prefix_stats(fleet))
     if fleet.get("reserved_page_imbalance") is not None:
         out["reserved_page_imbalance"] = fleet["reserved_page_imbalance"]
@@ -301,7 +349,8 @@ def run_paged(cfg, params, args) -> dict:
         cfg, params, max_slots=start_slots, page_size=args.page_size,
         num_pages=start_slots * n_pg + 1 if args.autoscale else None,
         max_seq_len=max_seq, prefix_cache=args.prefix_cache, tp=args.tp,
-        prefill_budget=args.chunked_prefill, **_spec_kw(args))
+        prefill_budget=args.chunked_prefill, **_spec_kw(args),
+        **_tier_kw(args))
     tracer = None
     if args.trace_out or (args.events_out and not args.autoscale):
         tracer = Tracer()
@@ -315,7 +364,7 @@ def run_paged(cfg, params, args) -> dict:
                               max_pages=args.batch * n_pg + 1)
         ctl = AutoscaleController(sched, bands, eval_interval=2)
     for i, (prompt, gen) in enumerate(make_workload(cfg, rng, args)):
-        sched.submit(prompt, gen, arrival_step=i // 2)
+        sched.submit(prompt, gen, arrival_step=i // 2, **_submit_kw(args, i))
 
     t0 = time.time()
     done = ctl.run() if ctl else sched.run()
@@ -344,6 +393,7 @@ def run_paged(cfg, params, args) -> dict:
         out["chunked_prefill"] = args.chunked_prefill
         out["prefill_chunk_tokens"] = sched.stats["prefill_chunk_tokens"]
     _spec_stats(out, args, sched.stats)
+    _tier_stats(out, args, sched.stats)
     out.update(_prefix_stats(sched.stats))
     if ctl is not None:
         out["autoscale"] = ctl.summary()
@@ -438,6 +488,22 @@ def main() -> None:
                     "sharing the target's vocab), decoding through an "
                     "incremental paged cache mirroring the target's page "
                     "geometry; default is model-free n-gram lookup")
+    ap.add_argument("--host-pages", type=int, default=None, metavar="N",
+                    help="paged engine: host-RAM KV page tier of N pages "
+                    "per scheduler — finished sessions' chains are "
+                    "retained for resume and preempted to host RAM under "
+                    "HBM pressure (recompute-vs-transfer cost model; see "
+                    "docs/serving.md)")
+    ap.add_argument("--tenants", default=None, metavar="NAME=PAGES,...",
+                    help="per-tenant page quotas, e.g. free=32,pro=128; "
+                    "workload requests round-robin over the tenants and "
+                    "the first (sorted) tenant submits at priority 2 "
+                    "(requires --host-pages)")
+    ap.add_argument("--swap-crossover", type=int, default=None, metavar="T",
+                    help="override the cost model's recompute-vs-transfer "
+                    "decision point: chains of >= T tokens swap to host, "
+                    "shorter ones re-prefill (default: derived from the "
+                    "roofline constants in repro.obs.profile)")
     ap.add_argument("--profile", action="store_true",
                     help="paged engine: wall-time every kernel dispatch "
                     "and report modeled FLOPs/bytes + roofline fractions "
@@ -486,6 +552,28 @@ def main() -> None:
         if args.disagg >= args.replicas:
             ap.error("--disagg must leave at least one decode replica "
                      "(--disagg < --replicas)")
+    if args.host_pages is not None:
+        if args.engine != "paged":
+            ap.error("--host-pages requires --engine paged (the host tier "
+                     "holds paged KV chains)")
+        if args.host_pages < 1:
+            ap.error("--host-pages must be >= 1")
+        if args.prefix_cache is False:
+            ap.error("--host-pages requires the prefix cache (session "
+                     "chains are retained through the prefix index; drop "
+                     "--no-prefix-cache)")
+    for flag, val in (("--tenants", args.tenants),
+                      ("--swap-crossover", args.swap_crossover)):
+        if val is not None and args.host_pages is None:
+            ap.error(f"{flag} requires --host-pages (tier features live "
+                     "on the host-RAM page tier)")
+    if args.swap_crossover is not None and args.swap_crossover < 1:
+        ap.error("--swap-crossover must be >= 1")
+    if args.tenants is not None:
+        try:
+            _parse_tenants(args.tenants)
+        except ValueError as e:
+            ap.error(str(e))
 
     cfg = get_reduced(args.arch)
     params = M.init(cfg, jax.random.PRNGKey(args.seed))

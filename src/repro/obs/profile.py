@@ -32,7 +32,8 @@ from typing import Any, Callable, Dict, Optional
 
 import jax
 
-__all__ = ["KernelProfiler", "PEAK_FLOPS", "HBM_BW"]
+__all__ = ["KernelProfiler", "PEAK_FLOPS", "HBM_BW", "PCIE_BW",
+           "PCIE_LATENCY"]
 
 # Modeled accelerator peaks (bf16 FLOPs, HBM bytes/s). These mirror the
 # planning constants in repro/launch/dryrun.py — duplicated here rather
@@ -41,6 +42,14 @@ __all__ = ["KernelProfiler", "PEAK_FLOPS", "HBM_BW"]
 # turning profiling on.
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
+# Modeled host<->device interconnect (PCIe gen4 x16-class): sustained
+# bytes/s plus a fixed per-transfer setup cost (DMA programming, host
+# pinning, completion interrupt). The serving host-RAM KV tier's
+# recompute-vs-transfer cost model compares a swap-in against re-running
+# the prefill at PEAK_FLOPS — the fixed latency term is what makes short
+# chains cheaper to recompute and long chains cheaper to move.
+PCIE_BW = 32e9
+PCIE_LATENCY = 100e-6
 
 
 class KernelProfiler:

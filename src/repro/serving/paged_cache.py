@@ -44,6 +44,15 @@ touch every shard's slice in one call, so a COW fork or prefill insert can
 never leave shards disagreeing about a page's contents — the invariant
 the sharded rule set in tests/test_allocator_props.py drives. SSM slot
 state is O(1) per sequence and stays replicated (unsharded).
+
+Host-RAM tier: ``HostPageTier`` is a second page plane in host memory
+with its own allocator; ``swap_out_pages`` / ``swap_in_pages`` move page
+chains between tiers byte-exactly (int8/fp8 pools and scale pages
+included), ``HOST_BIT`` tags host-resident ids wherever they sit in the
+shared id spaces (saved block-table rows, prefix-index chains), and
+``swap_resume_cost`` is the modeled recompute-vs-transfer decision the
+scheduler resumes preempted streams with — see docs/serving.md "Memory
+tiers & preemption".
 """
 from __future__ import annotations
 
@@ -64,6 +73,29 @@ SINK_PAGE = 0
 
 # leaves whose first axis is the page-pool axis
 PAGE_LEAVES = ("k_pages", "v_pages", "k_scale_pages", "v_scale_pages")
+
+# Residency bit: a page id with HOST_BIT set addresses the HostPageTier's
+# id space instead of the device pools. Block-table rows of swapped-out
+# streams and prefix-index chains preempted to host carry tagged ids; the
+# device allocator, the decode kernels, and every live block table only
+# ever see untagged ids — swap-in strips the bit before a page re-enters
+# the control plane. 2^30 keeps tagged ids positive in int32 block tables.
+HOST_BIT = 1 << 30
+
+
+def is_host_page(page: int) -> bool:
+    """True if ``page`` is a host-tier id (residency bit set)."""
+    return bool(int(page) & HOST_BIT)
+
+
+def host_page_id(page: int) -> int:
+    """Strip the residency bit: the HostPageTier-plane id."""
+    return int(page) & ~HOST_BIT
+
+
+def as_host_page(page: int) -> int:
+    """Tag a host-plane id for storage in index chains / saved rows."""
+    return int(page) | HOST_BIT
 
 
 def pages_for_len(n_tokens: int, page_size: int) -> int:
@@ -301,13 +333,28 @@ class PrefixIndex:
     A match must cover at least one full page (``page_size`` tokens):
     shorter overlaps are not worth a fork and keep accidental sharing out
     of unrelated workloads.
+
+    Two tier-related extensions:
+
+    * ``exact`` entries each pin a full SSM state snapshot host-side, and
+      with chain retention (host tier) pages live long enough for every
+      session turn to add one — unbounded growth on long persona runs.
+      ``max_exact`` caps them with LRU eviction (refreshed on hit);
+      ``evictions`` counts drops and ``on_evict`` (if set) observes them.
+    * chains may be *host-resident*: ``swap_chain`` re-points entries at
+      ``HOST_BIT``-tagged ids when a cold chain is preempted to the host
+      tier (and back on swap-in). Only entries whose whole chain moves are
+      remapped — the index never holds a half-swapped chain.
     """
 
-    def __init__(self, page_size: int):
+    def __init__(self, page_size: int, max_exact: Optional[int] = 512):
         self.page_size = page_size
+        self.max_exact = max_exact
+        self.evictions = 0
+        self.on_evict = None                      # callback(entry) on LRU drop
         self._full: Dict[bytes, _Entry] = {}
         self._tails: Dict[bytes, List[_Entry]] = {}
-        self._exact: Dict[bytes, _Entry] = {}
+        self._exact: Dict[bytes, _Entry] = {}     # insertion-ordered = LRU
         self._exact_lens: Dict[int, int] = {}     # length -> entry count
         self._by_page: Dict[int, List[_Entry]] = {}
 
@@ -319,6 +366,32 @@ class PrefixIndex:
     def _track(self, e: _Entry) -> None:
         for p in e.pages:
             self._by_page.setdefault(p, []).append(e)
+
+    def _untrack(self, e: _Entry) -> None:
+        for p in e.pages:
+            lst = self._by_page.get(p)
+            if lst is None:
+                continue
+            if e in lst:
+                lst.remove(e)
+            if not lst:
+                del self._by_page[p]
+
+    def _drop_exact_len(self, plen: int) -> None:
+        n = self._exact_lens[plen] - 1
+        if n:
+            self._exact_lens[plen] = n
+        else:
+            del self._exact_lens[plen]
+
+    def _evict_exact(self, e: _Entry) -> None:
+        e.dead = True
+        del self._exact[e.key]
+        self._drop_exact_len(len(e.tokens))
+        self._untrack(e)
+        self.evictions += 1
+        if self.on_evict is not None:
+            self.on_evict(e)
 
     def insert(self, prompt: np.ndarray, pages: List[int],
                state: Any = None) -> None:
@@ -334,12 +407,16 @@ class PrefixIndex:
         if state is not None:
             key = _digest(prompt)
             if key in self._exact and not self._exact[key].dead:
+                self._exact[key] = self._exact.pop(key)   # LRU refresh
                 return
             e = _Entry("exact", key, np.array(prompt, np.int32),
                        list(pages[:pages_for_len(plen, ps)]), state=state)
             self._exact[key] = e
             self._exact_lens[plen] = self._exact_lens.get(plen, 0) + 1
             self._track(e)
+            if self.max_exact is not None:
+                while len(self._exact) > self.max_exact:
+                    self._evict_exact(next(iter(self._exact.values())))
             return
         n_full = plen // ps
         keys = _boundary_digests(prompt, n_full, ps)
@@ -381,6 +458,7 @@ class PrefixIndex:
                 if e is None or e.dead or not bool(
                         np.all(e.tokens == prompt[:L])):
                     continue
+                self._exact[e.key] = self._exact.pop(e.key)   # LRU refresh
                 n_full, rem = L // ps, L % ps
                 return PrefixHit(
                     length=L, full_pages=list(e.pages[:n_full]),
@@ -431,17 +509,42 @@ class PrefixIndex:
             elif e.kind == "exact":
                 if self._exact.get(e.key) is e:
                     del self._exact[e.key]
-                    n = self._exact_lens[len(e.tokens)] - 1
-                    if n:
-                        self._exact_lens[len(e.tokens)] = n
-                    else:
-                        del self._exact_lens[len(e.tokens)]
+                    self._drop_exact_len(len(e.tokens))
             else:
                 tails = self._tails.get(e.key, [])
                 if e in tails:
                     tails.remove(e)
                 if not tails:
                     self._tails.pop(e.key, None)
+
+    # --------------------------------------------------- tier residency --
+    def swap_chain(self, mapping: Dict[int, int]) -> int:
+        """Re-point entries across a tier move: every page id in
+        ``mapping`` keys is about to change identity (device id →
+        ``HOST_BIT``-tagged host id on swap-out, the reverse on swap-in).
+
+        Only entries whose page chain lies *entirely* within ``mapping``
+        are remapped — an entry is never left half-swapped. Entries that
+        straddle the move (some pages staying put because other owners
+        still hold them) are left untouched; on swap-out their dying pages
+        hit ``invalidate_page`` via the allocator's ``on_free`` as usual.
+        Returns the number of entries remapped.
+        """
+        cand: List[_Entry] = []
+        seen: set = set()
+        for p in mapping:
+            for e in self._by_page.get(p, []):
+                if not e.dead and id(e) not in seen:
+                    seen.add(id(e))
+                    cand.append(e)
+        n = 0
+        for e in cand:
+            if all(p in mapping for p in e.pages):
+                self._untrack(e)
+                e.pages = [mapping[p] for p in e.pages]
+                self._track(e)
+                n += 1
+        return n
 
     def clear(self) -> None:
         for e in list(self._full.values()) + list(self._exact.values()):
@@ -747,6 +850,199 @@ def migrate_pages(src_cache: Any, dst_cache: Any, src_pages: List[int],
                 for k in dnode}
 
     return walk(src_cache, dst_cache, False)
+
+
+# ---------------------------------------------------------------------------
+# host-RAM page tier (second tier of the paged pool)
+# ---------------------------------------------------------------------------
+
+class HostPageTier:
+    """Host-RAM page plane: a second tier of the paged KV pool.
+
+    Same control-plane shape as the device tier — a ``PageAllocator`` over
+    its own page-id space (page 0 mirrors the sink and is never handed
+    out) — but storage is host-side numpy: each resident page keeps the
+    verbatim rows of every attention pool leaf (all layers, all shards,
+    including int8/fp8 pools and their fp32 scale pages), keyed by the
+    leaf's path in the cache pytree. Rows round-trip bit-exactly, which is
+    what makes swap-in byte-identical to never having been preempted.
+
+    Host page ids are tagged with ``HOST_BIT`` wherever they appear in
+    shared id spaces (saved block-table rows, prefix-index chains); the
+    tier's own allocator works on untagged ids.
+    """
+
+    def __init__(self, num_pages: int):
+        assert num_pages >= 1, "host tier needs at least one page"
+        # +1: id 0 mirrors the device sink so `num_pages` is the real budget
+        self.alloc = PageAllocator(num_pages + 1)
+        self._rows: Dict[int, Dict[str, np.ndarray]] = {}
+        self.bytes_used = 0
+
+    @property
+    def capacity(self) -> int:
+        return self.alloc.capacity
+
+    @property
+    def pages_used(self) -> int:
+        return self.alloc.num_allocated
+
+    def can_hold(self, n: int) -> bool:
+        return self.alloc.can_alloc(n)
+
+    def store(self, page: int, rows: Dict[str, np.ndarray]) -> None:
+        """Attach leaf rows to an allocated host page (swap-out path)."""
+        assert page in self.alloc._ref, f"store to unallocated host page {page}"
+        old = self._rows.get(page)
+        if old is not None:
+            self.bytes_used -= sum(r.nbytes for r in old.values())
+        self._rows[page] = rows
+        self.bytes_used += sum(r.nbytes for r in rows.values())
+
+    def rows(self, page: int) -> Dict[str, np.ndarray]:
+        return self._rows[page]
+
+    def free(self, pages: List[int]) -> None:
+        """Release host pages and drop their row storage."""
+        self.alloc.free(pages)
+        for p in pages:
+            rows = self._rows.pop(p, None)
+            if rows is not None:
+                self.bytes_used -= sum(r.nbytes for r in rows.values())
+
+    def clear(self) -> None:
+        """Drop every resident page (replica failure: the node's host RAM
+        is gone with its HBM)."""
+        live = list(self.alloc._ref)
+        if live:
+            self.free(live)
+
+
+def swap_out_pages(cache: Any, tier: HostPageTier, pages: List[int],
+                   tp: int = 1, owner: Any = None) -> List[int]:
+    """Move device pages' contents to the host tier.
+
+    Gathers page ``pages[i]`` of every attention pool leaf (all layers
+    and, ``tp > 1``, every shard's slice in one pass — the same atomicity
+    contract as ``migrate_pages``) into host RAM as verbatim numpy rows
+    (int8/fp8 pools and fp32 scale pages byte-preserved), under freshly
+    allocated host page ids. Returns the untagged host ids, parallel to
+    ``pages``. The device pages are *not* freed here — the caller owns the
+    device control plane and releases them (and re-points the prefix index
+    via ``swap_chain``) as part of the same preemption step. SSM slot
+    state travels separately (``extract_ssm_slot``), exactly as in a
+    migration handoff. Runs eagerly — preemptions are between-tick events.
+    """
+    if not pages:
+        return []
+    host = tier.alloc.alloc(len(pages), owner)
+    ids = jnp.asarray(pages, jnp.int32)
+    rows_by_path: Dict[str, np.ndarray] = {}
+
+    def walk(node: Any, stacked: bool, path: str) -> None:
+        if _is_attn(node):
+            ax = page_axis(stacked, tp)
+            lead = (slice(None),) * ax
+            for k in PAGE_LEAVES:
+                if k not in node:
+                    continue
+                got = np.asarray(jax.device_get(node[k][lead + (ids,)]))
+                # page axis to the front: rows_by_path[p][i] is page i's row
+                rows_by_path[path + k] = np.moveaxis(got, ax, 0)
+            return
+        if _is_ssm(node):
+            return
+        for k in node:
+            walk(node[k], stacked or k == "stack", path + k + "/")
+
+    walk(cache, False, "")
+    for i, h in enumerate(host):
+        tier.store(h, {p: np.ascontiguousarray(r[i])
+                       for p, r in rows_by_path.items()})
+    return host
+
+
+def swap_in_pages(cache: Any, tier: HostPageTier, host_pages: List[int],
+                  dst_pages: List[int], tp: int = 1) -> Any:
+    """Restore host-resident pages into device pages ``dst_pages``.
+
+    The inverse of ``swap_out_pages``: scatters each host page's stored
+    rows into page ``dst_pages[i]`` of every attention pool leaf, dtype-
+    preserved, then frees the host pages. The caller allocated
+    ``dst_pages`` and re-points the prefix index (``swap_chain`` with the
+    tagged-host → device mapping) in the same step, so no block table or
+    index entry ever observes the chain mid-move. Returns the updated
+    cache pytree.
+    """
+    assert len(host_pages) == len(dst_pages)
+    if not host_pages:
+        return cache
+    dst_ids = jnp.asarray(dst_pages, jnp.int32)
+
+    def walk(node: Any, stacked: bool, path: str) -> Any:
+        if _is_attn(node):
+            ax = page_axis(stacked, tp)
+            lead = (slice(None),) * ax
+            out = dict(node)
+            for k in PAGE_LEAVES:
+                if k not in node:
+                    continue
+                rows = np.stack([tier.rows(h)[path + k] for h in host_pages])
+                rows = np.moveaxis(rows, 0, ax)
+                out[k] = node[k].at[lead + (dst_ids,)].set(
+                    jnp.asarray(rows).astype(node[k].dtype))
+            return out
+        if _is_ssm(node):
+            return node
+        return {k: walk(node[k], stacked or k == "stack", path + k + "/")
+                for k in node}
+
+    out = walk(cache, False, "")
+    tier.free(host_pages)
+    return out
+
+
+def swap_resume_cost(cfg: ModelConfig, tokens: int, pages: int,
+                     page_size: int) -> tuple:
+    """Modeled ``(transfer_s, recompute_s)`` for resuming a preempted chain.
+
+    Transfer: PCIe setup latency plus the chain's whole-page KV bytes at
+    sustained PCIe bandwidth. Recompute: re-running the prefill for the
+    chain's tokens at peak FLOPs (2 * active params per token). Both sides
+    are *modeled* from the roofline constants in ``repro.obs.profile`` —
+    deterministic, so the swap-in-vs-re-prefill decision never depends on
+    wall clock and byte-identity runs reproduce exactly. The fixed latency
+    term makes short chains cheaper to recompute and long ones cheaper to
+    move.
+    """
+    from repro.obs.profile import PCIE_BW, PCIE_LATENCY, PEAK_FLOPS
+    moved = page_bytes_per_token(cfg) * pages * page_size
+    transfer = PCIE_LATENCY + moved / PCIE_BW
+    recompute = 2.0 * float(cfg.active_param_count()) * tokens / PEAK_FLOPS
+    return transfer, recompute
+
+
+def swap_crossover_tokens(cfg: ModelConfig, page_size: int,
+                          max_tokens: int = 65536) -> Optional[int]:
+    """Smallest chain length (tokens) where swap-in beats re-prefill, or
+    None if transfer never wins below ``max_tokens`` (tiny models whose
+    per-token recompute undercuts per-token PCIe traffic). The session
+    bench shapes its workload around this point so both cost-model paths
+    are exercised."""
+    def swap_wins(T: int) -> bool:
+        t, r = swap_resume_cost(cfg, T, pages_for_len(T, page_size),
+                                page_size)
+        return t <= r
+    if not swap_wins(max_tokens):
+        return None
+    lo, hi = 1, max_tokens
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if swap_wins(mid):
+            hi = mid
+        else:
+            lo = mid + 1
+    return lo
 
 
 def ssm_slot_view(cache: Any, state: Any) -> Any:

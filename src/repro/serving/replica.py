@@ -85,12 +85,16 @@ class ServingReplica:
               hostnames: Optional[Sequence[str]] = None,
               prefill_budget: Optional[int] = None,
               role: str = "mixed", spec_k: Optional[int] = None,
-              spec_draft=None) -> "ServingReplica":
+              spec_draft=None, host_pages: Optional[int] = None,
+              tenant_quotas=None,
+              swap_crossover: Optional[int] = None) -> "ServingReplica":
         sched = ContinuousBatchingScheduler(
             cfg, params, max_slots=max_slots, page_size=page_size,
             num_pages=num_pages, max_seq_len=max_seq_len,
             prefix_cache=prefix_cache, tp=tp, prefill_budget=prefill_budget,
-            role=role, spec_k=spec_k, spec_draft=spec_draft)
+            role=role, spec_k=spec_k, spec_draft=spec_draft,
+            host_pages=host_pages, tenant_quotas=tenant_quotas,
+            swap_crossover=swap_crossover)
         return cls(replica_id, sched, hostname=hostname, hostnames=hostnames)
 
     # -------------------------------------------------------------- state --
@@ -114,10 +118,22 @@ class ServingReplica:
     @property
     def outstanding_pages(self) -> int:
         """Routing load signal: reservations held by admitted streams plus
-        the worst-case reservations of this replica's queued streams."""
+        the worst-case reservations of this replica's queued streams.
+
+        Tier-aware by construction: retained (cold) chains and host-
+        resident pages carry no reservation — they are reclaimable under
+        pressure — so a replica dense with idle sessions still reads as
+        lightly loaded, while its prefix index keeps advertising those
+        sessions through ``prefix_match_len`` (affinity routing sees
+        host-resident chains too)."""
         ps = self.sched.page_size
         queued = sum(worst_case_pages(r, ps) for r in self.sched.waiting)
         return self.sched.reserved_pages + queued
+
+    @property
+    def hot_pages(self) -> int:
+        """Pages backing live streams (the autoscaler's working set)."""
+        return self.sched.hot_pages
 
     def prefix_match_len(self, prompt) -> int:
         """Tokens of ``prompt`` already cached in this replica's page pool —
@@ -220,6 +236,9 @@ class ServingReplica:
                 self.sched.slot_resume_state[slot] = None
         self.sched._prefill_fifo.clear()
         self.sched.reserved_pages = 0
+        # both memory tiers died with the node: retained chains release
+        # their refs, host-RAM rows are dropped, tenant ledgers reset
+        self.sched.drop_tier_state()
         self.sched.index.clear()      # the device's cached prefixes died too
         return lost
 

@@ -81,6 +81,15 @@ class Request:
     spec_drafted: int = 0
     spec_accepted: int = 0
     speculating: bool = False
+    # SLO scheduling: admission orders due requests by priority class
+    # (higher first; FCFS within a class), and under HBM pressure lower
+    # classes' cold chains are preempted to the host tier first. The
+    # tenant tags the stream for per-tenant page quotas.
+    priority: int = 1
+    tenant: str = "default"
+    # host-tier bookkeeping: chains restored from host RAM / prompts
+    # re-prefilled because the cost model chose recompute on preemption
+    swap_ins: int = 0
 
     @property
     def plen(self) -> int:
@@ -108,14 +117,18 @@ class Request:
 
 
 def make_request(rid: int, prompt, max_new_tokens: int,
-                 arrival_step: int = 0) -> Request:
+                 arrival_step: int = 0, priority: int = 1,
+                 tenant: str = "default") -> Request:
     """Validate and build a request (shared by scheduler/router submit)."""
     prompt = np.asarray(prompt, np.int32).reshape(-1)
     if max_new_tokens < 1:
         raise ValueError("max_new_tokens must be >= 1 (the prefill "
                          "already produces the first token)")
+    if priority < 0:
+        raise ValueError("priority must be >= 0")
     return Request(rid=rid, prompt=prompt, max_new_tokens=max_new_tokens,
-                   arrival_step=arrival_step)
+                   arrival_step=arrival_step, priority=int(priority),
+                   tenant=str(tenant))
 
 
 def worst_case_pages(req: Request, page_size: int) -> int:

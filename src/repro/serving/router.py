@@ -92,7 +92,9 @@ class ServingRouter:
                  route_policy: str = "least-pages",
                  prefix_cache: Optional[bool] = None, tp: int = 1,
                  prefill_budget: Optional[int] = None, disagg: int = 0,
-                 spec_k: Optional[int] = None, spec_draft=None):
+                 spec_k: Optional[int] = None, spec_draft=None,
+                 host_pages: Optional[int] = None, tenant_quotas=None,
+                 swap_crossover: Optional[int] = None):
         if not supports_paged(cfg):
             raise NotImplementedError(
                 f"{cfg.name}: the fabric routes over paged schedulers; "
@@ -113,7 +115,10 @@ class ServingRouter:
                                num_pages=num_pages, max_seq_len=max_seq_len,
                                prefix_cache=prefix_cache, tp=tp,
                                prefill_budget=prefill_budget,
-                               spec_k=spec_k, spec_draft=spec_draft)
+                               spec_k=spec_k, spec_draft=spec_draft,
+                               host_pages=host_pages,
+                               tenant_quotas=tenant_quotas,
+                               swap_crossover=swap_crossover)
         # prefill/decode disaggregation: True once the fleet splits roles
         self.disagg = disagg > 0
         self.route_policy = route_policy
@@ -344,8 +349,10 @@ class ServingRouter:
 
     # --------------------------------------------------------- submission --
     def submit(self, prompt, max_new_tokens: int,
-               arrival_step: int = 0) -> Request:
-        req = make_request(self._rid, prompt, max_new_tokens, arrival_step)
+               arrival_step: int = 0, priority: int = 1,
+               tenant: str = "default") -> Request:
+        req = make_request(self._rid, prompt, max_new_tokens, arrival_step,
+                           priority=priority, tenant=tenant)
         self._rid += 1
         if not any(rep.fits(req) for rep in self.replicas.values()
                    if rep.role != "decode"):
@@ -597,9 +604,16 @@ class ServingRouter:
                     "prefill_chunk_tokens", "migrations_in",
                     "migrations_out", "prefill_dispatches",
                     "prefill_compiles", "spec_ticks", "spec_drafted",
-                    "spec_accepted"):
+                    "spec_accepted", "swap_outs", "swap_out_pages",
+                    "swap_ins", "swap_in_pages", "swap_reprefills",
+                    "host_evictions", "quota_blocked", "index_evictions"):
             out[key] = (sum(s.get(key, 0) for s in per_replica.values())
                         + self._retired_stats.get(key, 0))
+        # tier gauges: summed over *live* replicas only (retired replicas'
+        # tiers died with them, so their last gauge values must not linger)
+        for key in ("host_pages_used", "retained_pages"):
+            out[key] = sum(s.get(key, 0) for rid, s in per_replica.items()
+                           if self.replicas[rid].live)
         # derived, not summed: the fleet accept rate over all drafts so far
         out["spec_accept_rate"] = round(
             out["spec_accepted"] / max(out["spec_drafted"], 1), 4)

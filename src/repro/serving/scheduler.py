@@ -79,6 +79,7 @@ per-shard page-budget math.
 from __future__ import annotations
 
 import collections
+import dataclasses
 import functools
 from typing import Any, Deque, Dict, List, Optional, Sequence
 
@@ -149,6 +150,24 @@ def supports_paged(cfg: ModelConfig) -> bool:
     return not cfg.is_encdec and cfg.attn_impl != "mla"
 
 
+@dataclasses.dataclass
+class _RetainedChain:
+    """A finished stream's page chain kept warm for session resume.
+
+    Device-resident records (``_retained``) hold the allocator refs the
+    finished stream held — nothing is freed at finish — so the chain stays
+    prefix-shareable at zero cost until HBM pressure preempts it. Host
+    records (``_host_chains``) list *host-tier* page ids after a swap-out.
+    ``tokens`` is the chain length the cost model prices a resume at;
+    ``(priority, step)`` orders eviction (lowest class first, coldest
+    first within a class)."""
+    pages: List[int]
+    tokens: int
+    priority: int
+    tenant: str
+    step: int
+
+
 class ContinuousBatchingScheduler:
     """Admission + continuous batching loop over ``max_slots`` decode slots.
 
@@ -166,7 +185,10 @@ class ContinuousBatchingScheduler:
                  shard_mesh=None, prefill_budget: Optional[int] = None,
                  role: str = "mixed", prefill_fused: Optional[bool] = None,
                  prefill_kernel: bool = False,
-                 spec_k: Optional[int] = None, spec_draft=None):
+                 spec_k: Optional[int] = None, spec_draft=None,
+                 host_pages: Optional[int] = None,
+                 tenant_quotas: Optional[Dict[str, int]] = None,
+                 swap_crossover: Optional[int] = None):
         if not supports_paged(cfg):
             raise NotImplementedError(
                 f"{cfg.name}: paged serving covers decoder-only non-MLA "
@@ -266,6 +288,44 @@ class ContinuousBatchingScheduler:
             prefix_cache = cfg.n_routed_experts == 0
         self.prefix_cache = prefix_cache
         self.index = PC.PrefixIndex(page_size)
+        # host-RAM page tier: finished streams' chains are *retained* on
+        # device (still prefix-shareable) instead of freed, and under HBM
+        # pressure admission preempts the coldest retained chains — the
+        # recompute-vs-transfer cost model decides per chain whether its
+        # bytes move to host RAM (long chains: PCIe transfer beats prefill
+        # FLOPs) or are dropped for re-prefill on resume (short chains).
+        # Retention requires the prefix cache: a retained chain is only
+        # reachable through the index. ``tenant_quotas`` caps the pages a
+        # tenant's *live* streams may reserve (retained chains are not
+        # charged: they are reclaimable, so they cost the tenant nothing).
+        if host_pages is not None and host_pages < 1:
+            raise ValueError("host_pages must be >= 1 (or None to disable "
+                             "the host tier)")
+        self.host_tier = (PC.HostPageTier(host_pages)
+                          if host_pages is not None else None)
+        # recompute-vs-transfer decision point, in chain tokens: chains at
+        # least this long swap to host (PCIe transfer beats re-prefill
+        # FLOPs), shorter ones drop and re-prefill on resume. Default:
+        # derived from the cfg's roofline cost model — the comparison is
+        # monotone in chain length, so the smallest length where transfer
+        # wins summarizes it exactly (None: transfer never wins at this
+        # model scale, every preemption re-prefills). Benches/operators may
+        # override to place the crossover inside their workload.
+        if swap_crossover is not None:
+            self._swap_crossover: Optional[int] = int(swap_crossover)
+        else:
+            self._swap_crossover = PC.swap_crossover_tokens(cfg, page_size)
+        self.tenant_quotas = dict(tenant_quotas) if tenant_quotas else None
+        self._tenant_reserved: Dict[str, int] = {}
+        self._retained: Dict[int, _RetainedChain] = {}
+        self._host_chains: Dict[int, _RetainedChain] = {}
+        self._host_page_chain: Dict[int, int] = {}   # host page -> chain key
+        self._retain_seq = 0
+        if self.host_tier is not None:
+            # freed host pages invalidate index entries by their *tagged*
+            # id — same one-control-plane rule as the device allocator
+            self.host_tier.alloc.on_free = (
+                lambda p: self.index.invalidate_page(PC.as_host_page(p)))
 
         self.cache = PC.init_paged_cache(cfg, num_pages, page_size, max_slots,
                                          tp=tp)
@@ -324,7 +384,8 @@ class ContinuousBatchingScheduler:
         self._trace_own_clock = True            # router flips: fleet clock
         self.profiler = None                    # set via enable_profiling
         self.registry = MetricsRegistry()
-        _gauges = ("peak_pages", "spec_accept_rate")
+        _gauges = ("peak_pages", "spec_accept_rate", "host_pages_used",
+                   "retained_pages")
         self.stats = StatsView({
             k: (self.registry.gauge if k in _gauges
                 else self.registry.counter)(f"serving_{k}", unit=u)
@@ -342,7 +403,18 @@ class ContinuousBatchingScheduler:
                          ("spec_ticks", "ticks"),
                          ("spec_drafted", "tokens"),
                          ("spec_accepted", "tokens"),
-                         ("spec_accept_rate", ""))})
+                         ("spec_accept_rate", ""),
+                         ("swap_outs", "chains"),
+                         ("swap_out_pages", "pages"),
+                         ("swap_ins", "chains"),
+                         ("swap_in_pages", "pages"),
+                         ("swap_reprefills", "chains"),
+                         ("host_evictions", "chains"),
+                         ("quota_blocked", "requests"),
+                         ("index_evictions", "entries"),
+                         ("host_pages_used", "pages"),
+                         ("retained_pages", "pages"))})
+        self.index.on_evict = self._on_index_evict
         self.h_queue_wait = self.registry.histogram(
             "serving_queue_wait_ticks", TICK_BUCKETS, unit="ticks",
             help="ticks from due arrival to admission")
@@ -358,6 +430,10 @@ class ContinuousBatchingScheduler:
             "serving_spec_accept_tokens",
             tuple(float(b) for b in range(1, 34)), unit="tokens",
             help="tokens emitted per speculative verify (accepted + 1)")
+        self.h_resume = self.registry.histogram(
+            "serving_resume_ticks", TICK_BUCKETS, unit="ticks",
+            help="ticks from due arrival to admission for streams resumed "
+                 "via host-tier swap-in")
 
         # donate the cache: pools are sized to fill HBM, so the step must
         # update them in place rather than double-buffer (cf. trainer.py)
@@ -786,8 +862,10 @@ class ContinuousBatchingScheduler:
 
     # ---------------------------------------------------------- submission --
     def submit(self, prompt, max_new_tokens: int,
-               arrival_step: int = 0) -> Request:
-        req = make_request(self._rid, prompt, max_new_tokens, arrival_step)
+               arrival_step: int = 0, priority: int = 1,
+               tenant: str = "default") -> Request:
+        req = make_request(self._rid, prompt, max_new_tokens, arrival_step,
+                           priority=priority, tenant=tenant)
         self._rid += 1
         return self.submit_request(req)
 
@@ -826,32 +904,339 @@ class ContinuousBatchingScheduler:
                 if r is None]
 
     def _try_admit(self) -> None:
-        while self.waiting and self.waiting[0].arrival_step <= self.step_idx:
-            free = self._free_slots()   # re-list: _admit may finish a slot
-            if not free:
-                self.stats["admit_blocked"] += 1
+        progress = True
+        while progress:
+            progress = False
+            # the due window keeps the original FCFS head gate: requests
+            # queued behind a not-yet-due one wait, so priority classes
+            # reorder only *simultaneously due* requests (all-equal
+            # priorities reduce exactly to the old head-of-line behavior)
+            due: List[Request] = []
+            for r in self.waiting:
+                if r.arrival_step > self.step_idx:
+                    break
+                due.append(r)
+            if not due:
+                return
+            due.sort(key=lambda r: -r.priority)    # stable: FCFS in class
+            for req in due:
+                free = self._free_slots()   # _admit may have finished slots
+                if not free:
+                    self.stats["admit_blocked"] += 1
+                    return
+                hit = self._prefix_lookup(req)
+                reserve, demand = self._admission_demand(req, hit)
+                if self._quota_blocked(req, reserve):
+                    continue                # other tenants may still fit
+                headroom = (self.alloc.num_free
+                            - (self.reserved_pages - self.pages_in_use))
+                if demand > headroom:
+                    # HBM pressure: preempt cold retained chains to the
+                    # host tier instead of blocking (protect the hit's own
+                    # chain from being evicted out from under us)
+                    if not self._reclaim(demand - headroom,
+                                         protect=self._hit_pages(hit)):
+                        self.stats["admit_blocked"] += 1
+                        return              # head of the class blocks
+                    # eviction may have remapped or invalidated entries
+                    hit = self._prefix_lookup(req)
+                    reserve, demand = self._admission_demand(req, hit)
+                    if demand > (self.alloc.num_free
+                                 - (self.reserved_pages
+                                    - self.pages_in_use)):
+                        self.stats["admit_blocked"] += 1
+                        return
+                mat = self._materialize_hit(req, hit)
+                if mat is None and hit is not None:
+                    # defensive miss: the hit chain vanished; recheck the
+                    # full (undiscounted) reservation before admitting
+                    reserve, demand = self._admission_demand(req, None)
+                    if demand > (self.alloc.num_free
+                                 - (self.reserved_pages
+                                    - self.pages_in_use)):
+                        self.stats["admit_blocked"] += 1
+                        return
+                hit = mat
+                self.waiting.remove(req)
+                if self.tenant_quotas is not None:
+                    self._tenant_reserved[req.tenant] = (
+                        self._tenant_reserved.get(req.tenant, 0) + reserve)
+                if self.prefill_budget is not None:
+                    self._admit_chunked(req, free[0], reserve, hit)
+                else:
+                    self._admit(req, free[0], reserve, hit)
+                progress = True
+                break                       # re-scan with fresh due window
+
+    def _admission_demand(self, req: Request, hit):
+        """``(reserve, demand)`` pages for admitting ``req`` against ``hit``.
+
+        ``reserve`` is the worst-case reservation charged to the slot: the
+        uncached suffix only — shared full pages are already allocated and
+        survive via their refcount, so they are never allocated again. A
+        prefill-role scheduler reserves prompt pages only; generation pages
+        are reserved by whichever decode scheduler adopts the stream.
+
+        ``demand`` is what the admission ledger must cover *now*: the
+        reservation plus one fresh device page per host-resident hit page
+        (full or tail), since materializing the hit allocates those
+        immediately.
+        """
+        reserve = PC.pages_for_len(
+            req.plen + 1 if self.role == "prefill"
+            else req.plen + req.max_new_tokens, self.page_size)
+        demand = reserve
+        if hit is not None:
+            reserve -= len(hit.full_pages)
+            n_host = sum(1 for p in hit.full_pages if PC.is_host_page(p))
+            if hit.tail_len and PC.is_host_page(hit.tail_page):
+                n_host += 1
+            demand = reserve + n_host
+        return reserve, demand
+
+    def _quota_blocked(self, req: Request, reserve: int) -> bool:
+        if self.tenant_quotas is None:
+            return False
+        quota = self.tenant_quotas.get(req.tenant)
+        if quota is None:
+            return False
+        if self._tenant_reserved.get(req.tenant, 0) + reserve <= quota:
+            return False
+        self.stats["quota_blocked"] += 1
+        return True
+
+    @staticmethod
+    def _hit_pages(hit) -> List[int]:
+        if hit is None:
+            return []
+        pages = list(hit.full_pages)
+        if hit.tail_len:
+            pages.append(hit.tail_page)
+        return pages
+
+    # ----------------------------------------------------- host page tier --
+    def _on_index_evict(self, entry) -> None:
+        self.stats["index_evictions"] += 1
+
+    @property
+    def retained_page_count(self) -> int:
+        """Device pages held by retained (cold) chains, with multiplicity."""
+        return sum(len(c.pages) for c in self._retained.values())
+
+    @property
+    def hot_pages(self) -> int:
+        """Physical pages referenced by live slots — the hot working set
+        the autoscaler should size HBM to (cold retained pages are
+        reclaimable at a swap or a re-prefill, not a capacity need)."""
+        live = set()
+        for pages in self.slot_pages:
+            live.update(pages)
+        live.discard(PC.SINK_PAGE)
+        return len(live)
+
+    def _gauge_tiers(self) -> None:
+        self.stats["retained_pages"] = self.retained_page_count
+        if self.host_tier is not None:
+            self.stats["host_pages_used"] = self.host_tier.pages_used
+
+    def _retain_pages(self, pages: List[int], *, tokens: int, priority: int,
+                      tenant: str) -> int:
+        """Register a device-resident chain with the retention ledger.
+
+        The record inherits the allocator refs its previous owner held —
+        the caller must *not* free ``pages`` — so the chain stays alive and
+        prefix-shareable until ``_reclaim`` preempts it."""
+        key = self._retain_seq
+        self._retain_seq += 1
+        self._retained[key] = _RetainedChain(list(pages), int(tokens),
+                                             int(priority), tenant,
+                                             self.step_idx)
+        self._gauge_tiers()
+        return key
+
+    def _retain_finished(self, slot: int, req: Request) -> None:
+        """Keep a finished stream's chain warm instead of freeing it.
+
+        The chain covers the prompt plus all but the last output token —
+        the final token was emitted but its K/V never written — so any
+        session-style follow-up prompt (previous context + new user turn)
+        prefix-hits it. Pages past the chain (speculative growth headroom)
+        are freed; hybrid archs snapshot the slot's SSM state into the
+        index so the resume point is exact."""
+        L = req.plen + max(len(req.out_tokens) - 1, 0)
+        keep = PC.pages_for_len(L, self.page_size)
+        pages = self.slot_pages[slot]
+        extra = pages[keep:]
+        kept = pages[:keep]
+        if extra:
+            self.alloc.free(extra)
+        chain = np.concatenate(
+            [req.prompt, np.asarray(req.out_tokens[:-1], np.int32)])
+        state = PC.extract_ssm_slot(self.cache, slot) if self._has_ssm \
+            else None
+        self.index.insert(chain, kept, state=state)
+        self._retain_pages(kept, tokens=L, priority=req.priority,
+                           tenant=req.tenant)
+
+    def _reclaim(self, short: int, protect: Sequence[int] = ()) -> bool:
+        """Free >= ``short`` device pages by preempting retained chains,
+        lowest priority class first, coldest first within a class. Each
+        chain's private pages either move to the host tier or are dropped
+        for re-prefill — ``swap_resume_cost`` decides. Returns whether the
+        shortfall was covered."""
+        if short <= 0:
+            return True
+        if not self._retained:
+            return False
+        prot = set(protect)
+        order = sorted(self._retained,
+                       key=lambda k: (self._retained[k].priority,
+                                      self._retained[k].step))
+        freed = 0
+        for key in order:
+            if freed >= short:
                 break
-            req = self.waiting[0]
-            hit = self._prefix_lookup(req)
-            # worst-case reservation charges only the uncached suffix: the
-            # shared full pages are already allocated and survive (via their
-            # refcount) until this stream releases them. A prefill-role
-            # scheduler reserves prompt pages only — generation pages are
-            # reserved by whichever decode scheduler adopts the stream.
-            need = PC.pages_for_len(
-                req.plen + 1 if self.role == "prefill"
-                else req.plen + req.max_new_tokens, self.page_size)
-            if hit is not None:
-                need -= len(hit.full_pages)
-            if self.alloc.num_free - (self.reserved_pages
-                                      - self.pages_in_use) < need:
-                self.stats["admit_blocked"] += 1
-                break                       # reservation would overcommit
-            self.waiting.popleft()
-            if self.prefill_budget is not None:
-                self._admit_chunked(req, free[0], need, hit)
-            else:
-                self._admit(req, free[0], need, hit)
+            if prot and not prot.isdisjoint(self._retained[key].pages):
+                continue                    # the admission's own hit chain
+            freed += self._evict_chain(key)
+        self._gauge_tiers()
+        return freed >= short
+
+    def _evict_chain(self, key: int) -> int:
+        """Preempt one retained chain; returns device pages freed.
+
+        Only *dying* pages (refcount 1, held solely by retention) carry
+        bytes to host — pages shared with live slots survive on device,
+        and the index entries that straddle the freed/survived boundary
+        are invalidated through the allocator's on_free hook. ``swap_chain``
+        runs before ``free`` so wholly-covered entries move buckets first
+        and never observe a half-swapped chain."""
+        ch = self._retained.pop(key)
+        dying = [p for p in ch.pages if self.alloc.ref(p) == 1]
+        if not dying:                       # fully shared: nothing to move
+            self.alloc.free(ch.pages)
+            return 0
+        store = False
+        if (self.host_tier is not None and self._swap_crossover is not None
+                and ch.tokens >= self._swap_crossover):
+            if not self.host_tier.can_hold(len(dying)):
+                self._host_reclaim(len(dying))
+            store = self.host_tier.can_hold(len(dying))
+        if store:
+            host = PC.swap_out_pages(self.cache, self.host_tier, dying,
+                                     tp=self.tp, owner=key)
+            mapping = {p: PC.as_host_page(h) for p, h in zip(dying, host)}
+            self.index.swap_chain(mapping)
+            self._host_chains[key] = _RetainedChain(
+                list(host), ch.tokens, ch.priority, ch.tenant, self.step_idx)
+            for h in host:
+                self._host_page_chain[h] = key
+            self.stats["swap_outs"] += 1
+            self.stats["swap_out_pages"] += len(dying)
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "swap_out", t=self._tnow(), replica=self.replica_id,
+                    pages=len(dying), chain_tokens=ch.tokens,
+                    bytes=PC.migration_bytes(self.cfg, len(dying),
+                                             self.page_size))
+        else:
+            # cost model (or a full host tier) says drop: a resume will
+            # re-prefill this chain from tokens instead of moving bytes
+            self.stats["swap_reprefills"] += 1
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "swap_out", t=self._tnow(), replica=self.replica_id,
+                    pages=0, chain_tokens=ch.tokens, decision="reprefill")
+        self.alloc.free(ch.pages)           # dying pages die; shared survive
+        self._gauge_tiers()
+        return len(dying)
+
+    def _host_reclaim(self, n: int) -> None:
+        """Drop the coldest host chains until ``n`` pages fit."""
+        order = sorted(self._host_chains,
+                       key=lambda k: (self._host_chains[k].priority,
+                                      self._host_chains[k].step))
+        for key in order:
+            if self.host_tier.can_hold(n):
+                return
+            self._drop_host_chain(key)
+
+    def _drop_host_chain(self, key: int) -> None:
+        ch = self._host_chains.pop(key)
+        for h in ch.pages:
+            self._host_page_chain.pop(h, None)
+        self.host_tier.free(ch.pages)       # on_free invalidates entries
+        self.stats["host_evictions"] += 1
+        self._gauge_tiers()
+
+    def _materialize_hit(self, req: Request, hit):
+        """Swap a host-resident hit chain back into device pages.
+
+        The *whole* owning chain is restored (not just the matched prefix)
+        so no host page is left orphaned when its index entries remap; the
+        restored pages re-enter the device tier as a fresh retained record
+        holding refcount 1, and the admission below shares them exactly
+        like any device-resident hit — refcount-clean, still preemptible.
+        """
+        if hit is None or self.host_tier is None:
+            return hit
+        tagged = [p for p in self._hit_pages(hit) if PC.is_host_page(p)]
+        if not tagged:
+            return hit
+        # the hit may touch one chain (full pages) plus possibly a second
+        # (tail page); restore every chain involved
+        keys = set()
+        for p in tagged:
+            key = self._host_page_chain.get(PC.host_page_id(p))
+            if key is None:     # orphaned entry (should not happen): miss
+                return None
+            keys.add(key)
+        mapping: Dict[int, int] = {}
+        for key in sorted(keys):
+            ch = self._host_chains.pop(key)
+            for h in ch.pages:
+                self._host_page_chain.pop(h, None)
+            dst = self.alloc.alloc(len(ch.pages), owner=("swapin", req.rid))
+            m = {PC.as_host_page(h): d for h, d in zip(ch.pages, dst)}
+            # remap entries to device ids *before* the swap-in frees the
+            # host pages — the on_free invalidation then finds nothing
+            # under the tagged ids and the chain is never half-swapped
+            self.index.swap_chain(m)
+            self.cache = PC.swap_in_pages(self.cache, self.host_tier,
+                                          ch.pages, dst, tp=self.tp)
+            mapping.update(m)
+            self._retain_pages(dst, tokens=ch.tokens, priority=ch.priority,
+                               tenant=ch.tenant)
+            self.stats["swap_ins"] += 1
+            self.stats["swap_in_pages"] += len(dst)
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "swap_in", rid=req.rid, t=self._tnow(),
+                    replica=self.replica_id, pages=len(dst),
+                    chain_tokens=ch.tokens,
+                    bytes=PC.migration_bytes(self.cfg, len(dst),
+                                             self.page_size))
+        hit.full_pages = [mapping.get(p, p) for p in hit.full_pages]
+        if hit.tail_len:
+            hit.tail_page = mapping.get(hit.tail_page, hit.tail_page)
+        req.swap_ins += 1
+        self.h_resume.observe(self.step_idx - req.arrival_step)
+        self._gauge_tiers()
+        return hit
+
+    def drop_tier_state(self) -> None:
+        """Forget both tiers' cold state (replica failure: the node's HBM
+        and host RAM die together). Retained device chains release their
+        refs, host rows are dropped, per-tenant ledgers reset."""
+        for key in list(self._retained):
+            ch = self._retained.pop(key)
+            self.alloc.free(ch.pages)
+        self._host_chains.clear()
+        self._host_page_chain.clear()
+        if self.host_tier is not None:
+            self.host_tier.clear()
+        self._tenant_reserved.clear()
+        self._gauge_tiers()
 
     def _prefix_lookup(self, req: Request):
         if not self.prefix_cache:
@@ -1260,6 +1645,9 @@ class ContinuousBatchingScheduler:
         row = np.full((self.n_pg,), PC.SINK_PAGE, np.int32)
         row[:len(pages)] = pages
         self.reserved_pages += need
+        if self.tenant_quotas is not None:
+            self._tenant_reserved[req.tenant] = (
+                self._tenant_reserved.get(req.tenant, 0) + need)
         self.block_table[slot] = row
         self.seq_lens[slot] = req.plen
         self.last_tokens[slot, 0] = int(req.out_tokens[-1])
@@ -1298,6 +1686,10 @@ class ContinuousBatchingScheduler:
         object itself lives on at the adopter; no finish is recorded."""
         req = self.slot_req[slot]
         self.alloc.free(self.slot_pages[slot])
+        if self.tenant_quotas is not None:
+            t = req.tenant
+            self._tenant_reserved[t] = max(
+                0, self._tenant_reserved.get(t, 0) - self.slot_reserve[slot])
         self.reserved_pages -= self.slot_reserve[slot]
         self.slot_reserve[slot] = 0
         self.slot_shared[slot] = 0
@@ -1325,7 +1717,18 @@ class ContinuousBatchingScheduler:
     def _finish(self, slot: int) -> None:
         req = self.slot_req[slot]
         req.finish_step = self.step_idx
-        self.alloc.free(self.slot_pages[slot])
+        if (self.host_tier is not None and self.prefix_cache
+                and not self.slot_parked[slot]
+                and req.prefill_pos is None):
+            # host tier on: retain the chain for session resume instead of
+            # freeing it — HBM pressure reclaims it later via _reclaim
+            self._retain_finished(slot, req)
+        else:
+            self.alloc.free(self.slot_pages[slot])
+        if self.tenant_quotas is not None:
+            t = req.tenant
+            self._tenant_reserved[t] = max(
+                0, self._tenant_reserved.get(t, 0) - self.slot_reserve[slot])
         self.reserved_pages -= self.slot_reserve[slot]
         self.slot_reserve[slot] = 0
         self.slot_shared[slot] = 0
@@ -1507,6 +1910,12 @@ class ContinuousBatchingScheduler:
                 self._grow_slots(max_slots)
             self.target_slots = max_slots
         if num_pages is not None:
+            # cold retained chains are reclaimable — preempt them to the
+            # host tier first so they never pin the pool against a shrink
+            floor = (self.alloc.num_allocated + self.reserved_pages
+                     - self.pages_in_use + 1)
+            if num_pages < floor and self._retained:
+                self._reclaim(floor - num_pages)
             # reservation-aware floor (+1 for the sink page): the pool must
             # cover every physically held page plus every outstanding
             # admission reservation's future growth
@@ -1565,6 +1974,14 @@ class ContinuousBatchingScheduler:
                     self._draft_cache, n)
                 del self._draft_ready[n:]
             self.max_slots = n
+        if self.alloc.shrink_pending and self._retained:
+            # retained chains holding pages above the shrink target would
+            # stall the drain forever — they are cold, so preempt them now
+            tgt = self.alloc._shrink_target
+            for key in [k for k, c in list(self._retained.items())
+                        if any(p >= tgt for p in c.pages)]:
+                self._evict_chain(key)
+            self._gauge_tiers()
         if self.alloc.shrink_ready():
             new_pages = self.alloc.complete_shrink()
             self.cache = PC.resize_cache_pages(self.cache, new_pages,

@@ -26,6 +26,16 @@ control plane while maintaining each shard's storage plane explicitly,
 and asserts after every step that per-shard free/allocated counts stay
 equal across shards and that an atomic COW (``copy_page`` copies every
 shard's slice in one call) leaves no shard holding stale page contents.
+
+``TieredPoolMachine`` adds the host-RAM page tier rule set (PR 10): one
+device ``PageAllocator`` + ``PrefixIndex`` and one ``HostPageTier``
+exchange whole page chains through the scheduler's swap order (store
+rows → ``swap_chain`` → free the source tier). Random interleavings of
+admit / share / swap-out / swap-in / drop check, after every step, that
+every live page is resident in exactly one tier, that a swap conserves
+refcounts, stored bytes, and each pool's free+allocated partition, and
+that no live prefix-index entry ever mixes device and host page ids —
+the index never points at a half-swapped chain.
 """
 import numpy as np
 import pytest
@@ -35,7 +45,9 @@ from hypothesis import settings, strategies as st
 from hypothesis.stateful import (RuleBasedStateMachine, invariant,
                                  precondition, rule)
 
-from repro.serving.paged_cache import (SINK_PAGE, PageAllocator, PrefixIndex,
+from repro.serving.paged_cache import (SINK_PAGE, HostPageTier, PageAllocator,
+                                       PrefixIndex, as_host_page,
+                                       host_page_id, is_host_page,
                                        pages_for_len)
 
 
@@ -472,3 +484,223 @@ TestMigrationProps = MigrationMachine.TestCase
 TestMigrationProps.settings = settings(max_examples=50,
                                        stateful_step_count=40,
                                        deadline=None)
+
+
+class TieredPoolMachine(RuleBasedStateMachine):
+    """Device tier + host-RAM tier under random swap traffic (PR 10).
+
+    Models the scheduler's preempt-to-host path with numpy stamp rows in
+    place of KV pool leaves: each device page carries a unique stamp, a
+    swap-out stores that stamp's row in the ``HostPageTier``, and a
+    swap-in must read the identical row back — the machine-level version
+    of the tier's byte-identity contract. Ordering mirrors
+    ``scheduler._evict_chain`` / ``_materialize_hit`` exactly:
+
+    * swap-out: store rows, then ``index.swap_chain`` (re-point entries
+      at ``HOST_BIT``-tagged ids), then free the device pages — so the
+      ``on_free`` invalidation sweep only kills entries that straddle
+      pages another chain still shares (those stayed device-resident);
+    * swap-in: alloc fresh device pages, ``swap_chain`` back, and only
+      then free the host rows — the host-side ``on_free`` hook must find
+      nothing left pointing at the tagged ids.
+
+    The invariants are the tier's safety contract: every live page is
+    resident in exactly one tier, both allocators' ledgers match the
+    chains that reach them, ``bytes_used`` tracks exactly the resident
+    rows, and no live index entry mixes tagged and untagged page ids.
+    """
+
+    PAGE = 4
+    POOL = 16
+    HOST = 12
+
+    def __init__(self):
+        super().__init__()
+        self.alloc = PageAllocator(self.POOL)
+        self.index = PrefixIndex(self.PAGE)
+        self.tier = HostPageTier(self.HOST)
+        self.alloc.on_free = self.index.invalidate_page
+        self.tier.alloc.on_free = (
+            lambda p: self.index.invalidate_page(as_host_page(p)))
+        # cid -> {"side", "pages", "prompt", "stamps"} (host side swaps
+        # "pages"/"stamps" for "host": host_id -> stamp)
+        self.chains = {}
+        self.refs = {}                     # device shadow ledger
+        self.cid = 0
+        self.stamp = 0
+
+    def _row(self, stamp):
+        return {"k": np.full((self.PAGE,), stamp, np.int32)}
+
+    # ------------------------------------------------------------- rules --
+    @rule(plen=st.integers(min_value=4, max_value=14))
+    def admit(self, plen):
+        n = pages_for_len(plen, self.PAGE)
+        if not self.alloc.can_alloc(n):
+            return
+        # distinct prompts per chain (same reasoning as MigrationMachine)
+        prompt = np.full((plen,), self.cid, np.int32)
+        prompt[::2] = np.arange(0, plen, 2, dtype=np.int32)
+        pages = self.alloc.alloc(n, owner=self.cid)
+        self.index.insert(prompt, pages)
+        stamps = {}
+        for p in pages:
+            self.stamp += 1
+            stamps[p] = self.stamp
+            self.refs[p] = self.refs.get(p, 0) + 1
+        self.chains[self.cid] = {"side": "device", "pages": pages,
+                                 "prompt": prompt, "stamps": stamps}
+        self.cid += 1
+
+    @precondition(lambda self: any(c["side"] == "device"
+                                   for c in self.chains.values()))
+    @rule(data=st.data())
+    def share_chain(self, data):
+        """A prefix hit: a second reader shares a *prefix* of a
+        device-resident chain, pinning those pages against swap-out
+        (ref > 1 pages never move) — so a later swap-out of the donor is
+        partial, and entries straddling moved/kept pages must die."""
+        donors = sorted(k for k, c in self.chains.items()
+                        if c["side"] == "device")
+        donor = self.chains[data.draw(st.sampled_from(donors),
+                                      label="donor")]
+        depth = data.draw(st.integers(min_value=1,
+                                      max_value=len(donor["pages"])),
+                          label="depth")
+        pages = list(donor["pages"][:depth])
+        self.alloc.share(pages)
+        for p in pages:
+            self.refs[p] += 1
+        self.chains[self.cid] = {"side": "device", "pages": pages,
+                                 "prompt": donor["prompt"][:depth * self.PAGE],
+                                 "stamps": {p: donor["stamps"][p]
+                                            for p in pages}}
+        self.cid += 1
+
+    @precondition(lambda self: any(c["side"] == "device"
+                                   for c in self.chains.values()))
+    @rule(data=st.data())
+    def swap_out(self, data):
+        """Preempt a device chain to host: only its last-reference pages
+        move (shared prefix pages stay device-resident with the sharer);
+        entries straddling moved and kept pages die via ``on_free``."""
+        cids = sorted(k for k, c in self.chains.items()
+                      if c["side"] == "device")
+        ch = self.chains[data.draw(st.sampled_from(cids), label="evict")]
+        dying = [p for p in ch["pages"] if self.alloc.ref(p) == 1]
+        if not dying or not self.tier.can_hold(len(dying)):
+            return
+        host = self.tier.alloc.alloc(len(dying))
+        for h, p in zip(host, dying):
+            self.tier.store(h, self._row(ch["stamps"][p]))
+        self.index.swap_chain({p: as_host_page(h)
+                               for p, h in zip(dying, host)})
+        self.alloc.free(ch["pages"])
+        for p in ch["pages"]:
+            self.refs[p] -= 1
+            if not self.refs[p]:
+                del self.refs[p]
+        ch["side"] = "host"
+        ch["host"] = {h: ch["stamps"][p] for p, h in zip(dying, host)}
+        ch["pages"], ch["stamps"] = [], {}
+
+    @precondition(lambda self: any(c["side"] == "host"
+                                   for c in self.chains.values()))
+    @rule(data=st.data())
+    def swap_in(self, data):
+        """Resume a host chain: rows must restore byte-exactly into fresh
+        device pages, and the index re-points before the rows are freed."""
+        cids = sorted(k for k, c in self.chains.items()
+                      if c["side"] == "host")
+        ch = self.chains[data.draw(st.sampled_from(cids), label="resume")]
+        host = sorted(ch["host"])
+        if not self.alloc.can_alloc(len(host)):
+            return
+        dst = self.alloc.alloc(len(host), owner="resume")
+        self.index.swap_chain({as_host_page(h): d
+                               for h, d in zip(host, dst)})
+        stamps = {}
+        for h, d in zip(host, dst):
+            want = ch["host"][h]
+            assert np.array_equal(self.tier.rows(h)["k"],
+                                  self._row(want)["k"]), \
+                "host tier lost row bytes across the swap"
+            stamps[d] = want
+        self.tier.free(host)
+        for d in dst:
+            self.refs[d] = 1
+        ch["side"], ch["pages"], ch["stamps"] = "device", list(dst), stamps
+        del ch["host"]
+
+    @precondition(lambda self: self.chains)
+    @rule(data=st.data())
+    def drop_chain(self, data):
+        """Finish (device side) or host-tier eviction (host side): the
+        chain's pages leave whichever tier holds them, exactly once."""
+        cid = data.draw(st.sampled_from(sorted(self.chains)), label="drop")
+        ch = self.chains.pop(cid)
+        if ch["side"] == "device":
+            self.alloc.free(ch["pages"])
+            for p in ch["pages"]:
+                self.refs[p] -= 1
+                if not self.refs[p]:
+                    del self.refs[p]
+        else:
+            self.tier.free(sorted(ch["host"]))
+
+    # -------------------------------------------------------- invariants --
+    @invariant()
+    def every_live_page_in_exactly_one_tier(self):
+        device, host = set(), set()
+        for c in self.chains.values():
+            if c["side"] == "device":
+                device.update(c["pages"])
+            else:
+                host.update(c["host"])
+        assert device == set(self.refs), \
+            "device ledger drifted from chain-reachable pages"
+        assert dict(self.alloc._ref) == self.refs, \
+            "device allocator refcounts drifted from the shadow ledger"
+        assert set(self.tier.alloc._ref) == host, \
+            "host tier holds pages no chain reaches (or lost live ones)"
+        assert self.tier.pages_used == len(host)
+
+    @invariant()
+    def swap_conserves_bytes(self):
+        per_row = self.PAGE * np.dtype(np.int32).itemsize
+        assert self.tier.bytes_used == per_row * self.tier.pages_used, \
+            "bytes_used drifted from resident rows"
+        assert set(self.tier._rows) == set(self.tier.alloc._ref), \
+            "host rows and host allocator disagree on residency"
+
+    @invariant()
+    def partition_covers_both_pools(self):
+        for name, a in (("device", self.alloc), ("host", self.tier.alloc)):
+            free, used = set(a._free), set(a._ref)
+            assert not (free & used), f"{name} page both free and used"
+            assert len(free) + len(used) == a.num_pages - 1, \
+                f"{name} pool partition leaked pages"
+            assert SINK_PAGE not in free and SINK_PAGE not in used
+
+    @invariant()
+    def index_never_half_swapped(self):
+        for entries in self.index._by_page.values():
+            for e in entries:
+                if e.dead:
+                    continue
+                tagged = {is_host_page(p) for p in e.pages}
+                assert len(tagged) == 1, \
+                    "live index entry mixes device and host page ids"
+                if tagged == {True}:
+                    assert all(self.tier.alloc.ref(host_page_id(p)) > 0
+                               for p in e.pages), \
+                        "index points at freed host rows"
+                else:
+                    assert all(self.alloc.ref(p) > 0 for p in e.pages), \
+                        "index points at freed device pages"
+
+
+TestTieredPoolProps = TieredPoolMachine.TestCase
+TestTieredPoolProps.settings = settings(max_examples=50,
+                                        stateful_step_count=40,
+                                        deadline=None)

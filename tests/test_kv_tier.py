@@ -1,0 +1,330 @@
+"""Host-RAM KV page tier: swap-out/swap-in byte identity (fp32, int8,
+fp8 pools), the recompute-vs-transfer cost model, session retention +
+preemption byte identity through the scheduler (dense and SSM archs),
+priority-class and tenant-quota admission, prefix-index LRU cap and
+whole-chain swap atomicity, tier teardown, and the blueprint plan's
+host-budget axis. See docs/serving.md ("Memory tiers & preemption")."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS, REDUCED
+from repro.core.blueprint import serving_page_plan
+from repro.models import model as M
+from repro.serving import paged_cache as PC
+from repro.serving.scheduler import ContinuousBatchingScheduler
+
+CFG = dataclasses.replace(REDUCED["qwen3-32b"], dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init(CFG, jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------------- swap primitives --
+
+def _randomized(cache, seed):
+    """Same pytree, every leaf filled with seeded noise in its own dtype —
+    arbitrary pool contents for the byte-preservation checks."""
+    rng = np.random.RandomState(seed)
+
+    def fill(leaf):
+        dt = np.dtype(leaf.dtype)
+        if dt.kind in "iu":
+            arr = rng.randint(-120, 120, size=leaf.shape).astype(dt)
+        else:
+            arr = rng.standard_normal(leaf.shape).astype(dt)
+        return jnp.asarray(arr)
+
+    return jax.tree_util.tree_map(fill, cache)
+
+
+def _page_rows(cache, page, tp=1):
+    """Every attention leaf's row for one physical page, keyed by path —
+    the unit of content the swap ops must move verbatim."""
+    rows = {}
+
+    def walk(node, stacked, path):
+        if PC._is_attn(node):
+            ax = PC.page_axis(stacked, tp)
+            lead = (slice(None),) * ax
+            for k in PC.PAGE_LEAVES:
+                if k in node:
+                    rows[path + k] = np.asarray(
+                        jax.device_get(node[k][lead + (page,)]))
+            return
+        if PC._is_ssm(node):
+            return
+        for k in node:
+            walk(node[k], stacked or k == "stack", path + k + "/")
+
+    walk(cache, False, "")
+    return rows
+
+
+def _bytes(a):
+    return np.ascontiguousarray(a).view(np.uint8).tobytes()
+
+
+@pytest.mark.parametrize("quant", [False, "int8", "fp8"])
+def test_swap_round_trip_byte_identity(quant):
+    """swap_out -> swap_in restores every pool leaf's page row bit-exactly
+    (quantised pools and their scale pages included), into *different*
+    device pages, and leaves the host tier empty."""
+    cfg = dataclasses.replace(CFG, cache_quant=quant)
+    cache = _randomized(PC.init_paged_cache(cfg, 8, 4, 2), seed=3)
+    tier = PC.HostPageTier(6)
+    src, dst = [2, 5, 3], [7, 1, 4]
+    want = {p: _page_rows(cache, p) for p in src}
+    host = PC.swap_out_pages(cache, tier, src)
+    assert len(host) == 3
+    assert tier.pages_used == 3 and tier.bytes_used > 0
+    cache = PC.swap_in_pages(cache, tier, host, dst)
+    assert tier.pages_used == 0 and tier.bytes_used == 0
+    for s, d in zip(src, dst):
+        got = _page_rows(cache, d)
+        assert set(got) == set(want[s])
+        for path in want[s]:
+            assert _bytes(got[path]) == _bytes(want[s][path]), (quant, path)
+
+
+def test_host_tier_residency_bit():
+    assert not PC.is_host_page(5)
+    h = PC.as_host_page(5)
+    assert PC.is_host_page(h) and PC.host_page_id(h) == 5
+    assert PC.as_host_page(h) == h
+
+
+# -------------------------------------------------------------- cost model --
+
+def test_swap_resume_cost_monotone_and_deterministic():
+    t1, r1 = PC.swap_resume_cost(CFG, 64, 8, 8)
+    t2, r2 = PC.swap_resume_cost(CFG, 128, 16, 8)
+    assert t2 > t1 and r2 > r1
+    assert (t1, r1) == PC.swap_resume_cost(CFG, 64, 8, 8)
+
+
+def test_swap_crossover_reduced_vs_full_dims():
+    """At REDUCED dims recompute undercuts PCIe at any length (crossover
+    None); at full-model dims transfer wins from the crossover on — and
+    the cost model agrees with its own crossover."""
+    assert PC.swap_crossover_tokens(CFG, 8) is None
+    full = ARCHS["qwen3-32b"]
+    x = PC.swap_crossover_tokens(full, 16)
+    assert x is not None and x >= 1
+    t, r = PC.swap_resume_cost(full, x, PC.pages_for_len(x, 16), 16)
+    assert t <= r
+
+
+# ------------------------------------------------- scheduler session flow --
+
+def _drive_sessions(sched, bases, turns, gen, seed):
+    """Multi-turn sessions: each turn resubmits transcript + fresh user
+    tokens after the previous turn fully drained (the idle gap)."""
+    rng = np.random.RandomState(seed)
+    prompts = [np.asarray(b, np.int32) for b in bases]
+    hist = [[] for _ in bases]
+    for _ in range(turns):
+        reqs = [sched.submit(p, gen) for p in prompts]
+        sched.run()
+        for i, r in enumerate(reqs):
+            hist[i].append(list(r.out_tokens))
+            ext = rng.randint(0, sched.cfg.vocab_size, size=4
+                              ).astype(np.int32)
+            prompts[i] = np.concatenate(
+                [prompts[i], np.asarray(r.out_tokens, np.int32), ext])
+    return hist
+
+
+def _session_bases(rng, vocab, lens):
+    return [rng.randint(0, vocab, size=n).astype(np.int32) for n in lens]
+
+
+@pytest.mark.parametrize("quant", [False, "int8"])
+def test_session_byte_identity_under_pressure(params, quant):
+    """Tier-on vs tier-off on the same tight pool: byte-identical tokens
+    while the cost model demonstrably takes both resume paths (long
+    chains swap to host, short ones re-prefill)."""
+    cfg = dataclasses.replace(CFG, cache_quant=quant)
+    kw = dict(max_slots=2, page_size=8, max_seq_len=128, num_pages=28,
+              prefix_cache=True)
+    off = ContinuousBatchingScheduler(cfg, params, **kw)
+    on = ContinuousBatchingScheduler(cfg, params, host_pages=64,
+                                     swap_crossover=40, **kw)
+    bases = _session_bases(np.random.RandomState(0), CFG.vocab_size,
+                           (12, 60, 20, 90))
+    h_off = _drive_sessions(off, bases, 2, 4, seed=7)
+    h_on = _drive_sessions(on, bases, 2, 4, seed=7)
+    assert h_on == h_off
+    assert on.stats["swap_outs"] > 0
+    assert on.stats["swap_ins"] > 0, "no chain ever swapped back in"
+    assert on.stats["swap_reprefills"] > 0, "no chain was ever re-prefilled"
+    assert on.alloc.num_pages == off.alloc.num_pages == 28
+    assert off.stats["swap_outs"] == off.stats["swap_ins"] == 0
+
+
+def test_session_resume_saves_prefill_work(params):
+    """The tier's dividend: turn-2 admissions prefix-hit the retained
+    chains, so cached tokens flow and resume latency is recorded."""
+    sched = ContinuousBatchingScheduler(
+        CFG, params, max_slots=2, page_size=8, max_seq_len=128,
+        num_pages=28, prefix_cache=True, host_pages=64, swap_crossover=40)
+    bases = _session_bases(np.random.RandomState(0), CFG.vocab_size,
+                           (12, 60, 20, 90))
+    _drive_sessions(sched, bases, 2, 4, seed=7)
+    assert sched.stats["prefix_hits"] > 0
+    assert sched.stats["cached_tokens"] > 0
+    if sched.stats["swap_ins"]:
+        assert sched.h_resume.count == sched.stats["swap_ins"]
+        assert sched.h_resume.quantile(99) < 64
+
+
+def test_ssm_session_byte_identity(params):
+    """Hybrid/SSM retention resumes from an exact-entry state snapshot;
+    tokens must match the tier-off run exactly."""
+    cfg = dataclasses.replace(REDUCED["mamba2-1.3b"], dtype="float32")
+    p = M.init(cfg, jax.random.PRNGKey(0))
+    kw = dict(max_slots=2, page_size=8, max_seq_len=96, num_pages=20,
+              prefix_cache=True)
+    off = ContinuousBatchingScheduler(cfg, p, **kw)
+    on = ContinuousBatchingScheduler(cfg, p, host_pages=48,
+                                     swap_crossover=32, **kw)
+    bases = _session_bases(np.random.RandomState(1), cfg.vocab_size,
+                           (10, 44, 52))
+    h_off = _drive_sessions(off, bases, 2, 4, seed=9)
+    h_on = _drive_sessions(on, bases, 2, 4, seed=9)
+    assert h_on == h_off
+    assert on.stats["swap_outs"] + on.stats["swap_reprefills"] > 0
+
+
+def test_drop_tier_state_clean(params):
+    """Replica failure forgets both tiers: allocator back to baseline,
+    host rows gone, gauges zeroed — nothing leaks."""
+    sched = ContinuousBatchingScheduler(
+        CFG, params, max_slots=2, page_size=8, max_seq_len=128,
+        num_pages=28, prefix_cache=True, host_pages=64, swap_crossover=40)
+    base_alloc = sched.alloc.num_allocated
+    bases = _session_bases(np.random.RandomState(0), CFG.vocab_size,
+                           (12, 60, 20, 90))
+    _drive_sessions(sched, bases, 2, 4, seed=7)
+    assert (sched.stats["retained_pages"] > 0
+            or sched.stats["host_pages_used"] > 0)
+    sched.drop_tier_state()
+    assert sched.alloc.num_allocated == base_alloc
+    assert sched.host_tier.pages_used == 0
+    assert sched.host_tier.bytes_used == 0
+    assert sched.stats["retained_pages"] == 0
+    assert sched.stats["host_pages_used"] == 0
+
+
+# --------------------------------------------------- priority and quotas --
+
+def test_priority_admission_order(params):
+    """Under slot contention the higher class goes first; equal classes
+    keep exact FCFS (the pre-tier admission order)."""
+    rng = np.random.RandomState(1)
+
+    def prompt():
+        return rng.randint(0, CFG.vocab_size, size=8).astype(np.int32)
+
+    sched = ContinuousBatchingScheduler(CFG, params, max_slots=1,
+                                        page_size=8, max_seq_len=64)
+    lo = sched.submit(prompt(), 4, priority=0)
+    hi = sched.submit(prompt(), 4, priority=3)
+    sched.run()
+    assert hi.finish_step < lo.finish_step
+
+    a = sched.submit(prompt(), 4)
+    b = sched.submit(prompt(), 4)
+    sched.run()
+    assert a.finish_step <= b.finish_step
+
+
+def test_tenant_quota_blocks_then_drains(params):
+    """A tenant at its page quota queues (quota_blocked counts it) but
+    drains as its own reservations release; other tenants are unaffected."""
+    sched = ContinuousBatchingScheduler(
+        CFG, params, max_slots=4, page_size=8, max_seq_len=64,
+        tenant_quotas={"free": 3})
+    rng = np.random.RandomState(2)
+    free = [sched.submit(rng.randint(0, CFG.vocab_size, size=16
+                                     ).astype(np.int32), 4, tenant="free")
+            for _ in range(3)]
+    pro = sched.submit(rng.randint(0, CFG.vocab_size, size=16
+                                   ).astype(np.int32), 4, tenant="pro")
+    sched.run()
+    assert all(len(r.out_tokens) == 4 for r in free + [pro])
+    assert sched.stats["quota_blocked"] > 0
+    assert sched._tenant_reserved.get("free", 0) == 0
+    # the unquota'd tenant was never held behind the free tier's queue
+    assert pro.finish_step <= max(r.finish_step for r in free)
+
+
+def test_submit_rejects_bad_priority(params):
+    sched = ContinuousBatchingScheduler(CFG, params, max_slots=1,
+                                        page_size=8, max_seq_len=64)
+    with pytest.raises(ValueError):
+        sched.submit(np.zeros(4, np.int32), 2, priority=-1)
+
+
+# -------------------------------------------------------- index residency --
+
+def test_prefix_index_exact_lru_cap():
+    idx = PC.PrefixIndex(4, max_exact=2)
+    alloc = PC.PageAllocator(32)
+    dropped = []
+    idx.on_evict = dropped.append
+    chains = []
+    for i in range(4):
+        prompt = (np.arange(8) + 100 * i).astype(np.int32)
+        idx.insert(prompt, alloc.alloc(2), state=("s", i))
+        chains.append(prompt)
+    assert idx.evictions == 2 and len(dropped) == 2
+    assert idx.lookup(chains[0], need_state=True) is None
+    hit = idx.lookup(chains[3], need_state=True)
+    assert hit is not None and hit.state == ("s", 3)
+
+
+def test_swap_chain_remaps_whole_chains_only():
+    """Entries move only when their entire chain is in the mapping — the
+    index never holds a half-swapped chain."""
+    idx = PC.PrefixIndex(4)
+    a = np.arange(8, dtype=np.int32)
+    b = np.arange(100, 112, dtype=np.int32)
+    idx.insert(a, [1, 2])
+    idx.insert(b, [5, 6, 7])
+    H = PC.as_host_page
+    assert idx.swap_chain({1: H(1), 2: H(2)}) == 2   # both boundaries of a
+    assert idx.lookup(a).full_pages == [H(1), H(2)]
+    assert idx.lookup(b).full_pages == [5, 6, 7]     # untouched
+    # partial mapping: only the 1-page chain moves, longer ones stay put
+    assert idx.swap_chain({5: H(5)}) == 1
+    assert idx.lookup(b).full_pages == [5, 6, 7]
+    # and back in, to fresh device ids
+    assert idx.swap_chain({H(1): 11, H(2): 12}) == 2
+    assert idx.lookup(a).full_pages == [11, 12]
+
+
+# -------------------------------------------------------------- blueprint --
+
+def test_serving_page_plan_host_axis():
+    cfg = ARCHS["qwen3-32b"]
+    shape = SHAPES["decode_32k"]
+    mesh = {"model": 8, "data": 4}
+    base = serving_page_plan(cfg, shape, mesh)
+    assert "host_tier" not in base
+    plan = serving_page_plan(cfg, shape, mesh, host_ram=64 << 30)
+    ht = plan["host_tier"]
+    tok = PC.page_bytes_per_token(cfg)
+    assert ht["host_ram_bytes"] == 64 << 30
+    assert ht["host_pages"] == (64 << 30) // (tok * plan["page_size"])
+    assert ht["max_open_sessions"] >= plan["max_concurrent_seqs"]
+    assert (ht["max_open_sessions"] - plan["max_concurrent_seqs"]
+            == ht["host_pages"] // plan["pages_per_seq"])
+    with pytest.raises(ValueError):
+        serving_page_plan(cfg, shape, mesh, host_ram=0)
